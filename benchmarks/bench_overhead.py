@@ -1,0 +1,35 @@
+"""Figure 4 (right): DynMo overhead breakdown — profiling, balancing
+algorithm, layer migration — as a fraction of end-to-end training time.
+Paper: single-digit percent across cases."""
+from __future__ import annotations
+
+from benchmarks.common import CASE_ARCH, sim_case
+
+
+def run(quick: bool = False):
+    iters = 2000 if quick else 10000
+    out = {}
+    for kind, arch in CASE_ARCH.items():
+        r = sim_case(kind, arch, "diffusion", "time", True,
+                     sample_every=200 if quick else 100, iters=iters)
+        tot = max(1e-12, r.total_time)
+        out[kind] = {
+            "profile": r.overhead_breakdown["profile"] / tot,
+            "algorithm": r.overhead_breakdown["algorithm"] / tot,
+            "migration": r.overhead_breakdown["migration"] / tot,
+            "total": r.overhead_frac,
+        }
+    return out
+
+
+def main(quick: bool = False):
+    res = run(quick)
+    print("name,us_per_call,derived")
+    for kind, d in res.items():
+        for part in ("profile", "algorithm", "migration", "total"):
+            print(f"overhead_{part}_{kind},0,{d[part]:.5f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Figure 4 (left): re-packing GPT layers onto fewer GPUs as gradual pruning
+shrinks the model — throughput/GPU and average GPU count over training."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.balancer import balance, stage_loads
+from repro.core.cost_model import cost_vector
+from repro.core.repack import repack_adjacent
+from repro.core.simulator import simulate_pipeline, stage_times_from_layers
+from repro.dynamics.config import DynamicsConfig
+from repro.dynamics.trajectories import make_trajectory
+
+DEPTHS = [24, 32, 40]
+
+
+def run(quick: bool = False):
+    rows = []
+    S, m, seq = 8, 32, 2048
+    dyncfg = DynamicsConfig(kind="pruning", prune_start_iter=3000,
+                            prune_end_iter=7000)
+    for depth in (DEPTHS[:2] if quick else DEPTHS):
+        mc = get_config(f"gpt-paper-{depth}l")
+        traj = make_trajectory("pruning", mc, dyncfg, total_iters=10000)
+        pbytes = cost_vector(mc, 2 * seq, seq, None, by="param") * 2
+        mem_budget = pbytes.sum() * 5.0 / S * 2.2   # per-worker capacity
+        gpus_used, thr = [], []
+        for k in range(0, 10000, 500):
+            states = traj(k)
+            t = cost_vector(mc, 2 * seq, seq, states, by="time")
+            mem = pbytes * 5.0 * np.array(
+                [max(0.25, s_.retained) for s_ in states])
+            lps = balance("partition", t, S,
+                          max_slots=depth).layers_per_stage
+            plan = repack_adjacent(stage_loads(mem, lps), lps, mem_budget)
+            lps = plan.layers_per_stage
+            active = [s for s in range(S) if plan.active_workers[s]]
+            f, b = stage_times_from_layers(t / 3, 2 * t / 3, lps)
+            r = simulate_pipeline(f, b, m)
+            gpus_used.append(plan.num_active)
+            thr.append(m * 2 * seq / r.makespan)
+        rows.append((depth, float(np.mean(gpus_used)),
+                     float(np.mean(thr)),
+                     float(np.mean(thr) / np.mean(gpus_used))))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    print("name,us_per_call,derived")
+    for depth, gpus, thr, tpg in rows:
+        print(f"repack_avg_gpus_{depth}l,0,{gpus:.2f}")
+        print(f"repack_throughput_per_gpu_{depth}l,0,{tpg:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

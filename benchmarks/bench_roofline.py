@@ -1,0 +1,70 @@
+"""Roofline aggregation: reads results/dryrun/*.json (produced by
+repro.launch.dryrun) and emits the per-(arch × shape × mesh) three-term
+table used by EXPERIMENTS.md §Roofline.  No compilation here."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def markdown_table(cells):
+    lines = ["| arch | shape | mesh | peak GiB/chip | fits | t_comp (s) | "
+             "t_mem HLO (s) | t_mem analytic (s) | t_coll (s) | bottleneck |"
+             " useful | MFU≤ |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | "
+                         f"— | — | — | — | — | SKIP | — | — |")
+            continue
+        if "error" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | "
+                         f"— | — | — | — | — | ERROR | — | — |")
+            continue
+        m = c["memory"]
+        r = c.get("roofline", {})
+        gib = m["peak_bytes_per_chip"] / 2 ** 30
+        if r:
+            tag = " (a)" if r.get("analytic") else ""
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | {gib:.2f} | "
+                f"{'Y' if m['fits_16GB'] else 'N'} | "
+                f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | "
+                f"{r.get('t_memory_analytic_s', 0):.4f} | "
+                f"{r['t_collective_s']:.4f} | {r['bottleneck']}{tag} | "
+                f"{r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.3f} |")
+        else:
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | {gib:.2f} | "
+                f"{'Y' if m['fits_16GB'] else 'N'} | — | — | — | — | "
+                f"(compile-only) | — | — |")
+    return "\n".join(lines)
+
+
+def main(quick: bool = False):
+    cells = load_cells()
+    print("name,us_per_call,derived")
+    done = sum(1 for c in cells if "roofline" in c)
+    compiled = sum(1 for c in cells if "memory" in c)
+    skipped = sum(1 for c in cells if "skipped" in c)
+    errors = sum(1 for c in cells if "error" in c)
+    print(f"roofline_cells_with_terms,0,{done}")
+    print(f"roofline_cells_compiled,0,{compiled}")
+    print(f"roofline_cells_skipped,0,{skipped}")
+    print(f"roofline_cells_errors,0,{errors}")
+    return cells
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_cells()))

@@ -1,0 +1,114 @@
+"""Figure 3: end-to-end training throughput for the six dynamic-model cases
+across 6 balancers (2 static, 4 DynMo).  Speedup convention follows the
+paper: best(DynMo param/time) / best(static Megatron-uniform, DeepSpeed-param)
+— except sparse_attention and early_exit, whose paper baseline is the model
+WITHOUT the dynamism (dense attention / no exits).
+
+Paper headline bands: MoE 1.23×, pruning 3.18×, freezing 2.23×, sparse
+attention 4.02×, early exit 4.52×, MoD 1.17×.  `--bubbles` also reports the
+bubble-ratio reductions (MoE 25→8%, MoD 18→4%).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import BALANCERS, CASE_ARCH, CASE_SETUP, sim_case
+
+PAPER_SPEEDUPS = {
+    "moe": 1.23, "pruning": 3.18, "freezing": 2.23,
+    "sparse_attention": 4.02, "early_exit": 4.52, "mod": 1.17,
+}
+# static Megatron/DeepSpeed cannot exploit the dynamism: no CSR kernels for
+# pruning, no backward-skip for freezing, dense attention, no early exits —
+# exactly the paper's baselines (MoE/MoD dynamism is inherent to the model,
+# so those baselines run it)
+BASELINE_WITHOUT_DYNAMISM = {"sparse_attention", "early_exit", "pruning",
+                             "freezing"}
+
+
+def run(quick: bool = False) -> Dict:
+    iters = 2000 if quick else 10000
+    sample = 200 if quick else 100
+    out: Dict = {}
+    for kind, arch in CASE_ARCH.items():
+        rows = {}
+        for label, method, cost_by, rebalance in BALANCERS:
+            dynamism_on = not (label in ("megatron-uniform",
+                                         "deepspeed-param")
+                               and kind in BASELINE_WITHOUT_DYNAMISM)
+            r = sim_case(kind, arch, method, cost_by, rebalance,
+                         dynamism_on=dynamism_on, sample_every=sample,
+                         iters=iters)
+            rows[label] = r
+        static_best = max(rows["megatron-uniform"].throughput,
+                          rows["deepspeed-param"].throughput)
+        dynmo_best = max(rows[l].throughput for l in
+                         ("partition:param", "partition:time",
+                          "diffusion:param", "diffusion:time"))
+        out[kind] = {
+            "rows": {l: r.throughput for l, r in rows.items()},
+            "speedup": dynmo_best / static_best,
+            "steady_speedup": _steady_state_speedup(kind, arch, iters),
+            "paper": PAPER_SPEEDUPS[kind],
+            "overhead_frac": rows["diffusion:time"].overhead_frac,
+            "bubble_static": rows["megatron-uniform"].avg_bubble,
+            "bubble_dynmo": rows["diffusion:time"].avg_bubble,
+        }
+    return out
+
+
+def _steady_state_speedup(kind: str, arch: str, iters: int) -> float:
+    """Makespan ratio at developed dynamism (k = 0.9·iters): static baseline
+    (without-dynamism convention where applicable) vs DynMo-balanced —
+    the regime the paper's headline numbers describe."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.balancer import balance, partition_balance
+    from repro.core.cost_model import cost_vector
+    from repro.core.simulator import (simulate_pipeline,
+                                      stage_times_from_layers)
+    from repro.dynamics.config import DynamicsConfig
+    from repro.dynamics.trajectories import make_trajectory
+    mc = get_config(arch)
+    setup = CASE_SETUP[kind]
+    S, seq = setup["stages"], setup.get("seq", 2048)
+    m = 4 * S
+    dyncfg = DynamicsConfig(kind=kind, prune_start_iter=int(0.3 * iters),
+                            prune_end_iter=int(0.7 * iters),
+                            prune_frequency=max(1, iters // 10))
+    k = int(0.9 * iters)
+    traj = make_trajectory(kind, mc, dyncfg, total_iters=iters)
+    t_dyn = cost_vector(mc, 2 * seq, seq, traj(k), by="time")
+    base_on = kind not in BASELINE_WITHOUT_DYNAMISM
+    t_base = t_dyn if base_on else cost_vector(mc, 2 * seq, seq, None,
+                                               by="time")
+    L = mc.total_blocks()
+    slots = max(2, (L + S - 1) // S + 4)
+    lps_s = balance("uniform", t_base, S).layers_per_stage
+    lps_d = partition_balance(t_dyn, S, max_slots=slots).layers_per_stage
+    r_s = simulate_pipeline(*stage_times_from_layers(t_base / 3,
+                                                     2 * t_base / 3, lps_s),
+                            m)
+    r_d = simulate_pipeline(*stage_times_from_layers(t_dyn / 3,
+                                                     2 * t_dyn / 3, lps_d),
+                            m)
+    return r_s.makespan / r_d.makespan
+
+
+def main(quick: bool = False):
+    res = run(quick)
+    print("name,us_per_call,derived")
+    for kind, d in res.items():
+        print(f"throughput_speedup_{kind},0,{d['speedup']:.3f}")
+        print(f"throughput_steady_speedup_{kind},0,"
+              f"{d['steady_speedup']:.3f}")
+        print(f"throughput_paper_{kind},0,{d['paper']:.3f}")
+        print(f"overhead_frac_{kind},0,{d['overhead_frac']:.4f}")
+        print(f"bubble_static_{kind},0,{d['bubble_static']:.4f}")
+        print(f"bubble_dynmo_{kind},0,{d['bubble_dynmo']:.4f}")
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,91 @@
+"""Shared benchmark scaffolding: paper-scale simulator setups."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cost_model import cost_vector
+from repro.core.simulator import TrainSimConfig, simulate_training
+from repro.dynamics.config import DynamicsConfig
+from repro.dynamics.trajectories import make_trajectory
+
+# Paper §5: MoE/MoD on 128 GPUs (8 DP × 16 PP); pruning/freezing/sparse/EE
+# on 720 GPUs (30 DP × 24 PP); 4 microbatches per GPU.  Sparse attention is
+# evaluated at long sequence (its source technique targets long sequences;
+# at 2k attention is <20% of layer FLOPs and no scheme could reach the
+# paper's 4× — see EXPERIMENTS.md discussion).
+CASE_SETUP = {
+    "moe": dict(stages=16, dp=8, seq=2048),
+    "mod": dict(stages=16, dp=8, seq=2048),
+    "pruning": dict(stages=24, dp=30, seq=2048),
+    "freezing": dict(stages=24, dp=30, seq=2048),
+    "sparse_attention": dict(stages=24, dp=30, seq=16384),
+    "early_exit": dict(stages=24, dp=30, seq=2048),
+}
+SEQ = 2048
+ITERS = 10000
+
+
+def sim_case(kind: str, arch: str, balancer: str, cost_by: str,
+             rebalance: bool, dynamism_on: bool = True,
+             repack: bool = False, sample_every: int = 100,
+             iters: int = ITERS):
+    """One end-to-end training simulation; returns TrainSimResult."""
+    mc = get_config(arch)
+    setup = CASE_SETUP[kind]
+    S = setup["stages"]
+    seq = setup.get("seq", SEQ)
+    m = 4 * S                       # 4 microbatches per GPU (paper)
+    tokens_iter = m * 2 * seq       # micro-batch size 2 (paper)
+    # dynamism window scaled to the simulated horizon (paper: pruning
+    # 3000..7000 of 10000 iters)
+    dyncfg = DynamicsConfig(kind=kind,
+                            prune_start_iter=int(0.3 * iters),
+                            prune_end_iter=int(0.7 * iters),
+                            prune_frequency=max(1, iters // 10))
+    traj = make_trajectory(kind if dynamism_on else "none", mc, dyncfg,
+                           total_iters=iters)
+    tokens_per_micro = 2 * seq
+
+    def layer_time_fn(k):
+        t = cost_vector(mc, tokens_per_micro, seq, traj(k), by="time")
+        return t / 3.0, 2.0 * t / 3.0
+
+    pbytes = cost_vector(mc, tokens_per_micro, seq, None, by="param") * 2
+    L = mc.total_blocks()
+    # paper §3.3.1: per-iteration for MoE/MoD; every ~50 for freezing;
+    # 100s for the content-dependent cases; 1000s for pruning
+    reb_freq = {"moe": 1, "mod": 1, "freezing": 50,
+                "sparse_attention": 100, "early_exit": 100,
+                "pruning": 1000}[kind]
+    cfg = TrainSimConfig(
+        num_stages=S, num_micro=m, tokens_per_iter=tokens_iter,
+        iters=iters, sample_every=sample_every,
+        rebalance_every=reb_freq if rebalance else 0,
+        balancer=balancer, cost_by=cost_by, schedule="1f1b",
+        max_slots=max(2, (L + S - 1) // S + 4),
+        repack=repack, repack_max_mem=pbytes.sum() * 5.0 / S * 1.6,
+        layer_mem=pbytes * 5.0)
+    return simulate_training(layer_time_fn, pbytes, cfg)
+
+
+CASE_ARCH = {
+    "moe": "mixtral-8x7b",
+    "mod": "gpt-paper-32l",
+    "pruning": "gpt-paper-32l",
+    "freezing": "gpt-paper-40l",
+    "sparse_attention": "gpt-paper-32l",
+    "early_exit": "gpt-paper-32l",
+}
+
+BALANCERS = [
+    ("megatron-uniform", "uniform", "param", False),
+    ("deepspeed-param", "dsparam", "param", False),
+    ("partition:param", "partition", "param", True),
+    ("partition:time", "partition", "time", True),
+    ("diffusion:param", "diffusion", "param", True),
+    ("diffusion:time", "diffusion", "time", True),
+]

@@ -1,0 +1,40 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  python -m benchmarks.run [--quick] [--only idleness,throughput,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced iteration counts (CI mode)")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_idleness, bench_kernels, bench_overhead,
+                            bench_repack, bench_roofline, bench_throughput)
+    benches = {
+        "idleness": bench_idleness.main,        # Fig. 1
+        "throughput": bench_throughput.main,    # Fig. 3 (+ bubble ratios)
+        "repack": bench_repack.main,            # Fig. 4 left
+        "overhead": bench_overhead.main,        # Fig. 4 right
+        "kernels": bench_kernels.main,          # §4.2.2 / §4.2.4
+        "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
+    }
+    names = (args.only.split(",") if args.only else list(benches))
+    for name in names:
+        t0 = time.perf_counter()
+        print(f"### bench:{name}")
+        benches[name](quick=args.quick)
+        print(f"### bench:{name} done in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: train a small GPT with DynMo on a simulated 4-stage pipeline.
+
+Runs on CPU with fake devices:
+    PYTHONPATH=src python examples/quickstart.py [--steps 30]
+
+What you see: a tiny GPT training over the pipeline; every 10 steps the DynMo
+controller profiles the per-slot stats, and when dynamism (here: gradual
+block pruning) skews per-layer cost it migrates layers between stages —
+without recompiling the training step.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--dynamism", default="pruning",
+                    choices=["none", "pruning", "freezing", "early_exit",
+                             "mod", "sparse_attention"])
+    ap.add_argument("--balancer", default="diffusion",
+                    choices=["diffusion", "partition"])
+    args = ap.parse_args()
+
+    from repro.launch.train import run_training
+    out = run_training(
+        "smollm-360m", steps=args.steps, stages=4, layers=8, d_model=128,
+        seq=64, num_micro=4, mb_global=4, dynamism=args.dynamism,
+        balancer=args.balancer, rebalance_every=10, log_every=5)
+    print(f"\nloss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+          f"({args.steps} steps, {out['wall_s']:.1f}s)")
+    print(f"final layers-per-stage: {out['final_lps']}")
+    print(f"rebalance events: {len(out['events'])}")
+    for ev in out["events"]:
+        print(f"  iter {ev.iteration}: imbalance "
+              f"{ev.imbalance_before:.3f} -> {ev.imbalance_after:.3f}, "
+              f"moved {ev.moved_layers} layers in {ev.decision_s*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

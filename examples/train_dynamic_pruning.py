@@ -1,0 +1,122 @@
+"""End-to-end driver: train a ~100M-param GPT for a few hundred steps with
+gradual global block pruning (paper §3.2.1, Eq. 3) + DynMo rebalancing +
+re-packing + checkpointing.
+
+    PYTHONPATH=src python examples/train_dynamic_pruning.py          # ~30M
+    PYTHONPATH=src python examples/train_dynamic_pruning.py --big    # ~100M
+
+The pruning schedule compresses the paper's 3000..7000-iteration window into
+this run's horizon; watch ff_mask density fall and the balancer shift layers
+toward the stages holding less-pruned layers.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params (slower on CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.core.controller import ControllerConfig, DynMoController
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.data.loader import DataConfig, make_loader
+    from repro.dynamics import pruning as prn
+    from repro.dynamics.config import DynamicsConfig
+    from repro.dynamics.trajectories import zhu_gupta_sparsity
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import make_train_step
+    from repro.models import model as M
+    from repro.optim.schedule import cosine_schedule
+    from repro.pipeline.pipeline import PipelineShapes
+
+    if args.big:
+        cfg = reduced_config(get_config("smollm-360m"), num_layers=12,
+                             d_model=512, num_heads=8, num_kv_heads=4,
+                             d_ff=2048, vocab_size=4096)
+    else:
+        cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                             d_model=256, num_heads=8, num_kv_heads=4,
+                             d_ff=1024, vocab_size=2048)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.total_blocks()} blocks")
+
+    stages, micro, mbg, seq = 4, 4, 4, 128
+    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig(kind="pruning", prune_start_iter=0,
+                            prune_end_iter=args.steps * 10,
+                            prune_frequency=1)
+    mesh = make_host_mesh(data=1, model=stages)
+    shapes = PipelineShapes(micro, mbg, seq)
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg, dcfg)
+    assignment = M.make_assignment(cfg, dcfg)
+    dyn = M.init_dyn(cfg, dcfg, dyncfg)
+    init_opt, train_step = make_train_step(cfg, dcfg, dyncfg, mesh, shapes)
+    opt = init_opt(params)
+    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+
+    ctrl = DynMoController(
+        cfg, dcfg, dyncfg,
+        ControllerConfig(method="diffusion", cost_by="time",
+                         rebalance_every=20, repack=True,
+                         repack_max_mem=float("inf"), repack_target=2))
+    ckdir = tempfile.mkdtemp(prefix="dynmo_ck_")
+    ckpt = CheckpointManager(ckdir, every=max(20, args.steps // 4))
+    loader = make_loader(cfg, DataConfig(micro, mbg, seq))
+    tokens_step = micro * mbg * seq
+
+    with mesh:
+        for step, batch in enumerate(loader):
+            if step >= args.steps:
+                break
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = cosine_schedule(jnp.float32(step), args.steps, 3e-4, 20)
+            params, opt, loss, stats, gnorm = step_jit(
+                params, opt, assignment, dyn, batch, lr)
+
+            # gradual pruning every 20 steps (Zhu–Gupta, Eq. 3)
+            if step and step % 20 == 0:
+                sp = zhu_gupta_sparsity(step * 10, dyncfg)
+                keep = prn.target_keep_blocks(cfg, cfg.total_blocks(), sp)
+                dyn = dict(dyn)
+                dyn["ff_mask"] = prn.global_block_prune(
+                    cfg, params["stages"], assignment["tags"], keep)
+                dens = float(jnp.mean(dyn["ff_mask"]))
+                print(f"  [prune] target sparsity {sp:.2f}; "
+                      f"kept blocks density {dens:.2f}")
+
+            stats_np = jax.tree.map(np.asarray, stats)
+            params, opt, dyn, new_assignment, _, ev = ctrl.step(
+                step + 1, stats_np, np.asarray(assignment["tags"]),
+                micro, tokens_step, seq, params, opt, dyn)
+            if new_assignment is not None:
+                assignment = new_assignment
+                print(f"  [dynmo] rebalanced -> {ctrl.lps} "
+                      f"(imb {ev.imbalance_before:.2f} -> "
+                      f"{ev.imbalance_after:.2f}, active workers "
+                      f"{ev.active_workers})")
+            ckpt.maybe_save(step, params, opt, dyn, ctrl.lps)
+            if step % 20 == 0:
+                print(f"step {step:4d} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.2f}")
+    print(f"done. checkpoints at {ckdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Inject the generated roofline table into EXPERIMENTS.md.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.bench_roofline import load_cells, markdown_table  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    cells = load_cells()
+    table = markdown_table(cells)
+    path = os.path.join(REPO, "EXPERIMENTS.md")
+    with open(path) as fh:
+        text = fh.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        head, tail = text.split(marker, 1)
+        # drop the previous generated table (up to the next section marker)
+        tail_rest = re.split(r"\n## ", tail, 1)
+        rest = ("\n## " + tail_rest[1]) if len(tail_rest) > 1 else ""
+        text = head + marker + "\n\n" + table + "\n" + rest
+    with open(path, "w") as fh:
+        fh.write(text)
+    n = sum(1 for c in cells if "roofline" in c or "skipped" in c
+            or "memory" in c)
+    print(f"updated EXPERIMENTS.md with {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
+                                         save_checkpoint)
+from repro.checkpoint.elastic import elastic_restore
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "elastic_restore"]

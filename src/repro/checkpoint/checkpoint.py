@@ -1,0 +1,160 @@
+"""Fault-tolerant checkpointing.
+
+Layout: one .npz shard per pipeline stage (stage-sharded state restores in
+parallel and re-shards trivially on elastic restarts) + a msgpack metadata
+index with step, layers-per-stage, configs, and integrity checksums.
+Writes are atomic (tmp + rename); the manager keeps the last K checkpoints
+and can always fall back to the newest complete one (torn writes are
+detected via the index checksum).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree.structure(template), leaves)
+
+
+def save_checkpoint(path: str, step: int, params, opt_state, dyn,
+                    layers_per_stage: Sequence[int],
+                    extra_meta: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic save; returns the checkpoint directory."""
+    ckdir = os.path.join(path, f"step_{step:08d}")
+    tmp = ckdir + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    state = {"params": params, "opt": opt_state, "dyn": dyn}
+    flat = _flatten_with_paths(state)
+    # stage-sharded leaves (leading dim == num stages) go into per-stage
+    # shards; the rest into a common shard
+    S = len(layers_per_stage)
+    common, per_stage = {}, [dict() for _ in range(S)]
+    for k, v in flat.items():
+        if v.ndim >= 1 and v.shape[0] == S and ("stages" in k or "dyn" in k
+                                                or k.startswith("opt")):
+            for s in range(S):
+                per_stage[s][k] = v[s]
+        else:
+            common[k] = v
+    np.savez(os.path.join(tmp, "common.npz"), **common)
+    for s in range(S):
+        np.savez(os.path.join(tmp, f"stage_{s:03d}.npz"), **per_stage[s])
+    index = {
+        "step": step,
+        "layers_per_stage": list(map(int, layers_per_stage)),
+        "num_stages": S,
+        "files": ["common.npz"] + [f"stage_{s:03d}.npz" for s in range(S)],
+        "meta": extra_meta or {},
+    }
+    digest = {}
+    for f in index["files"]:
+        with open(os.path.join(tmp, f), "rb") as fh:
+            digest[f] = hashlib.sha256(fh.read()).hexdigest()
+    index["sha256"] = digest
+    with open(os.path.join(tmp, "index.msgpack"), "wb") as fh:
+        fh.write(msgpack.packb(index))
+    if os.path.exists(ckdir):
+        shutil.rmtree(ckdir)
+    os.rename(tmp, ckdir)
+    return ckdir
+
+
+def _verify(ckdir: str) -> Optional[Dict[str, Any]]:
+    ipath = os.path.join(ckdir, "index.msgpack")
+    if not os.path.exists(ipath):
+        return None
+    with open(ipath, "rb") as fh:
+        index = msgpack.unpackb(fh.read(), strict_map_key=False)
+    for f, want in index["sha256"].items():
+        fp = os.path.join(ckdir, f)
+        if not os.path.exists(fp):
+            return None
+        with open(fp, "rb") as fh:
+            if hashlib.sha256(fh.read()).hexdigest() != want:
+                return None
+    return index
+
+
+def load_checkpoint(path: str, templates: Tuple[Any, Any, Any],
+                    step: Optional[int] = None):
+    """Load (params, opt_state, dyn) matching the given templates.
+
+    Falls back to the newest *complete* checkpoint when ``step`` is None or
+    the requested one is torn."""
+    cands = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    if step is not None:
+        cands = [d for d in cands if d == f"step_{step:08d}"] or cands
+    for d in reversed(cands):
+        ckdir = os.path.join(path, d)
+        index = _verify(ckdir)
+        if index is None:
+            continue
+        flat = {}
+        with np.load(os.path.join(ckdir, "common.npz")) as z:
+            flat.update({k: z[k] for k in z.files})
+        S = index["num_stages"]
+        staged: Dict[str, List[np.ndarray]] = {}
+        for s in range(S):
+            with np.load(os.path.join(ckdir, f"stage_{s:03d}.npz")) as z:
+                for k in z.files:
+                    staged.setdefault(k, [None] * S)[s] = z[k]
+        for k, parts in staged.items():
+            flat[k] = np.stack(parts)
+        state_t = {"params": templates[0], "opt": templates[1],
+                   "dyn": templates[2]}
+        state = _unflatten_like(state_t, flat)
+        return (state["params"], state["opt"], state["dyn"], index)
+    raise FileNotFoundError(f"no complete checkpoint under {path}")
+
+
+class CheckpointManager:
+    def __init__(self, path: str, keep: int = 3, every: int = 100):
+        self.path, self.keep, self.every = path, keep, every
+        os.makedirs(path, exist_ok=True)
+
+    def maybe_save(self, step: int, params, opt_state, dyn,
+                   layers_per_stage, extra_meta=None) -> Optional[str]:
+        if step % self.every:
+            return None
+        out = save_checkpoint(self.path, step, params, opt_state, dyn,
+                              layers_per_stage, extra_meta)
+        self._gc()
+        return out
+
+    def _gc(self):
+        cands = sorted(d for d in os.listdir(self.path)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in cands[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)
+
+    def restore(self, templates, step=None):
+        return load_checkpoint(self.path, templates, step)

@@ -1,0 +1,82 @@
+"""Elastic restart (paper §3.4.2): re-packing coordinated with checkpointing.
+
+Restoring onto a *different* stage count rebuilds the slot buffers: the
+checkpoint's (layers-per-stage, stacked state) is flattened to global layer
+order and re-split contiguously for the new mesh — "the model is reloaded
+and re-shared among the workers during checkpoint recovery, so there is no
+additional overhead for resharding" (paper).  Works for both shrink
+(re-pack, released workers) and grow (recovered workers).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DistConfig, ModelConfig
+from repro.models.model import make_assignment, uniform_boundaries
+
+
+def _resplit_stage_tree(tree, old_lps: Sequence[int],
+                        new_lps: Sequence[int], new_L_max: int):
+    """Re-split [S_old, L_old, ...] stacked arrays to [S_new, L_new, ...]
+    along global layer order."""
+    old_lps = list(map(int, old_lps))
+    new_lps = list(map(int, new_lps))
+    assert sum(old_lps) == sum(new_lps)
+
+    def one(a):
+        a = np.asarray(a)
+        S_old, L_old = a.shape[0], a.shape[1]
+        layers = []
+        for s, n in enumerate(old_lps):
+            for l in range(n):
+                layers.append(a[s, l])
+        out = np.zeros((len(new_lps), new_L_max) + a.shape[2:], a.dtype)
+        g = 0
+        for s, n in enumerate(new_lps):
+            for l in range(n):
+                out[s, l] = layers[g]
+                g += 1
+        return jnp.asarray(out)
+
+    return jax.tree.map(one, tree)
+
+
+def elastic_restore(cfg: ModelConfig, old_dcfg: DistConfig,
+                    new_dcfg: DistConfig, params, opt_state, dyn,
+                    old_lps: Sequence[int],
+                    new_lps: Optional[Sequence[int]] = None):
+    """Reshape checkpointed state from old stage layout to the new mesh.
+
+    Returns (params, opt_state, dyn, assignment, new_lps)."""
+    if new_lps is None:
+        new_lps = uniform_boundaries(cfg.total_blocks(), new_dcfg.num_stages)
+    L_new = new_dcfg.slots_for(cfg)
+    params = dict(params)
+    params["stages"] = _resplit_stage_tree(params["stages"], old_lps,
+                                           new_lps, L_new)
+    if opt_state is not None:
+        opt_state = _reshape_opt(opt_state, old_lps, new_lps, L_new)
+    dyn = _resplit_stage_tree(dyn, old_lps, new_lps, L_new)
+    assignment = make_assignment(cfg, new_dcfg, new_lps)
+    return params, opt_state, dyn, assignment, list(new_lps)
+
+
+def _reshape_opt(opt_state, old_lps, new_lps, L_new):
+    """Optimizer moments mirror the param tree: reshape the stages subtree,
+    keep everything else (count, non-stage moments)."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "stages":
+                    out[k] = _resplit_stage_tree(v, old_lps, new_lps, L_new)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+    return walk(opt_state)

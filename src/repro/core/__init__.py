@@ -1,0 +1,21 @@
+"""DynMo core: the paper's primary contribution — profiling, the two
+provably-converging load balancers, layer migration, workload re-packing, the
+discrete-event pipeline simulator, and the autonomous controller."""
+from repro.core.balancer import (BalanceResult, balance, diffusion_balance,
+                                 imbalance, partition_balance, stage_loads)
+from repro.core.controller import (ControllerConfig, ControllerEvent,
+                                   DynMoController)
+from repro.core.migration import MigrationPlan, apply_plan, build_plan, migrate
+from repro.core.repack import RepackPlan, repack_adjacent, repack_first_fit
+from repro.core.simulator import (SimResult, TrainSimConfig, TrainSimResult,
+                                  simulate_pipeline, simulate_training,
+                                  stage_times_from_layers)
+
+__all__ = [
+    "BalanceResult", "balance", "diffusion_balance", "imbalance",
+    "partition_balance", "stage_loads", "ControllerConfig", "ControllerEvent",
+    "DynMoController", "MigrationPlan", "apply_plan", "build_plan", "migrate",
+    "RepackPlan", "repack_adjacent", "repack_first_fit", "SimResult",
+    "TrainSimConfig", "TrainSimResult", "simulate_pipeline",
+    "simulate_training", "stage_times_from_layers",
+]

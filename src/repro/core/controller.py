@@ -1,0 +1,133 @@
+"""DynMo controller — the autonomous loop of Fig. 2:
+
+  (2) dynamism alters the model → (3) profile → (4) balance (+ optionally
+  re-pack) → (5) migrate & continue.
+
+The controller is transparent to the training loop: it consumes the per-slot
+stats that every train_step already emits, decides on a host-side plan, and
+applies one jitted migration.  Invoked every ``rebalance_every`` iterations
+(per-iteration for MoE/MoD, thousands for pruning — paper §3.3.1); rebalance
+is black-box w.r.t. the dynamism scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import DistConfig, ModelConfig
+from repro.core import balancer as bal
+from repro.core import migration as mig
+from repro.core import repack as rp
+from repro.core.profiler import LayerProfile, profile_from_stats
+from repro.dynamics.config import DynamicsConfig
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    method: str = "diffusion"        # partition | diffusion
+    cost_by: str = "time"            # time | param
+    rebalance_every: int = 1
+    imbalance_threshold: float = 0.05  # skip rebalance below this ΔL
+    repack: bool = False
+    repack_max_mem: float = float("inf")
+    repack_target: int = 1
+    mem_cap: float = float("inf")
+
+
+@dataclasses.dataclass
+class ControllerEvent:
+    iteration: int
+    imbalance_before: float
+    imbalance_after: float
+    moved_layers: int
+    active_workers: int
+    decision_s: float
+    rebalanced: bool
+
+
+class DynMoController:
+    """Stateful controller owning the current assignment."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DistConfig,
+                 dyncfg: DynamicsConfig, ccfg: ControllerConfig,
+                 layers_per_stage: Optional[Sequence[int]] = None):
+        self.cfg, self.dcfg, self.dyncfg, self.ccfg = cfg, dcfg, dyncfg, ccfg
+        from repro.models.model import uniform_boundaries
+        self.lps: List[int] = list(
+            layers_per_stage
+            or uniform_boundaries(cfg.total_blocks(), dcfg.num_stages))
+        self.pattern = cfg.block_pattern()
+        self.events: List[ControllerEvent] = []
+        self.active_workers = dcfg.num_stages
+
+    # -- decision ----------------------------------------------------------
+    def decide(self, profile: LayerProfile, iteration: int
+               ) -> Tuple[Optional[List[int]], ControllerEvent]:
+        t0 = time.perf_counter()
+        costs = (profile.time_per_layer if self.ccfg.cost_by == "time"
+                 else profile.param_bytes)
+        loads = bal.stage_loads(costs, self.lps)
+        imb_before = bal.imbalance(loads)
+        new_lps: Optional[List[int]] = None
+        imb_after = imb_before
+        if imb_before > self.ccfg.imbalance_threshold:
+            res = bal.balance(
+                self.ccfg.method, costs, self.dcfg.num_stages,
+                max_slots=self.dcfg.slots_for(self.cfg),
+                mem=profile.param_bytes * 5.0, mem_cap=self.ccfg.mem_cap,
+                init=self.lps if self.ccfg.method == "diffusion" else None)
+            if res.imbalance < imb_before - 1e-9:
+                new_lps = res.layers_per_stage
+                imb_after = res.imbalance
+        if new_lps is not None and self.ccfg.repack:
+            mem_stage = bal.stage_loads(profile.param_bytes * 5.0, new_lps)
+            plan = rp.repack_adjacent(mem_stage, new_lps,
+                                      self.ccfg.repack_max_mem,
+                                      self.ccfg.repack_target,
+                                      max_layers=self.dcfg.slots_for(
+                                          self.cfg))
+            new_lps = plan.layers_per_stage
+            self.active_workers = plan.num_active
+        moved = 0
+        if new_lps is not None:
+            moved = mig.build_plan(self.lps, new_lps,
+                                   self.dcfg.slots_for(self.cfg)).moved_layers
+        ev = ControllerEvent(
+            iteration=iteration, imbalance_before=imb_before,
+            imbalance_after=imb_after, moved_layers=moved,
+            active_workers=self.active_workers,
+            decision_s=time.perf_counter() - t0,
+            rebalanced=new_lps is not None)
+        self.events.append(ev)
+        return new_lps, ev
+
+    # -- application -------------------------------------------------------
+    def apply(self, new_lps: Sequence[int], params: Dict[str, Any],
+              opt_state: Any, dyn: Dict[str, Any], cache: Any = None):
+        """Migrate stage-keyed state to the new split; returns updated
+        (params, opt_state, dyn, assignment, cache)."""
+        stages, nopt, ndyn, assignment, ncache, plan = mig.migrate(
+            params["stages"], opt_state, dyn, self.lps, new_lps,
+            self.pattern, self.dcfg.slots_for(self.cfg), cache)
+        self.lps = list(new_lps)
+        params = dict(params)
+        params["stages"] = stages
+        return params, nopt, ndyn, assignment, ncache
+
+    def step(self, iteration: int, stats: Dict[str, np.ndarray],
+             tags: np.ndarray, num_micro: int, tokens: int, seq: int,
+             params, opt_state, dyn, cache=None, frozen=None):
+        """Full controller step: profile → decide → (maybe) migrate."""
+        if iteration % max(1, self.ccfg.rebalance_every):
+            return params, opt_state, dyn, None, cache, None
+        profile = profile_from_stats(self.cfg, stats, tags, num_micro,
+                                     tokens, seq, frozen=frozen)
+        new_lps, ev = self.decide(profile, iteration)
+        if new_lps is None:
+            return params, opt_state, dyn, None, cache, ev
+        params, opt_state, dyn, assignment, cache = self.apply(
+            new_lps, params, opt_state, dyn, cache)
+        return params, opt_state, dyn, assignment, cache, ev

@@ -1,0 +1,126 @@
+"""Layer migration between pipeline stages (paper §4.1, TPU-native).
+
+A rebalance produces a new contiguous layers-per-stage split.  Because stage
+state lives in statically-shaped slot buffers ``[S, L_max, ...]`` sharded
+over the ``model`` axis, migration is a *gather along the stage axis* with a
+host-computed (dst ← src) index map — XLA lowers it to collective-permute /
+all-to-all between the affected stages.  **No recompilation**: the new
+assignment arrays are ordinary inputs.
+
+The same plan moves weights, optimizer moments, dynamism state, and (when
+serving) the KV cache — everything keyed on [S, L_max, ...] leading dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BLOCK_PAD
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    src_stage: np.ndarray     # int32 [S, L_max]
+    src_slot: np.ndarray      # int32 [S, L_max]
+    valid: np.ndarray         # bool  [S, L_max] (False = dst slot is PAD)
+    moved_layers: int         # how many layers change stage
+    moved_bytes_per_layer_hint: int = 0
+
+    def as_jnp(self):
+        return (jnp.asarray(self.src_stage), jnp.asarray(self.src_slot),
+                jnp.asarray(self.valid))
+
+
+def build_plan(old_lps: Sequence[int], new_lps: Sequence[int],
+               L_max: int) -> MigrationPlan:
+    """Map each destination slot to its source slot under contiguous splits.
+
+    Global layer g lives at (stage, slot) = locate(lps, g); plan[dst] = src.
+    """
+    total_old, total_new = sum(old_lps), sum(new_lps)
+    assert total_old == total_new, (total_old, total_new)
+    S = len(new_lps)
+    assert max(new_lps) <= L_max, "destination split exceeds slot capacity"
+
+    def locate(lps):
+        out = []
+        for s, n in enumerate(lps):
+            for l in range(n):
+                out.append((s, l))
+        return out
+
+    src_of_global = locate(old_lps)
+    dst_of_global = locate(new_lps)
+    src_stage = np.zeros((S, L_max), np.int32)
+    src_slot = np.zeros((S, L_max), np.int32)
+    valid = np.zeros((S, L_max), bool)
+    moved = 0
+    for g, (ds, dl) in enumerate(dst_of_global):
+        ss, sl = src_of_global[g]
+        src_stage[ds, dl] = ss
+        src_slot[ds, dl] = sl
+        valid[ds, dl] = True
+        if ss != ds:
+            moved += 1
+    return MigrationPlan(src_stage, src_slot, valid, moved)
+
+
+def apply_plan(tree: Any, plan: MigrationPlan) -> Any:
+    """Gather [S, L_max, ...] arrays to the new layout.  Invalid (PAD)
+    destination slots keep zeros (their tags mark them inactive)."""
+    ss, sl, valid = plan.as_jnp()
+
+    def gather(a):
+        out = a[ss, sl]                      # [S, L_max, ...]
+        mask = valid.reshape(valid.shape + (1,) * (out.ndim - 2))
+        return jnp.where(mask, out, jnp.zeros_like(out))
+
+    return jax.tree.map(gather, tree)
+
+
+def _apply_plan_to_opt(opt_state: Any, plan: MigrationPlan) -> Any:
+    """Optimizer state mirrors the param tree; only its ``stages`` subtrees
+    are stage-keyed — everything else (step count, embed/head moments) stays
+    put."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (apply_plan(v, plan) if k == "stages" else walk(v))
+                    for k, v in node.items()}
+        return node
+    return walk(opt_state)
+
+
+def migrate(params_stages: Dict[str, jax.Array], opt_stages: Any,
+            dyn: Dict[str, jax.Array], old_lps: Sequence[int],
+            new_lps: Sequence[int], tags_pattern: Sequence[int],
+            L_max: int, cache: Any = None):
+    """One-call migration of all stage-keyed state + fresh assignment arrays.
+
+    Returns (params_stages, opt_stages, dyn, assignment, cache, plan)."""
+    from repro.models.model import make_assignment  # avoid cycle
+    plan = build_plan(old_lps, new_lps, L_max)
+    new_params = apply_plan(params_stages, plan)
+    new_opt = (_apply_plan_to_opt(opt_stages, plan)
+               if opt_stages is not None else None)
+    new_dyn = apply_plan(dyn, plan)
+    new_cache = apply_plan(cache, plan) if cache is not None else None
+    # assignment arrays rebuilt host-side from the pattern + new split
+    S = len(new_lps)
+    tags = np.full((S, L_max), BLOCK_PAD, np.int32)
+    g = 0
+    for s, n in enumerate(new_lps):
+        for l in range(n):
+            tags[s, l] = tags_pattern[g]
+            g += 1
+    lps = np.asarray(new_lps, np.int64)
+    assignment = {
+        "tags": jnp.asarray(tags),
+        "num_active": jnp.asarray(lps, jnp.int32),
+        "depth_base": jnp.asarray(
+            np.concatenate([[0], np.cumsum(lps)[:-1]]), jnp.int32),
+    }
+    return new_params, new_opt, new_dyn, assignment, new_cache, plan

@@ -1,0 +1,83 @@
+"""DynMo profiler (paper §3.1 step 3): after each dynamism event, one
+iteration measures per-layer execution time and per-worker memory.
+
+Sources, in decreasing fidelity:
+  * measured   — wall-clock timing of per-stage execution on the host
+                 backend (integration runs / single-node);
+  * stats      — the pipeline's per-slot stats outputs (expert loads, ff
+                 retention, attention density, token fractions) folded
+                 through the analytic cost model;
+  * analytic   — pure cost model from the dynamism state (dry-run scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import BLOCK_PAD, ModelConfig
+from repro.core.cost_model import LayerDynState, cost_vector
+
+
+@dataclasses.dataclass
+class LayerProfile:
+    """Per-global-layer profile in execution order."""
+    time_per_layer: np.ndarray      # seconds (fwd+bwd)
+    param_bytes: np.ndarray         # bytes
+    mem_per_stage: np.ndarray       # bytes resident per stage
+    dyn_states: List[LayerDynState]
+
+
+def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
+                       tags: np.ndarray, num_micro: int, tokens: int,
+                       seq: int, dyn_ff: Optional[np.ndarray] = None,
+                       frozen: Optional[np.ndarray] = None) -> LayerProfile:
+    """Fold the pipeline's per-slot stats [S, L_max, ...] into per-layer
+    DynStates + cost-model times, in global layer order."""
+    S, L_max = tags.shape
+    states: List[LayerDynState] = []
+    order: List[int] = []
+    expert = stats.get("expert_load")
+    dens = stats.get("attn_density")
+    ffa = stats.get("ff_active")
+    for s in range(S):
+        for l in range(L_max):
+            if tags[s, l] == BLOCK_PAD:
+                continue
+            ds = LayerDynState()
+            if ffa is not None and np.ndim(ffa) >= 2:
+                v = float(ffa[s, l]) / max(1, num_micro)
+                ds.retained = float(np.clip(v, 0.02, 1.0))
+            if dens is not None and np.ndim(dens) >= 2:
+                v = float(dens[s, l]) / max(1, num_micro)
+                ds.attn_density = float(np.clip(v, 0.02, 1.0))
+            if expert is not None and cfg.num_experts:
+                e = np.asarray(expert[s, l], dtype=np.float64)
+                mean = e.mean() if e.mean() > 0 else 1.0
+                ds.expert_hot = float(np.clip(e.max() / mean, 1.0, 4.0))
+            if frozen is not None:
+                ds.frozen = bool(frozen[s, l] > 0)
+            states.append(ds)
+            order.append(tags[s, l])
+    times = cost_vector(cfg, tokens, seq, states, by="time")
+    params = cost_vector(cfg, tokens, seq, states, by="param") * 2.0  # bytes
+    mem = np.zeros(S)
+    i = 0
+    for s in range(S):
+        n = int(np.sum(tags[s] != BLOCK_PAD))
+        mem[s] = params[i:i + n].sum() * 5.0    # weights + grads + 2 moments
+        i += n
+    return LayerProfile(times, params, mem, states)
+
+
+def measure_stage_times(step_fn: Callable[[], None], repeats: int = 3
+                        ) -> float:
+    """Wall-clock one pipeline step (host backend); used to calibrate the
+    cost model's overhead constant on real integration runs."""
+    step_fn()                        # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        step_fn()
+    return (time.perf_counter() - t0) / repeats

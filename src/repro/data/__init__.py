@@ -1,0 +1,6 @@
+from repro.data.loader import DataConfig, make_loader
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.synthetic import synthetic_corpus, zipf_token_stream
+
+__all__ = ["DataConfig", "make_loader", "ByteTokenizer", "synthetic_corpus",
+           "zipf_token_stream"]

@@ -1,0 +1,3 @@
+from repro.dynamics.config import DynamicsConfig
+
+__all__ = ["DynamicsConfig"]

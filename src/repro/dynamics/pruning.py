@@ -1,0 +1,95 @@
+"""Gradual global magnitude pruning (paper §3.2.1, Algorithm 1) — TPU-native.
+
+Adaptation (DESIGN.md §3): element-wise CSR pruning does not accelerate the
+MXU, so we prune *feature blocks* of width 128 (the MXU tile) from the FFN
+up-projections.  Algorithm 1's local-topk → gather → global-topk → scatter
+becomes an exact global top-k over block magnitude scores computed on the
+stage-sharded stacked weights — XLA SPMD partitions the reduction, which is
+the collective-equivalent of the paper's NCCL gather/scatter (and exact,
+whereas Alg. 1's two-level topk is exact too).
+
+The resulting ``ff_mask`` [S, L_max, n_blocks] is the runtime dyn input; the
+``pruned_matmul`` Pallas kernel (and the masked XLA fallback) skip dead
+blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (BLOCK_DEC, BLOCK_DENSE, BLOCK_ENC,
+                                BLOCK_MLSTM, BLOCK_PAD, ModelConfig)
+from repro.models.blocks import PRUNE_BLOCK, n_prune_blocks
+
+
+def block_magnitudes(cfg: ModelConfig, stage_params: Dict[str, jax.Array]
+                     ) -> jax.Array:
+    """L2 magnitude per prunable feature block: [S, L_max, n_blocks].
+
+    Dense/enc/dec archs: blocks of d_ff columns of (wi, wg) + rows of wo;
+    mLSTM: blocks of the up-projection columns."""
+    npb = n_prune_blocks(cfg)
+
+    def score(*mats_cols):
+        # mats_cols: arrays [S, L, d, F] (column-blocked) or [S, L, F, d]
+        tot = None
+        for m, axis in mats_cols:
+            S, L = m.shape[0], m.shape[1]
+            if axis == "col":
+                F = m.shape[3]
+                v = jnp.sum(jnp.square(m.astype(jnp.float32)).reshape(
+                    S, L, m.shape[2], npb, F // npb), axis=(2, 4))
+            else:
+                F = m.shape[2]
+                v = jnp.sum(jnp.square(m.astype(jnp.float32)).reshape(
+                    S, L, npb, F // npb, m.shape[3]), axis=(3, 4))
+            tot = v if tot is None else tot + v
+        return jnp.sqrt(tot)
+
+    if "wi" in stage_params:        # dense
+        return score((stage_params["wi"], "col"), (stage_params["wg"], "col"),
+                     (stage_params["wof"], "row"))
+    if "e_w1" in stage_params and "wi" not in stage_params:
+        s = score((stage_params["e_w1"], "col"), (stage_params["e_w2"], "row"))
+        if "d_w1" in stage_params:
+            s = s + score((stage_params["d_w1"], "col"),
+                          (stage_params["d_w2"], "row"))
+        return s
+    if "x_up" in stage_params:      # mLSTM up-projection
+        return score((stage_params["x_up"], "col"))
+    if "ewi" in stage_params:       # MoE experts: score summed over experts
+        S, L, E, d, F = stage_params["ewi"].shape
+        wi = stage_params["ewi"].astype(jnp.float32)
+        wg = stage_params["ewg"].astype(jnp.float32)
+        v = (jnp.sum(jnp.square(wi).reshape(S, L, E, d, npb, F // npb),
+                     axis=(2, 3, 5))
+             + jnp.sum(jnp.square(wg).reshape(S, L, E, d, npb, F // npb),
+                       axis=(2, 3, 5)))
+        return jnp.sqrt(v)
+    raise ValueError("no prunable parameters found")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "keep_blocks"))
+def global_block_prune(cfg: ModelConfig, stage_params, tags, keep_blocks: int
+                       ) -> jax.Array:
+    """Exact global top-k over block magnitudes → ff_mask [S, L_max, npb].
+
+    PAD slots are excluded (−inf) and always masked."""
+    mag = block_magnitudes(cfg, stage_params)          # [S, L, npb]
+    active = (tags != BLOCK_PAD)[..., None]
+    mag = jnp.where(active, mag, -jnp.inf)
+    flat = mag.reshape(-1)
+    k = min(keep_blocks, flat.shape[0])
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    mask = (mag >= thresh) & active & jnp.isfinite(mag)
+    return mask.astype(jnp.float32)
+
+
+def target_keep_blocks(cfg: ModelConfig, num_active_layers: int,
+                       sparsity: float) -> int:
+    npb = n_prune_blocks(cfg)
+    total = num_active_layers * npb
+    return max(num_active_layers, int(round(total * (1.0 - sparsity))))

@@ -1,0 +1,5 @@
+from repro.kernels.block_sparse_attention.ops import block_sparse_attention
+from repro.kernels.block_sparse_attention.ref import (
+    block_sparse_attention_ref)
+
+__all__ = ["block_sparse_attention", "block_sparse_attention_ref"]

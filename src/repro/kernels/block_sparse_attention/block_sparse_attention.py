@@ -1,0 +1,111 @@
+"""Hash-based block-sparse FlashAttention — Pallas TPU kernel.
+
+TPU adaptation of the paper's dynamic sparse flash attention (§4.2.4): the
+hash-derived block mask gates whole (q-block × kv-block) tiles; masked tiles
+skip the MXU work via pl.when (the grid slot still iterates, but no DMA
+compute is issued — on TPU the saved time is the tile's matmul+softmax).
+
+Tiling: grid = (batch·heads, q_blocks, kv_blocks), kv innermost so the
+online-softmax accumulator lives in VMEM scratch across the kv sweep.
+Block shapes default to (128, 128) — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            nkb: int, sm_scale: float, causal: bool, block_q: int,
+            block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    active = mask_ref[0, 0, 0] > 0
+    if causal:
+        # whole block above the diagonal band is dead regardless of the mask
+        reachable = ki * block_k <= qi * block_q + (block_q - 1)
+        active = jnp.logical_and(active, reachable)
+
+    @pl.when(active)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # [bq, d]
+        k = k_ref[0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # [bq, bk]
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkb - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        # fully-masked rows (l == 0) emit zeros
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def block_sparse_attention_p(q, k, v, block_mask, *, causal: bool = True,
+                             block_q: int = 128, block_k: int = 128,
+                             sm_scale: float | None = None,
+                             interpret: bool = False):
+    """q: [BH, sq, d]; k, v: [BH, sk, d]; block_mask: [BH, nqb, nkb] int32.
+
+    Shapes must be pre-padded to block multiples (ops.py handles that)."""
+    BH, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    nqb, nkb = sq // block_q, sk // block_k
+    assert block_mask.shape == (BH, nqb, nkb), block_mask.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, nkb=nkb, sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nqb, nkb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, qi, ki: (b, qi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, block_mask)

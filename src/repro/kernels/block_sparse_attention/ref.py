@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the block-sparse flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def block_sparse_attention_ref(q, k, v, block_mask, *, causal: bool = True,
+                               block_q: int = 128, block_k: int = 128,
+                               sm_scale=None):
+    """q: [BH, sq, d]; k, v: [BH, sk, d]; block_mask: [BH, nqb, nkb].
+
+    Exact dense computation of the kernel's semantics: scores masked at
+    block granularity (+ token-level causal), softmax with fully-masked-row
+    guard."""
+    BH, sq, d = q.shape
+    sk = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    mask = jnp.repeat(jnp.repeat(block_mask, block_q, axis=1), block_k,
+                      axis=2)[:, :sq, :sk] > 0
+    if causal:
+        mask &= (jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :])[None]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)
+    out = jnp.where(l > 0, out, 0.0)
+    return out.astype(q.dtype)

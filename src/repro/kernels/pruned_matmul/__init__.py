@@ -1,0 +1,7 @@
+from repro.kernels.pruned_matmul.ops import (pruned_matmul,
+                                             pruned_swiglu)
+from repro.kernels.pruned_matmul.ref import (pruned_matmul_ref,
+                                             pruned_swiglu_ref)
+
+__all__ = ["pruned_matmul", "pruned_swiglu", "pruned_matmul_ref",
+           "pruned_swiglu_ref"]

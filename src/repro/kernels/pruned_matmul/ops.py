@@ -1,0 +1,62 @@
+"""jit'd wrappers: padding + reshaping around the pruned matmul kernel, and
+the fused block-pruned SwiGLU built from the two mask positions."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pruned_matmul.pruned_matmul import pruned_matmul_p
+
+
+@functools.partial(jax.jit, static_argnames=("mask_axis", "bm", "bn", "bk",
+                                             "interpret"))
+def pruned_matmul(x, w, block_mask, *, mask_axis: str = "n", bm: int = 128,
+                  bn: int = 128, bk: int = 128, interpret: bool = False):
+    """x: [..., K] @ w: [K, N] with block mask; pads M/K/N to block
+    multiples.  block_mask granularity must match (N//bn or K//bk of the
+    *unpadded* shapes, which must already be block-multiples for the masked
+    axis)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    pm = (-M) % bm
+    if pm:
+        x2 = jnp.pad(x2, ((0, pm), (0, 0)))
+    # the MASKED dim must be an exact multiple of its block (the mask
+    # defines the granularity); the other dims are zero-padded freely
+    if mask_axis == "n":
+        assert N % bn == 0, ("masked dim must be a block multiple", N, bn)
+        pk = (-K) % bk
+        if pk:
+            x2 = jnp.pad(x2, ((0, 0), (0, pk)))
+            w = jnp.pad(w, ((0, pk), (0, 0)))
+        out = pruned_matmul_p(x2, w, block_mask, mask_axis="n", bm=bm,
+                              bn=bn, bk=bk, interpret=interpret)
+    else:
+        assert K % bk == 0, ("masked dim must be a block multiple", K, bk)
+        pn = (-N) % bn
+        if pn:
+            w = jnp.pad(w, ((0, 0), (0, pn)))
+        out = pruned_matmul_p(x2, w, block_mask, mask_axis="k", bm=bm,
+                              bn=bn, bk=bk, interpret=interpret)
+        out = out[:, :N]
+    return out[:M, :N].reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def pruned_swiglu(x, wi, wg, wo, block_mask, *, bf: int = 128,
+                  interpret: bool = False):
+    """Block-pruned SwiGLU MLP: up-projections mask output blocks ('n'),
+    the down-projection skips the same blocks as reduction blocks ('k') —
+    both matmuls genuinely skip the pruned tiles."""
+    a = pruned_matmul(x, wg, block_mask, mask_axis="n", bn=bf,
+                      interpret=interpret)
+    b = pruned_matmul(x, wi, block_mask, mask_axis="n", bn=bf,
+                      interpret=interpret)
+    h = jax.nn.silu(a.astype(jnp.float32)) * b.astype(jnp.float32)
+    return pruned_matmul(h.astype(x.dtype), wo, block_mask, mask_axis="k",
+                         bk=bf, interpret=interpret)

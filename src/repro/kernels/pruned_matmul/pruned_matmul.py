@@ -1,0 +1,95 @@
+"""Block-structured pruned matmul — Pallas TPU kernel.
+
+TPU adaptation of Sputnik-style sparse matmul (paper §4.2.2): unstructured
+CSR cannot accelerate the MXU's dense 128×128 tiles, so pruning removes
+feature *blocks* (width = MXU tile) and the kernel skips dead blocks with
+pl.when — zero DMA, zero MXU work for pruned tiles, which is where the
+paper's per-layer compute reduction (p_i^(k)·c_i, §2.2) physically comes
+from on TPU.
+
+Two mask positions:
+  * mask over N (output-feature blocks): pruned output columns are zeros —
+    used for the FFN up-projection x@W1;
+  * mask over K (reduction blocks): pruned rows skip accumulation — used for
+    the down-projection h@W2 (h's pruned columns are dead anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_mask_n(x_ref, w_ref, mask_ref, o_ref, acc_ref, *, nkb: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[0] > 0)
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nkb - 1)
+    def _finish():
+        o_ref[...] = jnp.where(mask_ref[0] > 0,
+                               acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def _kernel_mask_k(x_ref, w_ref, mask_ref, o_ref, acc_ref, *, nkb: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[0] > 0)
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nkb - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pruned_matmul_p(x, w, block_mask, *, mask_axis: str = "n",
+                    bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """x: [M, K] @ w: [K, N] with a 0/1 block mask.
+
+    mask_axis='n': block_mask [N // bn]; pruned output-column blocks skipped.
+    mask_axis='k': block_mask [K // bk]; pruned reduction blocks skipped.
+    Shapes must be multiples of the block sizes (ops.py pads)."""
+    M, K = x.shape
+    _, N = w.shape
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N)
+    nkb = K // bk
+    if mask_axis == "n":
+        assert block_mask.shape == (N // bn,), block_mask.shape
+        kernel = functools.partial(_kernel_mask_n, nkb=nkb)
+        mask_spec = pl.BlockSpec((1,), lambda i, j, k_: (j,))
+    else:
+        assert block_mask.shape == (nkb,), block_mask.shape
+        kernel = functools.partial(_kernel_mask_k, nkb=nkb)
+        mask_spec = pl.BlockSpec((1,), lambda i, j, k_: (k_,))
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nkb),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k_: (i, k_)),
+            pl.BlockSpec((bk, bn), lambda i, j, k_: (k_, j)),
+            mask_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, block_mask.astype(jnp.int32))

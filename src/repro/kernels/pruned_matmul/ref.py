@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the pruned matmul kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pruned_matmul_ref(x, w, block_mask, *, mask_axis: str = "n",
+                      bn: int = 128, bk: int = 128):
+    """Exact dense semantics of the kernel (fp32 accumulation)."""
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if mask_axis == "n":
+        m = jnp.repeat(block_mask.astype(jnp.float32), bn)
+        out = (xf @ wf) * m[None, :]
+    else:
+        m = jnp.repeat(block_mask.astype(jnp.float32), bk)
+        out = (xf * m[None, :]) @ wf
+    return out.astype(x.dtype)
+
+
+def pruned_swiglu_ref(x, wi, wg, wo, block_mask, *, bf: int = 128):
+    """Block-pruned SwiGLU: mask over d_ff blocks."""
+    m = jnp.repeat(block_mask.astype(jnp.float32), bf)
+    h = jax.nn.silu(x.astype(jnp.float32) @ wg.astype(jnp.float32))
+    h = h * (x.astype(jnp.float32) @ wi.astype(jnp.float32))
+    h = h * m[None, :]
+    return (h @ wo.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture × input shape ×
+mesh) cell on placeholder devices and extract memory / cost / roofline terms.
+
+The two lines above MUST precede any other import (jax locks the device count
+on first init).  Do not import this module from processes that need 1 device.
+
+Per cell:
+  1. full-scale scan-based compile    → memory_analysis (fits?), raw
+     cost_analysis, HLO collective census;
+  2. (single-pod, --probes) two unrolled probe compiles (num_micro = 1, 2)
+     → exact per-tick FLOPs / bytes / collective bytes, extrapolated to the
+     real schedule length (XLA counts loop bodies once — DESIGN.md §5);
+  3. roofline terms + MODEL_FLOPS ratio → JSON under results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --probes
+  python -m repro.launch.dryrun --all [--multi-pod] [--probes]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, list_configs
+from repro.launch import roofline as RL
+from repro.launch.mesh import dp_degree, make_production_mesh
+from repro.launch.specs import arch_dist_config, cell_skip_reason, input_specs
+from repro.launch.train import make_train_step
+from repro.optim.optimizers import OptConfig
+from repro.pipeline.pipeline import (build_decode_fn, build_loss_fn,
+                                     build_prefill_fn)
+
+ARCHS = [
+    "mixtral-8x7b", "mixtral-8x22b", "llama3-405b", "command-r-plus-104b",
+    "smollm-360m", "deepseek-coder-33b", "internvl2-26b", "zamba2-1.2b",
+    "xlstm-1.3b", "whisper-large-v3",
+]
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _build_step(cell, mesh):
+    cfg, dcfg, dyncfg, shapes = cell.cfg, cell.dcfg, cell.dyncfg, cell.shapes
+    if cell.kind == "train":
+        _, step = make_train_step(cfg, dcfg, dyncfg, mesh, shapes,
+                                  OptConfig(name=dcfg.optimizer))
+        return jax.jit(step, donate_argnums=(0, 1))
+    if cell.kind == "prefill":
+        fn = build_prefill_fn(cfg, dcfg, dyncfg, mesh, shapes)
+        return jax.jit(fn, donate_argnums=(3,))
+    fn = build_decode_fn(cfg, dcfg, dyncfg, mesh, shapes)
+    return jax.jit(fn, donate_argnums=(3,))
+
+
+def _compile(cell, mesh):
+    step = _build_step(cell, mesh)
+    t0 = time.time()
+    lowered = step.lower(*cell.args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, t1 - t0, t2 - t1
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             probes: bool = False, verbose: bool = True,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    skip = cell_skip_reason(
+        __import__("repro.configs", fromlist=["get_config"]
+                   ).get_config(arch), shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+    }
+    if skip:
+        out["skipped"] = skip
+        return out
+
+    dcfg = arch_dist_config(arch, shape_name)
+    if overrides:
+        dcfg = dataclasses.replace(dcfg, **overrides)
+        out["overrides"] = dict(overrides)
+    cell = input_specs(arch, shape_name, mesh, dcfg=dcfg)
+    shapes = cell.shapes
+    S = cell.dcfg.num_stages
+    T_real = shapes.num_micro + S - 1
+    out.update(num_micro=shapes.num_micro, mb_global=shapes.mb_global,
+               seq=shapes.seq, kind=cell.kind,
+               L_max=cell.dcfg.slots_for(cell.cfg))
+
+    compiled, t_lower, t_compile = _compile(cell, mesh)
+    ma = compiled.memory_analysis()
+    out["memory"] = {
+        "argument_bytes_per_chip": ma.argument_size_in_bytes,
+        "output_bytes_per_chip": ma.output_size_in_bytes,
+        "temp_bytes_per_chip": ma.temp_size_in_bytes,
+        "alias_bytes_per_chip": ma.alias_size_in_bytes,
+        "peak_bytes_per_chip": (ma.argument_size_in_bytes
+                                + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                - ma.alias_size_in_bytes),
+        "fits_16GB": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                      + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        < 16 * 1024 ** 3,
+    }
+    raw = RL.cost_dict(compiled)
+    out["raw_cost"] = {"flops": raw.get("flops", 0.0),
+                       "bytes_accessed": raw.get("bytes accessed", 0.0)}
+    out["collectives_census"] = RL.collective_bytes(compiled.as_text())
+    out["lower_s"] = round(t_lower, 2)
+    out["compile_s"] = round(t_compile, 2)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] compiled "
+              f"({t_compile:.1f}s); peak/chip = "
+              f"{out['memory']['peak_bytes_per_chip'] / 2**30:.2f} GiB "
+              f"fits={out['memory']['fits_16GB']}")
+
+    if not probes and not multi_pod:
+        out["roofline"] = _analytic_roofline(cell, chips, T_real)
+        if verbose:
+            d = out["roofline"]
+            print(f"  roofline (analytic): compute {d['t_compute_s']:.4f}s "
+                  f"memory {d['t_memory_analytic_s']:.4f}s collective "
+                  f"{d['t_collective_s']:.4f}s → {d['bottleneck']}-bound")
+    if probes and not multi_pod:
+        # probes at m=2,3: m=1 lets XLA constant-fold the microbatch index
+        # (clip(t-idx,0,0)=0), structurally changing the program and breaking
+        # the affine-in-ticks extrapolation
+        M1, M2 = 2, 3
+        probe_cost = {}
+        probe_coll = {}
+        for m_probe in (M1, M2):
+            pc = dataclasses.replace(
+                dcfg, unroll_ticks=True, unroll_slots=True)
+            pcell = input_specs(arch, shape_name, mesh, dcfg=pc,
+                                num_micro_override=m_probe)
+            comp, _, tc = _compile(pcell, mesh)
+            probe_cost[m_probe] = RL.cost_dict(comp)
+            probe_coll[m_probe] = RL.collective_bytes(comp.as_text())
+            if verbose:
+                print(f"  probe m={m_probe}: compile {tc:.1f}s flops="
+                      f"{probe_cost[m_probe].get('flops', 0):.3e}")
+        out["probes"] = {
+            str(m): {"flops": probe_cost[m].get("flops", 0.0),
+                     "bytes": probe_cost[m].get("bytes accessed", 0.0),
+                     "coll": probe_coll[m]["total"]}
+            for m in (M1, M2)}
+        T1, T2 = M1 + S - 1, M2 + S - 1
+        adj = RL.extrapolate(
+            {"flops": probe_cost[M1].get("flops", 0.0),
+             "bytes": probe_cost[M1].get("bytes accessed", 0.0),
+             "coll": probe_coll[M1]["total"]},
+            {"flops": probe_cost[M2].get("flops", 0.0),
+             "bytes": probe_cost[M2].get("bytes accessed", 0.0),
+             "coll": probe_coll[M2]["total"]},
+            T1, T2, T_real)
+        tokens = shapes.num_micro * shapes.mb_global * max(1, shapes.seq
+                                                           if cell.kind !=
+                                                           "decode" else 1)
+        mf = __import__("repro.core.cost_model",
+                        fromlist=["model_flops"]).model_flops(
+            cell.cfg, tokens, train=(cell.kind == "train"))
+        # analytic HBM traffic (hottest chip): XLA-CPU "bytes accessed"
+        # counts every unfused intermediate, so it overestimates TPU HBM
+        # traffic; the analytic model (weights ×3 for fwd/bwd/remat +
+        # activation/KV streams) is the TPU-realistic lower envelope.
+        out["analytic_hbm_bytes_per_chip"] = _analytic_hbm(cell, chips,
+                                                           T_real)
+        terms = RL.RooflineTerms(
+            flops=adj["flops"], hbm_bytes=adj["bytes"],
+            coll_bytes=adj["coll"], chips=chips, model_flops=mf)
+        out["roofline"] = terms.as_dict()
+        out["roofline"]["t_memory_analytic_s"] = (
+            out["analytic_hbm_bytes_per_chip"] / RL.HBM_BW)
+        out["adjusted"] = adj
+        out["T_real"] = T_real
+        if verbose:
+            d = terms.as_dict()
+            print(f"  roofline: compute {d['t_compute_s']:.4f}s  memory "
+                  f"{d['t_memory_s']:.4f}s  collective "
+                  f"{d['t_collective_s']:.4f}s  → {d['bottleneck']}-bound; "
+                  f"useful-flops {d['useful_flops_ratio']:.2f} "
+                  f"mfu≤{d['mfu_bound']:.2f}")
+    return out
+
+
+def _analytic_roofline(cell, chips: int, T_real: int) -> Dict[str, Any]:
+    """Cost-model-based roofline terms for cells without probe compiles
+    (flagged "analytic": the hottest-stage FLOPs, analytic HBM bytes, and a
+    structural collective estimate: ppermute carries + DP grad all-reduce +
+    FSDP weight AG/RS when enabled)."""
+    from repro.core import cost_model as CM
+    from repro.launch import roofline as RL
+    cfg, shapes, dcfg = cell.cfg, cell.shapes, cell.dcfg
+    S = dcfg.num_stages
+    dp = chips // S
+    pattern = cfg.block_pattern()
+    per_stage = (len(pattern) + S - 1) // S
+    L_max = dcfg.slots_for(cfg)
+    stage_pattern = pattern[-per_stage:]
+    train = cell.kind == "train"
+    if cell.kind == "decode":
+        tokens_tick = max(1, shapes.mb_global // dp)
+        seq = shapes.seq
+    else:
+        tokens_tick = max(1, shapes.mb_global // dp) * shapes.seq_total
+        seq = shapes.seq_total
+    slot_mult = L_max / max(1, per_stage)      # masked_scan pad overhead
+    fwd = sum(CM.layer_flops(cfg, bt, tokens_tick, seq)
+              for bt in stage_pattern) * slot_mult
+    per_tick = fwd * (4.0 if train else 1.0)   # fwd + bwd(2) + remat(1)
+    flops = T_real * per_tick
+    if train:                                  # vocab head on last stage
+        flops += (shapes.num_micro * 2 * tokens_tick * cfg.d_model
+                  * cfg.vocab_size * 3)
+    hbm = _analytic_hbm(cell, chips, T_real)
+    # collectives per chip: ppermute carry each tick + grad psum + FSDP
+    carry = tokens_tick * cfg.d_model * 2
+    if cfg.is_encdec:
+        carry += max(1, shapes.mb_global // dp) * cfg.encoder_seq \
+            * cfg.d_model * 2
+    coll = T_real * carry
+    stage_params = sum(cfg.params_per_block(bt) for bt in stage_pattern) \
+        * slot_mult
+    if train:
+        coll += 2 * stage_params * 4 * (dp - 1) / dp       # DP grad reduce
+        if dcfg.fsdp:
+            coll += T_real * 3 * stage_params * 2 / dp     # AG fwd/bwd/remat
+        emb_head = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings
+                                                   else 2)
+        coll += 2 * emb_head * 4 / chips                   # psum over model
+    mf = CM.model_flops(
+        cfg, shapes.num_micro * shapes.mb_global
+        * (1 if cell.kind == "decode" else shapes.seq), train=train)
+    terms = RL.RooflineTerms(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                             chips=chips, model_flops=mf)
+    d = terms.as_dict()
+    d["analytic"] = True
+    d["t_memory_analytic_s"] = hbm / RL.HBM_BW
+    return d
+
+
+def _analytic_hbm(cell, chips: int, T_real: int) -> float:
+    """Analytic per-chip HBM bytes for one step (hottest stage)."""
+    from repro.core import cost_model as CM
+    cfg, shapes = cell.cfg, cell.shapes
+    S = cell.dcfg.num_stages
+    dp = chips // S
+    pattern = cfg.block_pattern()
+    per_stage = (len(pattern) + S - 1) // S
+    stage_pattern = pattern[-per_stage:]          # last stage (has the head)
+    if cell.kind == "decode":
+        tokens_tick = max(1, shapes.mb_global // dp)
+        seq = shapes.seq
+    else:
+        tokens_tick = max(1, shapes.mb_global // dp) * shapes.seq_total
+        seq = shapes.seq_total
+    per_tick = sum(CM.layer_bytes(cfg, bt, tokens_tick, seq)
+                   for bt in stage_pattern)
+    mult = 3.0 if cell.kind == "train" else 1.0   # fwd + bwd + remat
+    total = T_real * per_tick * mult
+    # head + embed traffic (last stage / stage 0)
+    head_bytes = cfg.d_model * cfg.vocab_size * 4 / max(1, dp)
+    if cell.kind == "train":
+        tok_total = shapes.num_micro * max(1, shapes.mb_global // dp) \
+            * shapes.seq
+        total += shapes.num_micro * head_bytes * 3
+        total += tok_total * cfg.vocab_size * 4 / 32   # logit stream, fused
+        # optimizer: read+write params + 2 moments on this stage's shard
+        stage_params = sum(cfg.params_per_block(bt) for bt in stage_pattern)
+        total += stage_params / max(1, dp) * (2 + 4 + 4) * 2
+    else:
+        total += head_bytes * shapes.num_micro
+    return float(total)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--probes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true")
+    # hillclimb overrides (DistConfig fields)
+    ap.add_argument("--slot-slack", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (perf iterations)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    overrides = {}
+    if args.slot_slack is not None:
+        overrides["slot_slack"] = args.slot_slack
+    if args.no_fsdp:
+        overrides["fsdp"] = False
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.optimizer:
+        overrides["optimizer"] = args.optimizer
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cells:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        suffix = f"__{args.tag}" if args.tag else ""
+        path = os.path.join(args.out, f"{a}__{s}__{mesh_name}{suffix}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"skip (cached): {path}")
+            continue
+        try:
+            res = run_cell(a, s, multi_pod=args.multi_pod,
+                           probes=args.probes, overrides=overrides or None)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            res = {"arch": a, "shape": s, "mesh": mesh_name,
+                   "error": f"{type(e).__name__}: {e}"}
+            failures.append((a, s))
+        with open(path, "w") as fh:
+            json.dump(res, fh, indent=2, default=str)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state.  Single pod: 16×16 = 256 chips (data × model); multi-pod:
+2×16×16 = 512 chips (pod × data × model).  ``model`` is the pipeline axis;
+``data`` (and ``pod``) carry DP/FSDP; see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CPU integration runs / tests."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple:
+    """The DP axes of a mesh (everything except the pipeline axis)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_degree(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

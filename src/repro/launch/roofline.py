@@ -1,0 +1,150 @@
+"""Roofline extraction from AOT-compiled artifacts.
+
+Terms per (arch × shape × mesh), per the task spec:
+    compute    = HLO_FLOPs / (chips × peak FLOP/s)
+    memory     = HLO_bytes / (chips × HBM bandwidth)
+    collective = collective_bytes / (chips × link bandwidth)
+
+XLA's cost_analysis counts loop bodies ONCE (measured, see DESIGN.md §5), so
+FLOPs/bytes/collective-bytes come from two *unrolled probe* compiles at
+num_micro = 1 and 2: differencing isolates the exact per-tick cost, then the
+schedule length T = m + S − 1 extrapolates to the real microbatch count.
+collective_bytes are summed from the compiled HLO text (operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+Memory comes from the full-scale scan-based compile's memory_analysis().
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=(.*?)\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in an (unrolled) HLO.
+
+    Uses the op RESULT shape (for all-gather that's the gathered size; for
+    reduce-scatter the scattered size; a consistent, conservative proxy for
+    bytes moved per chip).  -done ops are skipped so async start/done pairs
+    count once."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes = _SHAPE_RE.findall(m.group(1))
+        if not shapes:
+            continue
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # whole-step, per chip (HLO-level)
+    hbm_bytes: float             # whole-step, per chip
+    coll_bytes: float            # whole-step, per chip
+    chips: int
+    model_flops: float = 0.0     # 6·N·D convention, global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): how much compiled compute is
+        'useful' (catches remat/redundancy waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the roofline terms: useful flops
+        per chip-second at the bound time."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_bound) / PEAK_FLOPS
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "chips": self.chips,
+        }
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return dict(ca)
+
+
+def extrapolate(probe1: Dict[str, float], probe2: Dict[str, float],
+                t1: int, t2: int, t_real: int) -> Dict[str, float]:
+    """Two-point linear extrapolation in tick count (exact when cost is
+    affine in ticks, which it is by construction of the schedule)."""
+    out = {}
+    keys = set(probe1) | set(probe2)
+    for k in keys:
+        a, b = probe1.get(k, 0.0), probe2.get(k, 0.0)
+        per_tick = (b - a) / max(1, (t2 - t1))
+        out[k] = a + per_tick * (t_real - t1)
+    return out

@@ -1,0 +1,124 @@
+"""Serving driver: batched-request generation through the pipelined
+prefill + decode path, with optional DynMo rebalancing between rounds.
+
+CPU-scale usage:
+  REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
+      --arch smollm-360m --layers 8 --stages 4 --gen 16 --dynamism early_exit
+"""
+from __future__ import annotations
+
+import os
+if os.environ.get("REPRO_TRAIN_DEVICES"):       # must precede jax import
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["REPRO_TRAIN_DEVICES"])
+
+import argparse
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def run_serving(arch: str, *, stages: int = 4, micro: int = 2,
+                mb_global: int = 4, prompt_len: int = 32, gen: int = 8,
+                layers: Optional[int] = 8, d_model: int = 128,
+                dynamism: str = "none", rebalance_every: int = 0,
+                seed: int = 0, mesh=None):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.core.controller import ControllerConfig, DynMoController
+    from repro.core.cost_model import LayerDynState, cost_vector
+    from repro.core.profiler import LayerProfile
+    from repro.dynamics.config import DynamicsConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.pipeline.pipeline import (PipelineShapes, build_decode_fn,
+                                         build_prefill_fn)
+
+    cfg = get_config(arch)
+    if layers is not None:
+        cfg = reduced_config(cfg, num_layers=layers, d_model=d_model,
+                             num_heads=4, num_kv_heads=2, d_ff=2 * d_model,
+                             vocab_size=512)
+    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig(kind=dynamism)
+    mesh = mesh or make_host_mesh(data=1, model=stages)
+    cache_len = prompt_len + gen
+    shapes = PipelineShapes(micro, mb_global, prompt_len,
+                            cache_len=cache_len)
+
+    params = M.init_params(jax.random.PRNGKey(seed), cfg, dcfg)
+    assignment = M.make_assignment(cfg, dcfg)
+    dyn = M.init_dyn(cfg, dcfg, dyncfg)
+    cache = M.init_cache(cfg, dcfg, micro, mb_global, cache_len)
+    prefill = jax.jit(build_prefill_fn(cfg, dcfg, dyncfg, mesh, shapes))
+    decode = jax.jit(build_decode_fn(cfg, dcfg, dyncfg, mesh, shapes),
+                     donate_argnums=(3,))
+    ctrl = DynMoController(
+        cfg, dcfg, dyncfg,
+        ControllerConfig(method="partition", cost_by="time",
+                         rebalance_every=max(1, rebalance_every)))
+
+    rng = np.random.RandomState(seed)
+    tokens = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (micro, mb_global, prompt_len)),
+        jnp.int32)
+    outs = []
+    t0 = time.perf_counter()
+    with mesh:
+        ids, cache = prefill(params, assignment, dyn, cache,
+                             {"tokens": tokens})
+        outs.append(np.asarray(ids))
+        for g in range(1, gen):
+            ids, lp, cache = decode(params, assignment, dyn, cache, ids,
+                                    jnp.int32(prompt_len + g - 1))
+            outs.append(np.asarray(ids))
+            if rebalance_every and g % rebalance_every == 0:
+                # serving-time profile: survival-curve cost vector
+                L = cfg.total_blocks()
+                states = [LayerDynState() for _ in range(L)]
+                t = cost_vector(cfg, mb_global, prompt_len + g, states,
+                                by="time")
+                prof = LayerProfile(
+                    t, cost_vector(cfg, mb_global, prompt_len + g, states,
+                                   by="param") * 2,
+                    np.zeros(stages), states)
+                new_lps, ev = ctrl.decide(prof, g)
+                if new_lps is not None:
+                    params, _, dyn, assignment, cache = ctrl.apply(
+                        new_lps, params, None, dyn, cache)
+    wall = time.perf_counter() - t0
+    gen_tokens = np.stack(outs, axis=-1)
+    tps = micro * mb_global * gen / wall
+    return {"tokens": gen_tokens, "wall_s": wall, "tokens_per_s": tps,
+            "final_lps": ctrl.lps}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--micro", type=int, default=2)
+    ap.add_argument("--mb-global", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--dynamism", default="none")
+    ap.add_argument("--rebalance-every", type=int, default=0)
+    args = ap.parse_args()
+    out = run_serving(
+        args.arch, stages=args.stages, micro=args.micro,
+        mb_global=args.mb_global, prompt_len=args.prompt_len, gen=args.gen,
+        layers=args.layers, d_model=args.d_model, dynamism=args.dynamism,
+        rebalance_every=args.rebalance_every)
+    print(f"generated {out['tokens'].shape} in {out['wall_s']:.1f}s "
+          f"({out['tokens_per_s']:.1f} tok/s); final lps={out['final_lps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Sharding rules: map every train/serve-step input to a NamedSharding.
+
+Policy (DESIGN.md §4):
+  * stage buffers [S, L_max, ...]   → P("model", None, …, "data"@FSDP-dim)
+    (FSDP within a pod; replicated across pods — grads psum over pod)
+  * embed [V, d]                    → vocab over "data"
+  * head  [d, V]                    → vocab over "data"
+  * shared/small                    → replicated (dec_pos sharded on dim 0)
+  * batch [m, B, …]                 → B over all DP axes ("pod","data")
+  * cache [S, L_max, m, B, …]       → stage over "model", then the largest
+    remaining dim divisible by the data size over "data" (batch if possible,
+    else kv-heads / cache-capacity — XLA auto-partitions the decode softmax
+    over a seq-sharded cache exactly)
+  * optimizer moments mirror their parameter's spec (adafactor's factored
+    vr/vc drop the corresponding dim from the spec)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes, dp_degree
+
+
+def _fsdp_dim(shape: Tuple[int, ...], start: int, size: int
+              ) -> Optional[int]:
+    """Largest dim index ≥ start whose size is divisible by ``size``."""
+    best, best_sz = None, 0
+    for i in range(start, len(shape)):
+        if shape[i] % size == 0 and shape[i] >= size and shape[i] > best_sz:
+            best, best_sz = i, shape[i]
+    return best
+
+
+def stage_param_spec(shape: Tuple[int, ...], mesh, fsdp: bool = True) -> P:
+    entries = ["model"] + [None] * (len(shape) - 1)
+    if fsdp and len(shape) > 2:
+        d = _fsdp_dim(shape, 2, mesh.shape["data"])
+        if d is not None:
+            entries[d] = "data"
+    return P(*entries)
+
+
+def param_shardings(cfg, dcfg, mesh, param_tree_spec: Dict[str, Any]):
+    """NamedSharding tree matching model.param_spec(cfg, dcfg)."""
+    dsize = mesh.shape["data"]
+
+    def embed_spec(shape):
+        return P("data", None) if shape[0] % dsize == 0 else P(None, None)
+
+    def head_spec(shape):
+        return P(None, "data") if shape[1] % dsize == 0 else P(None, None)
+
+    out: Dict[str, Any] = {}
+    for k, v in param_tree_spec.items():
+        if k == "stages":
+            out[k] = {f: NamedSharding(
+                mesh, stage_param_spec(s.shape, mesh, dcfg.fsdp))
+                for f, s in v.items()}
+        elif k == "embed":
+            out[k] = NamedSharding(mesh, embed_spec(v.shape))
+        elif k == "head":
+            out[k] = NamedSharding(mesh, head_spec(v.shape))
+        elif k == "shared":
+            out[k] = {}
+            for f, s in v.items():
+                if f == "dec_pos" and s.shape[0] % dsize == 0:
+                    out[k][f] = NamedSharding(mesh, P("data", None))
+                else:
+                    out[k][f] = NamedSharding(
+                        mesh, P(*([None] * len(s.shape))))
+        else:
+            out[k] = NamedSharding(mesh, P(*([None] * len(v.shape))))
+    return out
+
+
+def opt_shardings(opt_template, p_shardings, mesh):
+    """Mirror each moment to its parameter's spec; factored adafactor moments
+    drop the factored dim.  Identified by path: .../m, /v, /vr, /vc."""
+    def find_pspec(path) -> Optional[P]:
+        node = p_shardings
+        for p in path:
+            key = getattr(p, "key", None)
+            if key is None:
+                return None
+            if isinstance(node, dict) and key in node:
+                node = node[key]
+            elif key in ("m", "v", "vr", "vc", "f"):
+                continue
+            else:
+                return None
+        return node.spec if isinstance(node, NamedSharding) else None
+
+    def one(path, leaf):
+        keys = [getattr(p, "key", "") for p in path]
+        pspec = find_pspec(path)
+        if pspec is None:
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        entries = list(pspec) + [None] * (leaf.ndim - len(list(pspec)))
+        last = keys[-1] if keys else ""
+        if last == "vr":           # p.shape[:-1]
+            entries = list(pspec)[:-1]
+        elif last == "vc":         # p.shape[:-2] + p.shape[-1:]
+            sp = list(pspec)
+            entries = sp[:-2] + sp[-1:]
+        entries = (entries + [None] * leaf.ndim)[:leaf.ndim]
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, opt_template)
+
+
+def batch_shardings(batch_spec: Dict[str, Any], mesh):
+    daxes = data_axes(mesh)
+    dp = dp_degree(mesh)
+
+    def one(s):
+        entries = [None] * len(s.shape)
+        if len(s.shape) >= 2 and s.shape[1] % dp == 0:
+            entries[1] = daxes if len(daxes) > 1 else daxes[0]
+        return NamedSharding(mesh, P(*entries))
+
+    return {k: one(v) for k, v in batch_spec.items()}
+
+
+def cache_shardings(cache_spec: Dict[str, Any], mesh):
+    dsize = mesh.shape["data"]
+
+    def one(s):
+        entries = ["model"] + [None] * (len(s.shape) - 1)
+        # prefer batch dim (3), else largest divisible dim ≥ 3
+        if len(s.shape) > 3 and s.shape[3] % dsize == 0:
+            entries[3] = "data"
+        else:
+            d = _fsdp_dim(s.shape, 3, dsize)
+            if d is not None:
+                entries[d] = "data"
+        return NamedSharding(mesh, P(*entries))
+
+    return {k: one(v) for k, v in cache_spec.items()}
+
+
+def stage_tree_shardings(tree_spec: Dict[str, Any], mesh):
+    """Assignment / dyn arrays: [S, ...] over model."""
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, P(*(["model"] + [None] * (len(s.shape) - 1)))), tree_spec)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def attach(sds_tree, shardings_tree):
+    """Attach shardings to ShapeDtypeStructs (for AOT .lower)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings_tree)

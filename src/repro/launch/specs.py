@@ -1,0 +1,143 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (with shardings) for every input
+of the train / prefill / decode step of every (arch × shape × mesh) cell —
+weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (SHAPES, DistConfig, ModelConfig, get_config)
+from repro.dynamics.config import DynamicsConfig
+from repro.launch import sharding as SH
+from repro.launch.mesh import dp_degree
+from repro.models import model as M
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.pipeline.pipeline import PipelineShapes, plan_shapes
+
+
+def arch_dist_config(arch: str, shape_name: str, *,
+                     unroll_ticks: bool = False, unroll_slots: bool = False,
+                     num_micro_override: Optional[int] = None,
+                     remat: str = "full", slot_exec: str = "masked_scan",
+                     slot_slack: int = 1) -> DistConfig:
+    """Per-arch distribution defaults for the production mesh.
+
+    * llama3-405b uses adafactor: AdamW's f32 moments alone are 12.7 GB/chip
+      at 256 chips — over the v5e 16 GB budget (napkin math in DESIGN.md).
+    * FSDP only for archs > 8B params: below that, stage-replicated weights
+      (+ moments) fit comfortably (e.g. xlstm 3.6B → 2.3 GB/chip) and
+      dropping FSDP removes the per-tick weight all-gather/reduce-scatter
+      traffic — the dominant collective term for small archs."""
+    optimizer = "adafactor" if arch == "llama3-405b" else "adamw"
+    fsdp = get_config(arch).param_count() > 8e9
+    return DistConfig(
+        num_stages=16, slot_slack=slot_slack, remat=remat,
+        slot_exec=slot_exec, unroll_ticks=unroll_ticks,
+        unroll_slots=unroll_slots, optimizer=optimizer, fsdp=fsdp,
+        param_dtype="bfloat16")
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape_name: str
+    kind: str                        # train | prefill | decode
+    cfg: ModelConfig
+    dcfg: DistConfig
+    dyncfg: DynamicsConfig
+    shapes: PipelineShapes
+    args: Tuple[Any, ...]            # ShapeDtypeStructs with shardings
+    skip_reason: Optional[str] = None
+
+
+def cell_skip_reason(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{cfg.name} is full-attention (DESIGN.md §7)")
+    if shape_name == "long_500k" and cfg.is_encdec:
+        return "whisper decoder context << 500k (enc-dec); skipped"
+    return None
+
+
+def input_specs(arch: str, shape_name: str, mesh,
+                dcfg: Optional[DistConfig] = None,
+                dyncfg: Optional[DynamicsConfig] = None,
+                num_micro_override: Optional[int] = None) -> CellSpec:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    dcfg = dcfg or arch_dist_config(arch, shape_name)
+    dyncfg = dyncfg or DynamicsConfig()
+    skip = cell_skip_reason(cfg, shape_name)
+    dp = dp_degree(mesh)
+    shapes = plan_shapes(cfg, dcfg, shape.kind, shape.seq_len,
+                         shape.global_batch, dp)
+    if num_micro_override:
+        shapes = dataclasses.replace(shapes, num_micro=num_micro_override)
+    if skip:
+        return CellSpec(arch, shape_name, shape.kind, cfg, dcfg, dyncfg,
+                        shapes, (), skip)
+
+    # --- params / opt / assignment / dyn specs with shardings
+    pspec = M.param_spec(cfg, dcfg)
+    pshard = SH.param_shardings(cfg, dcfg, mesh, pspec)
+    params_sds = SH.attach(pspec, pshard)
+    aspec = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        M.make_assignment(cfg, dcfg))
+    assignment_sds = SH.attach(aspec, SH.stage_tree_shardings(aspec, mesh))
+    dspec = M.dyn_spec(cfg, dcfg, dyncfg)
+    dyn_sds = SH.attach(dspec, SH.stage_tree_shardings(dspec, mesh))
+
+    m, B, s = shapes.num_micro, shapes.mb_global, shapes.seq
+    if shape.kind == "train":
+        opt_cfg = OptConfig(name=dcfg.optimizer)
+        init_fn, _ = make_optimizer(opt_cfg)
+        opt_template = jax.eval_shape(init_fn, pspec)
+        opt_sds = SH.attach(opt_template,
+                            SH.opt_shardings(opt_template, pshard, mesh))
+        batch_spec = {
+            "tokens": jax.ShapeDtypeStruct((m, B, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((m, B, s), jnp.int32),
+            "label_mask": jax.ShapeDtypeStruct((m, B, s), jnp.float32),
+        }
+        if cfg.family == "vlm":
+            batch_spec["prefix_emb"] = jax.ShapeDtypeStruct(
+                (m, B, cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.is_encdec:
+            batch_spec["frames"] = jax.ShapeDtypeStruct(
+                (m, B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        batch_sds = SH.attach(batch_spec,
+                              SH.batch_shardings(batch_spec, mesh))
+        lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
+        args = (params_sds, opt_sds, assignment_sds, dyn_sds, batch_sds,
+                lr_sds)
+    elif shape.kind == "prefill":
+        cspec = M.cache_spec(cfg, dcfg, m, B, shapes.seq)
+        cache_sds = SH.attach(cspec, SH.cache_shardings(cspec, mesh))
+        batch_spec = {
+            "tokens": jax.ShapeDtypeStruct((m, B, s), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch_spec["prefix_emb"] = jax.ShapeDtypeStruct(
+                (m, B, cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.is_encdec:
+            batch_spec["frames"] = jax.ShapeDtypeStruct(
+                (m, B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        batch_sds = SH.attach(batch_spec,
+                              SH.batch_shardings(batch_spec, mesh))
+        args = (params_sds, assignment_sds, dyn_sds, cache_sds, batch_sds)
+    else:  # decode
+        cspec = M.cache_spec(cfg, dcfg, m, B, shapes.seq)
+        cache_sds = SH.attach(cspec, SH.cache_shardings(cspec, mesh))
+        tok_spec = {"tokens": jax.ShapeDtypeStruct((m, B), jnp.int32)}
+        tok_sds = SH.attach(
+            tok_spec, SH.batch_shardings(tok_spec, mesh))["tokens"]
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params_sds, assignment_sds, dyn_sds, cache_sds, tok_sds,
+                pos_sds)
+    return CellSpec(arch, shape_name, shape.kind, cfg, dcfg, dyncfg, shapes,
+                    args, None)

@@ -1,0 +1,191 @@
+"""Training step assembly + CLI trainer.
+
+``make_train_step`` wires the pipelined loss, optimizer, and freeze masking
+into one jitted step.  The CLI driver runs real (CPU-scale) training with the
+DynMo controller in the loop: dynamism events mutate the dyn state, the
+profiler folds the step's stats, and rebalances migrate layers live.
+
+Usage (CPU integration scale):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --layers 8 --d-model 128 --stages 4 --steps 50 --dynamism pruning
+"""
+from __future__ import annotations
+
+import os
+if os.environ.get("REPRO_TRAIN_DEVICES"):       # must precede jax import
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["REPRO_TRAIN_DEVICES"])
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DistConfig, ModelConfig, get_config, \
+    reduced_config
+from repro.core.controller import ControllerConfig, DynMoController
+from repro.dynamics.config import DynamicsConfig
+from repro.dynamics import pruning as prn
+from repro.dynamics.trajectories import zhu_gupta_sparsity
+from repro.models import model as M
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.schedule import cosine_schedule
+from repro.pipeline.pipeline import PipelineShapes, build_loss_fn
+
+
+def make_train_step(cfg: ModelConfig, dcfg: DistConfig,
+                    dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
+                    opt_cfg: Optional[OptConfig] = None):
+    """Returns (init_opt_fn, train_step) with
+    train_step(params, opt_state, assignment, dyn, batch, lr)
+      -> (params, opt_state, loss, stats, gnorm)."""
+    opt_cfg = opt_cfg or OptConfig(name=dcfg.optimizer)
+    loss_fn = build_loss_fn(cfg, dcfg, dyncfg, mesh, shapes)
+    init_fn, update_fn = make_optimizer(opt_cfg)
+
+    def train_step(params, opt_state, assignment, dyn, batch, lr):
+        (loss, stats), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, assignment, dyn, batch)
+        params, opt_state, gnorm = update_fn(
+            grads, opt_state, params, lr, frozen=dyn.get("frozen"))
+        return params, opt_state, loss, stats, gnorm
+
+    return init_fn, train_step
+
+
+# ---------------------------------------------------------------------------
+# CLI integration trainer (CPU scale, real rebalancing)
+# ---------------------------------------------------------------------------
+def run_training(arch: str, *, steps: int = 50, stages: int = 4,
+                 num_micro: int = 4, mb_global: int = 4, seq: int = 64,
+                 layers: Optional[int] = None, d_model: int = 128,
+                 dynamism: str = "none", rebalance_every: int = 10,
+                 balancer: str = "diffusion", ckpt_dir: Optional[str] = None,
+                 log_every: int = 10, seed: int = 0,
+                 mesh=None) -> Dict[str, Any]:
+    from repro.data.loader import DataConfig, make_loader
+    from repro.launch.mesh import make_host_mesh
+    cfg = get_config(arch)
+    if layers is not None:
+        cfg = reduced_config(cfg, num_layers=layers, d_model=d_model,
+                             num_heads=4, num_kv_heads=2, d_ff=2 * d_model,
+                             vocab_size=512)
+    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig(kind=dynamism)
+    mesh = mesh or make_host_mesh(data=1, model=stages)
+    shapes = PipelineShapes(num_micro=num_micro, mb_global=mb_global,
+                            seq=seq)
+
+    rng = jax.random.PRNGKey(seed)
+    params = M.init_params(rng, cfg, dcfg)
+    assignment = M.make_assignment(cfg, dcfg)
+    dyn = M.init_dyn(cfg, dcfg, dyncfg)
+    init_opt, train_step = make_train_step(cfg, dcfg, dyncfg, mesh, shapes)
+    opt_state = init_opt(params)
+    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+
+    ctrl = DynMoController(
+        cfg, dcfg, dyncfg,
+        ControllerConfig(method=balancer, rebalance_every=rebalance_every))
+    loader = make_loader(cfg, DataConfig(num_micro, mb_global, seq,
+                                         seed=seed))
+    ckpt = None
+    if ckpt_dir:
+        from repro.checkpoint.checkpoint import CheckpointManager
+        ckpt = CheckpointManager(ckpt_dir, every=max(10, steps // 5))
+
+    losses, events = [], []
+    t0 = time.perf_counter()
+    tokens_per_step = num_micro * mb_global * seq
+    with mesh:
+        for step, batch in enumerate(loader):
+            if step >= steps:
+                break
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
+            params, opt_state, loss, stats, gnorm = step_jit(
+                params, opt_state, assignment, dyn, batch, lr)
+            losses.append(float(loss))
+
+            # ---- dynamism events (black-box to the controller)
+            if dynamism == "pruning" and step and step % 10 == 0:
+                sp = zhu_gupta_sparsity(
+                    step * 100, dataclasses.replace(
+                        dyncfg, prune_start_iter=0, prune_end_iter=steps * 100,
+                        prune_frequency=1))
+                keep = prn.target_keep_blocks(
+                    cfg, cfg.total_blocks(), sp)
+                dyn = dict(dyn)
+                dyn["ff_mask"] = prn.global_block_prune(
+                    cfg, params["stages"], assignment["tags"], keep)
+            if dynamism == "freezing" and step and step % 10 == 0:
+                front = int(cfg.total_blocks() * min(0.6, step / steps))
+                fr = np.zeros_like(np.asarray(dyn["frozen"]))
+                g = 0
+                tags_np = np.asarray(assignment["tags"])
+                for s in range(tags_np.shape[0]):
+                    for l in range(tags_np.shape[1]):
+                        if tags_np[s, l] != 0:
+                            if g < front:
+                                fr[s, l] = 1.0
+                            g += 1
+                dyn = dict(dyn)
+                dyn["frozen"] = jnp.asarray(fr)
+
+            # ---- DynMo controller
+            stats_np = jax.tree.map(np.asarray, stats)
+            params, opt_state, dyn, new_assignment, _, ev = ctrl.step(
+                step + 1, stats_np, np.asarray(assignment["tags"]),
+                shapes.num_micro, tokens_per_step, seq,
+                params, opt_state, dyn,
+                frozen=np.asarray(dyn["frozen"]))
+            if new_assignment is not None:
+                assignment = new_assignment
+            if ev is not None and ev.rebalanced:
+                events.append(ev)
+            if ckpt:
+                ckpt.maybe_save(step, params, opt_state, dyn, ctrl.lps)
+            if step % log_every == 0:
+                print(f"step {step:4d} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.3f} lps={ctrl.lps}")
+    wall = time.perf_counter() - t0
+    return {"losses": losses, "events": events, "wall_s": wall,
+            "final_lps": ctrl.lps, "params": params,
+            "assignment": assignment, "tokens_per_step": tokens_per_step}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--num-micro", type=int, default=4)
+    ap.add_argument("--mb-global", type=int, default=4)
+    ap.add_argument("--dynamism", default="none")
+    ap.add_argument("--balancer", default="diffusion")
+    ap.add_argument("--rebalance-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    out = run_training(
+        args.arch, steps=args.steps, stages=args.stages, layers=args.layers,
+        d_model=args.d_model, seq=args.seq, num_micro=args.num_micro,
+        mb_global=args.mb_global, dynamism=args.dynamism,
+        balancer=args.balancer, rebalance_every=args.rebalance_every,
+        ckpt_dir=args.ckpt_dir)
+    print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+          f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}")
+
+
+if __name__ == "__main__":
+    main()

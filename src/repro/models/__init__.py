@@ -1,0 +1,3 @@
+from repro.models import blocks, layers, mamba, model, xlstm
+
+__all__ = ["blocks", "layers", "mamba", "model", "xlstm"]

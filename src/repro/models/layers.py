@@ -1,0 +1,354 @@
+"""Primitive layers shared by all architectures.
+
+Everything is a pure function of (params, inputs).  Attention defaults to a
+scan-based online-softmax implementation ("xla flash") so 32k+ contexts never
+materialise the full score matrix — this is also the pure-jnp oracle that the
+Pallas kernels are validated against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def pin_batch(x: jax.Array) -> jax.Array:
+    """Constrain dim 0 (batch) to shard over the DP mesh axes.
+
+    XLA's auto propagation inside the pipeline's remat+scan bodies sometimes
+    replicates large activations (its involuntary-full-rematerialization
+    fallback); pinning the batch dim of block-internal tensors keeps the
+    per-tick working set 1/dp-sized.  No-op outside a mesh context or when
+    the batch dim is not divisible."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:   # noqa: BLE001
+        return x
+    if am is None or not getattr(am, "axis_names", None):
+        return x
+    daxes = tuple(a for a in am.axis_names
+                  if a != "model" and am.shape[a] > 1)
+    if not daxes:
+        return x
+    dp = 1
+    for a in daxes:
+        dp *= am.shape[a]
+    if x.ndim < 1 or x.shape[0] % dp or x.shape[0] < dp:
+        return x
+    spec = jax.sharding.PartitionSpec(
+        daxes if len(daxes) > 1 else daxes[0], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(am, spec))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    angles = angles[..., None, :]                              # broadcast heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array,
+           ff_mask: Optional[jax.Array] = None) -> jax.Array:
+    """SwiGLU MLP.  ``ff_mask`` [d_ff] zeroes pruned feature blocks (block-
+    structured pruning): masked columns contribute nothing, matching the
+    pruned_matmul kernel's semantics."""
+    h = pin_batch(jax.nn.silu(x @ wg) * (x @ wi))
+    if ff_mask is not None:
+        h = h * ff_mask.astype(h.dtype)
+    return pin_batch(h @ wo)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """[b, s, kv, d] -> [b, s, q, d] by repeating groups."""
+    b, s, kv, d = k.shape
+    rep = num_q_heads // kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention_reference(q, k, v, *, causal: bool, sliding_window: int = 0,
+                        q_offset: int = 0,
+                        block_mask: Optional[jax.Array] = None,
+                        positions_q: Optional[jax.Array] = None,
+                        positions_kv: Optional[jax.Array] = None,
+                        block_size: int = 128) -> jax.Array:
+    """Naive O(s^2) attention; oracle for tests.  q:[b,sq,h,d] k,v:[b,sk,kv,d].
+    ``block_mask`` [h, sq//bs, sk//bs] enables hash-based block sparsity."""
+    b, sq, h, d = q.shape
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    pq = (jnp.arange(sq) + q_offset if positions_q is None
+          else positions_q)
+    pk = jnp.arange(k.shape[1]) if positions_kv is None else positions_kv
+    if causal:
+        scores = jnp.where(pq[:, None] >= pk[None, :], scores, NEG_INF)
+    if sliding_window:
+        scores = jnp.where(pq[:, None] - pk[None, :] < sliding_window,
+                           scores, NEG_INF)
+    if block_mask is not None:
+        bs = block_size
+        m = jnp.repeat(jnp.repeat(block_mask, bs, axis=-2), bs, axis=-1)
+        scores = jnp.where(m[None, :, :sq, :k.shape[1]] > 0, scores, NEG_INF)
+    # guard fully-masked rows
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.max(scores, -1, keepdims=True) <= NEG_INF / 2,
+                      0.0, probs)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def flash_attention(q, k, v, *, causal: bool, sliding_window: int = 0,
+                    q_offset: int = 0,
+                    block_mask: Optional[jax.Array] = None,
+                    kv_block: int = 512) -> jax.Array:
+    """Flash attention with a FLASH BACKWARD (custom VJP): the backward
+    recomputes scores block-by-block from (q, k, v, out, lse) instead of
+    storing per-block probability matrices — without this, differentiating
+    the forward scan materialises the full O(sq·sk) score tensor per layer
+    per slot (measured: the dominant memory term of every attention cell).
+    """
+    out, _ = _flash_vjp(q, k, v, block_mask, causal, sliding_window,
+                        q_offset, kv_block)
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash_vjp(q, k, v, block_mask, causal, sliding_window, q_offset,
+               kv_block):
+    return _flash_fwd_impl(q, k, v, block_mask, causal, sliding_window,
+                           q_offset, kv_block)
+
+
+def _flash_vjp_fwd(q, k, v, block_mask, causal, sliding_window, q_offset,
+                   kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, block_mask, causal, sliding_window,
+                               q_offset, kv_block)
+    return (out, lse), (q, k, v, block_mask, out, lse)
+
+
+def _flash_vjp_bwd(causal, sliding_window, q_offset, kv_block, res, cts):
+    q, k, v, block_mask, out, lse = res
+    dout = cts[0]
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kv_heads = k.shape[2]
+    rep = h // kv_heads
+    pad = (-sk) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkb = k.shape[1] // kv_block
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    pq = jnp.arange(sq) + q_offset
+    D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                axis=-1).transpose(0, 2, 1)                     # [b,h,sq]
+    qf = q.astype(jnp.float32)
+    doutf = dout.astype(jnp.float32).transpose(0, 2, 1, 3)      # [b,h,sq,d]
+    qh = qf.transpose(0, 2, 1, 3)                               # [b,h,sq,d]
+    kb = k.reshape(b, nkb, kv_block, kv_heads, d)
+    vb = v.reshape(b, nkb, kv_block, kv_heads, d)
+
+    def body(dq, inp):
+        kblk, vblk, jb = inp
+        krep = jnp.repeat(kblk.astype(jnp.float32), rep, axis=2)
+        # [b,h,sq,kv_block]
+        s = jnp.einsum("bhqd,bkhd->bhqk", qh, krep) * scale
+        pk = jb * kv_block + jnp.arange(kv_block)
+        mask = pk[None, :] <= jnp.full((sq, 1), sk - 1)
+        if causal:
+            mask &= pq[:, None] >= pk[None, :]
+        if sliding_window:
+            mask &= pq[:, None] - pk[None, :] < sliding_window
+        if block_mask is not None:
+            qb_ids = jnp.arange(sq) // kv_block
+            if block_mask.ndim == 3:
+                bm = block_mask[:, qb_ids, jb]
+                s = jnp.where(bm[None, :, :, None] > 0, s, NEG_INF)
+            else:
+                bm = block_mask[:, :, qb_ids, jb]
+                s = jnp.where(bm[..., None] > 0, s, NEG_INF)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                 # [b,h,sq,kb]
+        # masked entries: s=NEG_INF ⇒ p→0; fully-masked rows have
+        # lse≈NEG_INF which would make p spuriously 1 — zero them
+        p = jnp.where((s <= NEG_INF / 2)
+                      | (lse[..., None] <= NEG_INF / 4), 0.0, p)
+        vrep = jnp.repeat(vblk.astype(jnp.float32), rep, axis=2)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", doutf, vrep)
+        ds = p * (dp - D[..., None]) * scale
+        dq = dq + pin_batch(jnp.einsum("bhqk,bkhd->bhqd", ds, krep))
+        dk_blk = jnp.einsum("bhqk,bhqd->bkhd", ds, qh)
+        dv_blk = jnp.einsum("bhqk,bhqd->bkhd", p, doutf)
+        # fold grouped heads back to kv heads
+        dk_blk = dk_blk.reshape(b, kv_block, kv_heads, rep, d).sum(3)
+        dv_blk = dv_blk.reshape(b, kv_block, kv_heads, rep, d).sum(3)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        body, dq0, (kb.transpose(1, 0, 2, 3, 4),
+                    vb.transpose(1, 0, 2, 3, 4), jnp.arange(nkb)))
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(b, nkb * kv_block, kv_heads,
+                                               d)[:, :sk]
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(b, nkb * kv_block, kv_heads,
+                                               d)[:, :sk]
+    dq = dq.transpose(0, 2, 1, 3)
+    dbm = None if block_mask is None else jnp.zeros_like(block_mask)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dbm)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _flash_fwd_impl(q, k, v, block_mask, causal, sliding_window, q_offset,
+                    kv_block):
+    """Forward online-softmax scan; returns (out, lse [b,h,sq])."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kv_heads = k.shape[2]
+    if sk % kv_block:
+        pad = kv_block - sk % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkb = k.shape[1] // kv_block
+    rep = h // kv_heads
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    pq = jnp.arange(sq) + q_offset
+
+    kb = k.reshape(b, nkb, kv_block, kv_heads, d)
+    vb = v.reshape(b, nkb, kv_block, kv_heads, d)
+
+    def body(carry, inp):
+        acc, m_prev, l_prev = carry
+        kblk, vblk, jb = inp                       # [b, kv_block, kv, d]
+        kblk = jnp.repeat(kblk, rep, axis=2)
+        vblk = jnp.repeat(vblk, rep, axis=2)
+        pk = jb * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kblk).astype(jnp.float32) * scale
+        mask = pk[None, :] <= jnp.full((sq, 1), sk - 1)
+        if causal:
+            mask &= pq[:, None] >= pk[None, :]
+        if sliding_window:
+            mask &= pq[:, None] - pk[None, :] < sliding_window
+        if block_mask is not None:
+            # block_mask: [h, nqb, nkb] or [b, h, nqb, nkb], square blocks
+            # of size kv_block
+            qb_ids = jnp.arange(sq) // kv_block
+            if block_mask.ndim == 3:
+                bm = block_mask[:, qb_ids, jb]     # [h, sq]
+                s = jnp.where(bm[None, :, :, None] > 0, s, NEG_INF)
+            else:
+                bm = block_mask[:, :, qb_ids, jb]  # [b, h, sq]
+                s = jnp.where(bm[..., None] > 0, s, NEG_INF)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = pin_batch(
+            acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vblk.dtype),
+                vblk).astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nkb)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.where(m[..., None] <= NEG_INF / 2, 0.0, out)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))          # [b,h,sq]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype), lse
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, sliding_window: int = 0,
+                     window_offset: int = 0) -> jax.Array:
+    """Single-token decode attention over a (possibly ring-buffer) cache.
+
+    q: [b, 1, h, d]; k_cache/v_cache: [b, S, kv, d]; cache_len: scalar count of
+    valid entries.  For sliding-window archs the cache IS the ring buffer
+    (S == window) and window_offset gives the rotation; masking handles both.
+    """
+    b, s, kv, d = k_cache.shape
+    h = q.shape[2]
+    k = _repeat_kv(k_cache, h)
+    v = _repeat_kv(v_cache, h)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    idx = jnp.arange(s)
+    valid = idx < cache_len
+    if sliding_window:
+        # non-ring cache with windowed attention: only the last `window` live
+        valid &= idx >= cache_len - sliding_window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def gqa_project(x, wq, wk, wv, num_heads, num_kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = (x @ wq).reshape(b, s, num_heads, head_dim)
+    k = (x @ wk).reshape(b, s, num_kv_heads, head_dim)
+    v = (x @ wv).reshape(b, s, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def cross_entropy_with_head(h, head_w, labels, *, label_mask=None,
+                            vocab_shard_size: Optional[int] = None,
+                            vocab_offset: int = 0,
+                            axis_name: Optional[str] = None):
+    """Cross-entropy over (possibly vocab-sharded) head.  h: [..., d],
+    head_w: [d, V_local], labels int32 [...].  When ``axis_name`` is given the
+    head is vocab-sharded over that mesh axis (Megatron-style vocab-parallel
+    loss): per-shard max/sumexp/label-logit are combined with collectives."""
+    logits = (h @ head_w).astype(jnp.float32)              # [..., V_local]
+    if axis_name is None:
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    else:
+        local_max = jnp.max(logits, axis=-1)
+        gmax = jax.lax.pmax(local_max, axis_name)
+        sumexp = jnp.sum(jnp.exp(logits - gmax[..., None]), axis=-1)
+        sumexp = jax.lax.psum(sumexp, axis_name)
+        lse = gmax + jnp.log(sumexp)
+        local_labels = labels - vocab_offset
+        in_shard = (local_labels >= 0) & (local_labels < logits.shape[-1])
+        safe = jnp.clip(local_labels, 0, logits.shape[-1] - 1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        ll = jax.lax.psum(jnp.where(in_shard, ll, 0.0), axis_name)
+    nll = lse - ll
+    if label_mask is not None:
+        nll = nll * label_mask
+        denom = jnp.maximum(jnp.sum(label_mask), 1.0)
+    else:
+        denom = float(nll.size)
+    return jnp.sum(nll) / denom

@@ -1,0 +1,114 @@
+"""Mamba2 (SSD) block internals — chunked parallel form for train/prefill,
+O(1) recurrent form for decode.  Single group (G=1), expand factor 2.
+
+Parallel form follows the minimal-SSD decomposition: intra-chunk quadratic
+attention-like term + inter-chunk state recurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., L] -> [..., L, L] lower-tri cumulative sums: out[i,j] =
+    sum_{k=j+1..i} x[k] for i>=j, -inf above diagonal."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int = 128,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: [b, s, nh, dh]; dt: [b, s, nh] (softplus-ed); A_log: [nh];
+    B, C: [b, s, state]; D: [nh].  Returns (y [b,s,nh,dh],
+    final_state [b, nh, dh, state]).
+    """
+    b, s, nh, dh = x.shape
+    st = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    A = -jnp.exp(A_log.astype(jnp.float32))                    # [nh] < 0
+
+    xc = x.reshape(b, nc, chunk, nh, dh)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, st).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, st).astype(jnp.float32)
+    dA = dtc * A                                               # [b,nc,cl,nh]
+    dA_t = dA.transpose(0, 1, 3, 2)                            # [b,nc,nh,cl]
+
+    # intra-chunk (diagonal blocks): attention-like with decay mask
+    Lmat = jnp.exp(_segsum(dA_t))                              # [b,nc,nh,cl,cl]
+    scores = jnp.einsum("bcls,bcms->bclm", Cc, Bc)             # [b,nc,cl,cl]
+    gated = scores[:, :, None] * Lmat.transpose(0, 1, 2, 3, 4)  # [b,nc,nh,cl,cl]
+    xdt = xc.astype(jnp.float32) * dtc[..., None]              # [b,nc,cl,nh,dh]
+    y_diag = jnp.einsum("bchlm,bcmhd->bclhd",
+                        gated.transpose(0, 1, 2, 3, 4),
+                        xdt.transpose(0, 1, 2, 3, 4))
+
+    # chunk-final states: S_c = sum_t exp(sum_{t..end} dA) dt_t x_t B_t^T
+    decay_to_end = jnp.exp(jnp.cumsum(dA_t[..., ::-1], axis=-1)[..., ::-1]
+                           - dA_t)                             # [b,nc,nh,cl]
+    S_chunk = jnp.einsum("bchl,bclhd,bcls->bchds",
+                         decay_to_end, xdt, Bc)                # [b,nc,nh,dh,st]
+    chunk_decay = jnp.exp(jnp.sum(dA_t, axis=-1))              # [b,nc,nh]
+
+    # inter-chunk recurrence over nc
+    def scan_fn(S, inp):
+        Sc, dec = inp                                          # [b,nh,dh,st],[b,nh]
+        S_out = S                                              # state entering chunk
+        S = S * dec[..., None, None] + Sc
+        return S, S_out
+
+    S0 = (jnp.zeros((b, nh, dh, st), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    S_final, S_in = jax.lax.scan(
+        scan_fn, S0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_in = S_in.transpose(1, 0, 2, 3, 4)                       # [b,nc,nh,dh,st]
+
+    # contribution of the incoming state to each position
+    decay_from_start = jnp.exp(jnp.cumsum(dA_t, axis=-1))      # [b,nc,nh,cl]
+    y_off = jnp.einsum("bcls,bchds,bchl->bclhd", Cc, S_in, decay_from_start)
+
+    y = y_diag + y_off + xc.astype(jnp.float32) * D[None, None, None, :, None]
+    y = y.reshape(b, nc * chunk, nh, dh)[:, :s]
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode_step(x, dt, A_log, B, C, D, state):
+    """One-token recurrent update.  x: [b, nh, dh]; dt: [b, nh];
+    B, C: [b, state]; state: [b, nh, dh, st]."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32) * A)                   # [b, nh]
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    state = (state * dA[..., None, None]
+             + jnp.einsum("bhd,bs->bhds", xdt, B.astype(jnp.float32)))
+    y = jnp.einsum("bs,bhds->bhd", C.astype(jnp.float32), state)
+    y = y + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), state
+
+
+def causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv1d.  x: [b, s, c]; w: [k, c]; b: [c].
+    With ``state`` [b, k-1, c] performs streaming update (decode)."""
+    k = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)              # [b, k-1+s, c]
+        new_state = xin[:, -(k - 1):]
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xin[:, -(k - 1):]
+    out = sum(xin[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out + b[None, None]), new_state

@@ -1,0 +1,151 @@
+"""xLSTM block internals — mLSTM (parallel, attention-like with exponential
+gating) and sLSTM (recurrent scan with stabilized exponential gates).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_parallel(q, k, v, ig, fg):
+    """Stabilized parallel mLSTM.
+
+    q,k,v: [b, s, nh, dh]; ig,fg: [b, s, nh] pre-activation gates.
+    Returns h: [b, s, nh, dh].
+    """
+    b, s, nh, dh = q.shape
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))          # [b,s,nh]
+    logf_cum = jnp.cumsum(logf, axis=1)
+    # D[t, s'] = logf_cum[t] - logf_cum[s'] + ig[s']   for s' <= t
+    D = (logf_cum[:, :, None, :] - logf_cum[:, None, :, :]
+         + ig.astype(jnp.float32)[:, None, :, :])              # [b,t,s',nh]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    D = jnp.where(mask[None, :, :, None], D, -jnp.inf)
+    m = jnp.max(D, axis=2, keepdims=True)                      # [b,t,1,nh]
+    Dp = jnp.exp(D - m)
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    w = scores * Dp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))
+    h = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    h = h / (norm[..., None] + 1e-6)
+    return h.astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, ig, fg, *, chunk: int = 256):
+    """Memory-sane mLSTM: process queries in chunks with running state.
+    Exact same math as mlstm_parallel (used for long sequences)."""
+    b, s, nh, dh = q.shape
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, ig, fg = map(zf, (q, k, v, ig, fg))
+    nc = q.shape[1] // chunk
+
+    def one_chunk(carry, inp):
+        C, n, m_run, f_run = carry
+        qc, kc, vc, igc, fgc = inp
+        h, C, n, m_run, f_run = _mlstm_chunk_step(
+            qc, kc, vc, igc, fgc, C, n, m_run, f_run)
+        return (C, n, m_run, f_run), h
+
+    C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -jnp.inf, jnp.float32)
+    f0 = jnp.zeros((b, nh), jnp.float32)
+    r = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).transpose(
+        1, 0, *range(2, a.ndim + 1))
+    _, hs = jax.lax.scan(one_chunk, (C0, n0, m0, f0),
+                         (r(q), r(k), r(v), r(ig), r(fg)))
+    h = hs.transpose(1, 0, *range(2, hs.ndim)).reshape(b, nc * chunk, nh, dh)
+    return h[:, :s].astype(q.dtype)
+
+
+def _mlstm_chunk_step(q, k, v, ig, fg, C, n, m_run, f_run):
+    """One chunk with incoming state (C, n) at stabilizer m_run; f_run is the
+    cumulative log-forget up to the chunk start."""
+    b, L, nh, dh = q.shape
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    lc = jnp.cumsum(logf, axis=1)                              # [b,L,nh]
+    igf = ig.astype(jnp.float32)
+    # intra-chunk decay matrix
+    D = lc[:, :, None, :] - lc[:, None, :, :] + igf[:, None, :, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask[None, :, :, None], D, -jnp.inf)
+    # inter contribution decay for each position t: lc[t] (+ state stabilizer)
+    m_intra = jnp.max(D, axis=2)                               # [b,L,nh]
+    m_inter = lc + m_run[:, None, :]                           # [b,L,nh]
+    m_new = jnp.maximum(m_intra, m_inter)
+    Dp = jnp.exp(D - m_new[:, :, None, :])
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(dh)
+    w = scores * Dp
+    h_intra = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    denom_intra = jnp.sum(w, axis=2)                           # [b,t,nh]
+    inter_scale = jnp.exp(m_inter - m_new)                     # [b,t,nh]
+    qf = q.astype(jnp.float32) / jnp.sqrt(dh)
+    h_inter = jnp.einsum("bthd,bhde->bthe", qf, C) * inter_scale[..., None]
+    denom_inter = jnp.einsum("bthd,bhd->bth", qf, n) * inter_scale
+    norm = jnp.maximum(jnp.abs(denom_intra + denom_inter), jnp.exp(-m_new))
+    h = (h_intra + h_inter) / (norm[..., None] + 1e-6)
+    # update running state to end of chunk
+    lc_end = lc[:, -1]                                         # [b,nh]
+    m_state_new = jnp.maximum(m_run + lc_end,
+                              jnp.max(igf + lc_end[:, None] - lc, axis=1))
+    decay_state = jnp.exp(m_run + lc_end - m_state_new)
+    kv_decay = jnp.exp(igf + lc_end[:, None] - lc - m_state_new[:, None])
+    C = (C * decay_state[..., None, None]
+         + jnp.einsum("bsh,bshd,bshe->bhde", kv_decay, k.astype(jnp.float32),
+                      v.astype(jnp.float32)))
+    n = (n * decay_state[..., None]
+         + jnp.einsum("bsh,bshd->bhd", kv_decay, k.astype(jnp.float32)))
+    return h.astype(q.dtype), C, n, m_state_new, f_run + lc_end
+
+
+def mlstm_decode_step(q, k, v, ig, fg, C, n, m):
+    """One-token recurrent mLSTM.  q,k,v: [b, nh, dh]; ig,fg: [b, nh];
+    state C: [b, nh, dh, dh], n: [b, nh, dh], m: [b, nh]."""
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, ig.astype(jnp.float32))
+    C = (C * jnp.exp(logf + m - m_new)[..., None, None]
+         + jnp.exp(ig.astype(jnp.float32) - m_new)[..., None, None]
+         * jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                      v.astype(jnp.float32)))
+    n = (n * jnp.exp(logf + m - m_new)[..., None]
+         + jnp.exp(ig.astype(jnp.float32) - m_new)[..., None]
+         * k.astype(jnp.float32))
+    qf = q.astype(jnp.float32) / jnp.sqrt(q.shape[-1])
+    h = jnp.einsum("bhd,bhde->bhe", qf, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                        jnp.exp(-m_new))
+    return (h / (denom[..., None] + 1e-6)).astype(q.dtype), C, n, m_new
+
+
+def slstm_scan(x_gates, r, *, init=None):
+    """Sequential sLSTM over time with diagonal recurrence.
+
+    x_gates: [b, s, 4, d] input pre-activations (i, f, z, o); r: [4, d]
+    per-channel recurrent weights (g_t = x_proj_t + r * h_{t-1}).
+    Returns h: [b, s, d] and final state (c, n, m, h)."""
+    b, s, _, d = x_gates.shape
+
+    def step(carry, g):
+        c, n, m, h_prev = carry
+        g = g + r[None] * h_prev[:, None, :].astype(g.dtype)
+        gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(gf.astype(jnp.float32))
+        m_new = jnp.maximum(logf + m, gi.astype(jnp.float32))
+        i = jnp.exp(gi.astype(jnp.float32) - m_new)
+        f = jnp.exp(logf + m - m_new)
+        c = f * c + i * jnp.tanh(gz.astype(jnp.float32))
+        n = f * n + i
+        h = jax.nn.sigmoid(go.astype(jnp.float32)) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    if init is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        init = (z, z, jnp.full((b, d), -jnp.inf, jnp.float32), z)
+    carry, hs = jax.lax.scan(step, init, x_gates.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2).astype(x_gates.dtype), carry

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OptConfig, adafactor_init, adamw_init,
+                                    make_optimizer)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+
+__all__ = ["OptConfig", "adamw_init", "adafactor_init", "make_optimizer",
+           "cosine_schedule", "linear_warmup"]

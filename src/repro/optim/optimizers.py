@@ -1,0 +1,181 @@
+"""Optimizers built from scratch (no optax in this container).
+
+AdamW (f32 moments) and Adafactor (factored second moment — the memory-fit
+choice for ≥100B archs, see DESIGN.md); both support:
+  * global-norm gradient clipping,
+  * per-slot freeze masking (frozen layers get zero updates — pairs with the
+    freezable VJP that already skipped their dW compute),
+  * gradient compression hooks (runtime/compression.py) for the DP reduce.
+
+State trees mirror the param tree so DynMo migration moves optimizer moments
+with their layers (paper §4.1 moves "weights, gradients, optimizer state").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    adafactor_min_dim: int = 128   # factor moments only for big matrices
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), n
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _adamw_update(cfg: OptConfig, g, m, v, p, t):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** t)
+    vh = v / (1 - cfg.b2 ** t)
+    upd = mh / (jnp.sqrt(vh) + cfg.eps)
+    if p.ndim >= 2:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    return upd, m, v
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v for matrices; falls back to full v for small/1D)
+# ---------------------------------------------------------------------------
+def adafactor_init(params, min_dim: int = 128):
+    def init(p):
+        if p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(init, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)
+                              or hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _adafactor_update(cfg: OptConfig, g, st, p, t):
+    decay = 1.0 - (t.astype(jnp.float32)) ** -0.8
+    g2 = g * g + 1e-30
+    if "vr" in st:
+        vr = decay * st["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+        vc = decay * st["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+        denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+        vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+        upd = g / jnp.sqrt(vhat + 1e-30)
+        new = {"vr": vr, "vc": vc}
+    else:
+        v = decay * st["v"] + (1 - decay) * g2
+        upd = g / jnp.sqrt(v + 1e-30)
+        new = {"v": v}
+    # update clipping (RMS <= 1) as in the Adafactor paper
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    if p.ndim >= 2:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    return upd, new
+
+
+# ---------------------------------------------------------------------------
+# Unified interface
+# ---------------------------------------------------------------------------
+def make_optimizer(cfg: OptConfig):
+    """Returns (init_fn, update_fn).
+
+    update_fn(grads, state, params, lr, frozen=None) -> (params, state, gnorm)
+    ``frozen``: optional [S, L_max] mask zeroing updates for stage params.
+    """
+    def init_fn(params):
+        if cfg.name == "adamw":
+            return adamw_init(params)
+        if cfg.name == "adafactor":
+            return adafactor_init(params, cfg.adafactor_min_dim)
+        if cfg.name == "sgd":
+            return {"count": jnp.zeros((), jnp.int32)}
+        raise ValueError(cfg.name)
+
+    def update_fn(grads, state, params, lr, frozen=None):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        t = state["count"] + 1
+
+        def freeze_mask(path_has_stage, upd):
+            if frozen is None or not path_has_stage:
+                return upd
+            keep = (1.0 - frozen).reshape(
+                frozen.shape + (1,) * (upd.ndim - 2))
+            return upd * keep
+
+        if cfg.name == "adamw":
+            flat_p, tdef = jax.tree.flatten(params)
+            flat_g = jax.tree.leaves(grads)
+            flat_m = jax.tree.leaves(state["m"])
+            flat_v = jax.tree.leaves(state["v"])
+            outs = [
+                _adamw_update(cfg, g, m, v, p, t)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+            upds = [o[0] for o in outs]
+            new_state = {"m": jax.tree.unflatten(tdef, [o[1] for o in outs]),
+                         "v": jax.tree.unflatten(tdef, [o[2] for o in outs]),
+                         "count": t}
+        elif cfg.name == "adafactor":
+            flat_p, tdef = jax.tree.flatten(params)
+            flat_g = jax.tree.leaves(grads)
+            fs = state["f"]
+            flat_f = jax.tree.leaves(
+                fs, is_leaf=lambda x: isinstance(x, dict)
+                and ("v" in x or "vr" in x))
+            outs = [
+                _adafactor_update(cfg, g, f, p, t)
+                for g, f, p in zip(flat_g, flat_f, flat_p)]
+            upds = [o[0] for o in outs]
+            new_f = jax.tree.unflatten(
+                jax.tree.structure(
+                    fs, is_leaf=lambda x: isinstance(x, dict)
+                    and ("v" in x or "vr" in x)),
+                [o[1] for o in outs])
+            new_state = {"f": new_f, "count": t}
+        else:   # sgd
+            flat_p, tdef = jax.tree.flatten(params)
+            upds = [g for g in jax.tree.leaves(grads)]
+            new_state = {"count": t}
+
+        upd_tree = jax.tree.unflatten(tdef, upds)
+
+        def apply_one(path, p, u):
+            has_stage = any(getattr(k, "key", None) == "stages"
+                            for k in path)
+            u = freeze_mask(has_stage, u)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map_with_path(
+            apply_one, params, upd_tree)
+        return new_params, new_state, gnorm
+
+    return init_fn, update_fn

@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, base_lr: float):
+    return base_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup))
+
+
+def cosine_schedule(step, total: int, base_lr: float, warmup: int = 100,
+                    final_frac: float = 0.1):
+    w = jnp.minimum(1.0, (step + 1) / max(1, warmup))
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return base_lr * w * cos

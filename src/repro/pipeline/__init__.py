@@ -1,0 +1,6 @@
+from repro.pipeline.pipeline import (
+    PipelineShapes, build_decode_fn, build_loss_fn, build_prefill_fn,
+)
+
+__all__ = ["PipelineShapes", "build_decode_fn", "build_loss_fn",
+           "build_prefill_fn"]

@@ -1,0 +1,496 @@
+"""Pipeline-parallel runtime: GPipe-style microbatch schedule over the
+``model`` mesh axis via jax.shard_map (manual) with ``data``/``pod`` axes left
+to XLA SPMD (auto) — FSDP/DP/vocab sharding ride on jit-level in_shardings.
+
+The forward schedule is differentiable; jax.grad generates the reverse
+pipeline (backward ppermutes run in the transposed direction), so 1F1B-like
+interleaving is realised by XLA's scheduler within each tick.
+
+dtype rule (XLA-CPU workaround, documented in DESIGN.md): any value whose
+cotangent is psum'd over the *manual* axis at the shard_map boundary must be
+float32 — i.e. embed/head/shared/final_norm params.  Stage params (sharded
+over ``model``) stay bfloat16.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DistConfig, ModelConfig
+from repro.dynamics.config import DynamicsConfig
+from repro.models import blocks as B
+from repro.models import model as M
+
+AUX_LOSS_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineShapes:
+    """Concrete global shapes of one pipeline execution."""
+    num_micro: int
+    mb_global: int          # per-microbatch global batch (sharded over data)
+    seq: int                # token positions fed to the decoder stream
+    prefix: int = 0         # VLM patch prefix length (prepended)
+    enc_seq: int = 0        # whisper encoder frames
+    cache_len: int = 0      # decode cache capacity
+
+    @property
+    def seq_total(self) -> int:
+        return self.seq + self.prefix
+
+
+def plan_shapes(cfg: ModelConfig, dcfg: DistConfig, shape_kind: str,
+                seq_len: int, global_batch: int, dp_degree: int
+                ) -> PipelineShapes:
+    """Derive microbatching from the shape cell and the mesh's DP degree."""
+    if global_batch < dp_degree:
+        # tiny-batch cells (e.g. long_500k B=1): batch not DP-shardable;
+        # other dims (kv heads / cache capacity) shard over data instead
+        shp = PipelineShapes(
+            num_micro=1, mb_global=global_batch, seq=seq_len,
+            prefix=cfg.num_patches if cfg.family == "vlm" else 0,
+            enc_seq=cfg.encoder_seq if cfg.is_encdec else 0,
+            cache_len=seq_len if shape_kind in ("decode", "prefill") else 0)
+        return shp
+    per_replica = max(1, global_batch // dp_degree)
+    num_micro = min(per_replica, 4 * dcfg.num_stages)
+    mb = max(1, per_replica // num_micro)
+    num_micro = max(1, per_replica // mb)
+    prefix = cfg.num_patches if cfg.family == "vlm" else 0
+    enc_seq = cfg.encoder_seq if cfg.is_encdec else 0
+    cache_len = seq_len if shape_kind in ("decode", "prefill") else 0
+    return PipelineShapes(
+        num_micro=num_micro, mb_global=mb * dp_degree,
+        seq=seq_len, prefix=prefix, enc_seq=enc_seq, cache_len=cache_len)
+
+
+def _ring(n):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _make_pin(mesh, dcfg):
+    """Sharding pin for pipeline-carry leaves: batch dim over the DP axes.
+
+    XLA's auto propagation sometimes assigns conflicting shardings to the
+    carry across while-loop iterations and falls back to full
+    rematerialization (replication) — pinning dim 0 at every tick boundary
+    keeps the layout stable.  No-op when the batch dim is not divisible."""
+    from jax.sharding import NamedSharding
+    daxes = tuple(a for a in mesh.axis_names if a != "model")
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    spec_axes = daxes if len(daxes) > 1 else daxes[0]
+
+    def pin(x):
+        if not dcfg.pin_carry_sharding:
+            return x
+        if x.ndim >= 1 and x.shape[0] % dp == 0 and x.shape[0] >= dp:
+            # the constraint must be built on the *context* (abstract) mesh:
+            # inside shard_map 'model' is Manual there, not Auto
+            am = jax.sharding.get_abstract_mesh()
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(am, P(spec_axes,
+                                       *([None] * (x.ndim - 1)))))
+        return x
+
+    return lambda tree: jax.tree.map(pin, tree)
+
+
+def _stage_slice(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _init_carry(cfg, dyncfg, shapes: PipelineShapes, dtype, decode=False):
+    mbg = shapes.mb_global
+    s = 1 if decode else shapes.seq_total
+    carry = {"x": jnp.zeros((mbg, s, cfg.d_model), dtype)}
+    if cfg.is_encdec and not decode:
+        carry["enc"] = jnp.zeros((mbg, shapes.enc_seq, cfg.d_model), dtype)
+    if dyncfg.uses_early_exit and not decode:
+        carry["exited"] = jnp.zeros((mbg, s), jnp.float32)
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# Training / evaluation loss
+# ---------------------------------------------------------------------------
+def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
+                  mesh, shapes: PipelineShapes, mode: str = "train"):
+    """Returns loss_fn(params, assignment, dyn, batch) -> (loss, stats).
+
+    batch = {"tokens": [m, B, seq] i32, "labels": [m, B, seq] i32,
+             "label_mask": [m, B, seq] f32, optional "prefix_emb"
+             [m, B, P, d] f32, optional "frames" [m, B, enc_seq, d] f32}.
+    stats: per-stage per-slot profiler aggregates {field: [S, L_max, ...]}.
+    """
+    S = dcfg.num_stages
+    dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
+
+    pin = _make_pin(mesh, dcfg)
+
+    def pipe(params, assignment, dyn, batch):
+        stages = _stage_slice(params["stages"])
+        tags = assignment["tags"][0]
+        dyn_s = _stage_slice(dyn)
+        shared = params["shared"]
+        idx = jax.lax.axis_index("model")
+        n = jax.lax.axis_size("model")
+        T = shapes.num_micro + S - 1
+        pos = jnp.arange(shapes.seq_total)
+        depth_base = assignment["depth_base"][0]
+
+        buf = _init_carry(cfg, dyncfg, shapes, dt)
+        aux_acc = jnp.float32(0.0)
+        stats0 = jax.tree.map(
+            lambda sds: jnp.zeros((tags.shape[0],) + sds.shape, sds.dtype),
+            B.stats_spec(cfg))
+
+        def ingest(t):
+            ti = jnp.clip(t, 0, shapes.num_micro - 1)
+            tok = jax.lax.dynamic_index_in_dim(batch["tokens"], ti, 0, False)
+            if os.environ.get("REPRO_DEBUG_NO_EMBED"):
+                return jax.tree.map(jnp.zeros_like, buf)
+            prefix = None
+            if "prefix_emb" in batch:
+                prefix = jax.lax.dynamic_index_in_dim(
+                    batch["prefix_emb"], ti, 0, False).astype(dt)
+            if "frames" in batch:
+                prefix = jax.lax.dynamic_index_in_dim(
+                    batch["frames"], ti, 0, False).astype(dt)
+            carry = M.embed(params, cfg, tok, prefix_emb=prefix)
+            carry["x"] = carry["x"].astype(dt)
+            if "enc" in carry:
+                carry["enc"] = carry["enc"].astype(dt)
+            if dyncfg.uses_early_exit:
+                carry["exited"] = jnp.zeros(
+                    (tok.shape[0], shapes.seq_total), jnp.float32)
+            return carry
+
+        def stage_fn(carry, stats_acc_unused=None):
+            return M.stage_forward(
+                cfg, dcfg, dyncfg, mode, stages, shared, tags, dyn_s, carry,
+                None, pos, depth_base)
+
+        if dcfg.remat == "full":
+            stage_fn = jax.checkpoint(stage_fn)
+
+        def tick(state, t):
+            buf, aux_acc, stats_acc = state
+            # embedding gather (and its vocab-shard collective) runs on
+            # stage 0 only — real lax.cond branch, not a masked select
+            fresh = jax.lax.cond(
+                idx == 0, ingest,
+                lambda _t: jax.tree.map(jnp.zeros_like, buf), t)
+            carry = jax.tree.map(
+                lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
+            carry, _, stats, aux = stage_fn(carry)
+            # ---- last stage emits this tick's finished microbatch hidden;
+            # the loss (head matmul) runs ONCE after the schedule, so its
+            # logits are never live across ticks (memory) and probes count
+            # it per-microbatch, not per-tick (roofline accuracy)
+            emit_valid = ((t - (n - 1)) >= 0) & (idx == n - 1)
+            h_out = jnp.where(emit_valid,
+                              carry["x"][:, shapes.prefix:],
+                              jnp.zeros_like(carry["x"][:, shapes.prefix:]))
+            mvalid = ((t - idx) >= 0) & ((t - idx) < shapes.num_micro)
+            aux_acc = aux_acc + jnp.where(mvalid, aux, 0.0)
+            stats_acc = jax.tree.map(
+                lambda acc, s_: acc + jnp.where(mvalid, s_,
+                                                jnp.zeros_like(s_)),
+                stats_acc, stats)
+            carry = pin(carry)
+            buf = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, "model", _ring(n)), carry)
+            return (buf, aux_acc, stats_acc), pin({"h": h_out})["h"]
+
+        state = (buf, aux_acc, stats0)
+        if dcfg.unroll_ticks:
+            hs = []
+            for t in range(T):
+                state, h_out = tick(state, jnp.int32(t))
+                hs.append(h_out)
+            h_seq = jnp.stack(hs[S - 1:S - 1 + shapes.num_micro])
+        else:
+            state, hs = jax.lax.scan(tick, state, jnp.arange(T))
+            h_seq = jax.lax.slice_in_dim(hs, S - 1, S - 1 + shapes.num_micro,
+                                         axis=0)
+        _, aux_acc, stats_acc = state
+
+        # ---- vocab loss on the last stage only (single real branch)
+        def full_loss(h_seq):
+            def one(carry_acc, inp):
+                h, lab, lmask = inp
+
+                def body(h, lab, lmask):
+                    hn = M.rms_norm(h, params["final_norm"], cfg.norm_eps)
+                    head = params.get("head")
+                    if head is None:
+                        head = params["embed"].T
+                    logits = hn.astype(jnp.float32) @ head.astype(
+                        jnp.float32)
+                    lse = jax.nn.logsumexp(logits, axis=-1)
+                    ll = jnp.take_along_axis(logits, lab[..., None],
+                                             -1)[..., 0]
+                    return (jnp.sum((lse - ll) * lmask), jnp.sum(lmask))
+
+                nll, cnt = jax.checkpoint(body)(h, lab, lmask)
+                return (carry_acc[0] + nll, carry_acc[1] + cnt), None
+
+            acc0 = (jnp.float32(0.0), jnp.float32(0.0))
+            if dcfg.unroll_ticks:
+                acc = acc0
+                for i in range(shapes.num_micro):
+                    acc, _ = one(acc, (h_seq[i], batch["labels"][i],
+                                       batch["label_mask"][i]))
+            else:
+                acc, _ = jax.lax.scan(
+                    one, acc0,
+                    (h_seq, batch["labels"], batch["label_mask"]))
+            return acc
+
+        if os.environ.get("REPRO_DEBUG_NO_LOSS"):
+            nll = jnp.sum(h_seq.astype(jnp.float32) ** 2)
+            cnt = jnp.float32(1.0)
+        else:
+            nll, cnt = jax.lax.cond(
+                idx == n - 1, full_loss,
+                lambda _h: (jnp.float32(0.0), jnp.float32(0.0)), h_seq)
+        loss = jax.lax.psum(nll, "model") / jnp.maximum(
+            jax.lax.psum(cnt, "model"), 1.0)
+        aux = jax.lax.psum(aux_acc, "model") / (
+            shapes.num_micro * max(1, cfg.total_blocks()))
+        loss = loss + AUX_LOSS_COEF * aux
+        return loss, stats_acc
+
+    in_specs = (
+        {"embed": P(), "final_norm": P(), "shared": P(),
+         "stages": P("model"),
+         **({"head": P()} if not cfg.tie_embeddings else {})},
+        P("model"),       # assignment arrays lead with stage axis
+        P("model"),       # dyn arrays lead with stage axis
+        P(),              # batch replicated over model (sharded over data)
+    )
+    return jax.shard_map(
+        pipe, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(), P("model")), axis_names={"model"}, check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one token for every request, pipelined microbatches
+# ---------------------------------------------------------------------------
+def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
+                    dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes):
+    """Returns decode_fn(params, assignment, dyn, cache, tokens, pos)
+    -> (next_ids [m, B] i32, logprobs [m, B] f32, new_cache).
+
+    tokens: [m, B] current token per request; pos: scalar position.
+    cache: stacked {field: [S, L_max, m, B, ...]}.
+    """
+    S = dcfg.num_stages
+    dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
+
+    pin = _make_pin(mesh, dcfg)
+
+    def pipe(params, assignment, dyn, cache, tokens, pos):
+        stages = _stage_slice(params["stages"])
+        tags = assignment["tags"][0]
+        dyn_s = _stage_slice(dyn)
+        cache_s = _stage_slice(cache)           # {field: [L_max, m, B, ...]}
+        shared = params["shared"]
+        idx = jax.lax.axis_index("model")
+        n = jax.lax.axis_size("model")
+        m = shapes.num_micro
+        T = m + S - 1
+
+        buf = _init_carry(cfg, dyncfg, shapes, dt, decode=True)
+        ids_out = jnp.zeros((m, shapes.mb_global), jnp.int32)
+        lp_out = jnp.zeros((m, shapes.mb_global), jnp.float32)
+
+        def ingest(t):
+            ti = jnp.clip(t, 0, m - 1)
+            tok = jax.lax.dynamic_index_in_dim(tokens, ti, 0, False)
+            x = jnp.take(params["embed"].astype(jnp.float32), tok, axis=0)
+            if cfg.is_encdec:
+                pe = jax.lax.dynamic_slice_in_dim(
+                    params["shared"]["dec_pos"].astype(jnp.float32),
+                    jnp.clip(pos, 0, cfg.max_seq_len - 1), 1, 0)
+                x = x + pe[0][None]
+            return {"x": x[:, None, :].astype(dt)}
+
+        def tick(state, t):
+            buf, cache_s, ids_out, lp_out = state
+            mi = jnp.clip(t - idx, 0, m - 1)
+            mvalid = ((t - idx) >= 0) & ((t - idx) < m)
+            fresh = jax.lax.cond(
+                idx == 0, ingest,
+                lambda _t: jax.tree.map(jnp.zeros_like, buf), t)
+            carry = jax.tree.map(
+                lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
+            cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
+            carry, new_cache_mb, _, _ = M.stage_forward(
+                cfg, dcfg, dyncfg, "decode", stages, shared, tags, dyn_s,
+                carry, cache_mb, pos, idx * tags.shape[0])
+            cache_s = jax.tree.map(
+                lambda full, nc, old: jax.lax.dynamic_update_index_in_dim(
+                    full, jnp.where(mvalid, nc, old), mi, 1),
+                cache_s, new_cache_mb, cache_mb)
+            # emit at last stage only (real branch; head matmul skipped
+            # elsewhere)
+            li = jnp.clip(t - (n - 1), 0, m - 1)
+            emit = ((t - (n - 1)) >= 0) & (idx == n - 1)
+
+            def do_head(h):
+                logits = M.lm_logits(params, cfg, h)
+                nid_ = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                lp_ = jax.nn.log_softmax(logits, axis=-1)
+                return nid_, jnp.take_along_axis(lp_, nid_[:, None],
+                                                 -1)[:, 0]
+
+            nid, nlp = jax.lax.cond(
+                emit, do_head,
+                lambda h: (jnp.zeros((h.shape[0],), jnp.int32),
+                           jnp.zeros((h.shape[0],), jnp.float32)),
+                carry["x"][:, 0])
+            ids_out = jax.lax.dynamic_update_index_in_dim(
+                ids_out, jnp.where(emit, nid, ids_out[li]), li, 0)
+            lp_out = jax.lax.dynamic_update_index_in_dim(
+                lp_out, jnp.where(emit, nlp, lp_out[li]), li, 0)
+            carry = pin(carry)
+            buf = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, "model", _ring(n)), carry)
+            return (buf, cache_s, ids_out, lp_out), None
+
+        if dcfg.unroll_ticks:
+            state = (buf, cache_s, ids_out, lp_out)
+            for t in range(T):
+                state, _ = tick(state, jnp.int32(t))
+            (buf, cache_s, ids_out, lp_out) = state
+        else:
+            (buf, cache_s, ids_out, lp_out), _ = jax.lax.scan(
+                tick, (buf, cache_s, ids_out, lp_out), jnp.arange(T))
+        # ids live on the last stage; broadcast (tiny)
+        ids_out = jax.lax.psum(
+            jnp.where(idx == n - 1, ids_out, jnp.zeros_like(ids_out)),
+            "model")
+        lp_out = jax.lax.psum(
+            jnp.where(idx == n - 1, lp_out, jnp.zeros_like(lp_out)), "model")
+        new_cache = jax.tree.map(lambda a: a[None], cache_s)
+        return ids_out, lp_out, new_cache
+
+    in_specs = (
+        {"embed": P(), "final_norm": P(), "shared": P(),
+         "stages": P("model"),
+         **({"head": P()} if not cfg.tie_embeddings else {})},
+        P("model"), P("model"), P("model"), P(), P())
+    return jax.shard_map(
+        pipe, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(), P(), P("model")), axis_names={"model"},
+        check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that fills the decode cache
+# ---------------------------------------------------------------------------
+def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
+                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes):
+    """Returns prefill_fn(params, assignment, dyn, cache, batch)
+    -> (last_ids [m, B] i32, new_cache)."""
+    S = dcfg.num_stages
+    dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
+
+    pin = _make_pin(mesh, dcfg)
+
+    def pipe(params, assignment, dyn, cache, batch):
+        stages = _stage_slice(params["stages"])
+        tags = assignment["tags"][0]
+        dyn_s = _stage_slice(dyn)
+        cache_s = _stage_slice(cache)
+        shared = params["shared"]
+        idx = jax.lax.axis_index("model")
+        n = jax.lax.axis_size("model")
+        m = shapes.num_micro
+        T = m + S - 1
+        pos = jnp.arange(shapes.seq_total)
+
+        buf = _init_carry(cfg, dyncfg, shapes, dt)
+        ids_out = jnp.zeros((m, shapes.mb_global), jnp.int32)
+
+        def ingest(t):
+            ti = jnp.clip(t, 0, m - 1)
+            tok = jax.lax.dynamic_index_in_dim(batch["tokens"], ti, 0, False)
+            prefix = None
+            if "prefix_emb" in batch:
+                prefix = jax.lax.dynamic_index_in_dim(
+                    batch["prefix_emb"], ti, 0, False).astype(dt)
+            if "frames" in batch:
+                prefix = jax.lax.dynamic_index_in_dim(
+                    batch["frames"], ti, 0, False).astype(dt)
+            carry = M.embed(params, cfg, tok, prefix_emb=prefix)
+            carry["x"] = carry["x"].astype(dt)
+            if "enc" in carry:
+                carry["enc"] = carry["enc"].astype(dt)
+            if dyncfg.uses_early_exit:
+                carry["exited"] = jnp.zeros(
+                    (tok.shape[0], shapes.seq_total), jnp.float32)
+            return carry
+
+        def tick(state, t):
+            buf, cache_s, ids_out = state
+            mi = jnp.clip(t - idx, 0, m - 1)
+            mvalid = ((t - idx) >= 0) & ((t - idx) < m)
+            fresh = jax.lax.cond(
+                idx == 0, ingest,
+                lambda _t: jax.tree.map(jnp.zeros_like, buf), t)
+            carry = jax.tree.map(
+                lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
+            cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
+            carry, new_cache_mb, _, _ = M.stage_forward(
+                cfg, dcfg, dyncfg, "prefill", stages, shared, tags, dyn_s,
+                carry, cache_mb, pos, idx * tags.shape[0])
+            cache_s = jax.tree.map(
+                lambda full, nc, old: jax.lax.dynamic_update_index_in_dim(
+                    full, jnp.where(mvalid, nc, old), mi, 1),
+                cache_s, new_cache_mb, cache_mb)
+            li = jnp.clip(t - (n - 1), 0, m - 1)
+            emit = ((t - (n - 1)) >= 0) & (idx == n - 1)
+            nid = jax.lax.cond(
+                emit,
+                lambda h: jnp.argmax(M.lm_logits(params, cfg, h),
+                                     axis=-1).astype(jnp.int32),
+                lambda h: jnp.zeros((h.shape[0],), jnp.int32),
+                carry["x"][:, -1])
+            ids_out = jax.lax.dynamic_update_index_in_dim(
+                ids_out, jnp.where(emit, nid, ids_out[li]), li, 0)
+            carry = pin(carry)
+            buf = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, "model", _ring(n)), carry)
+            return (buf, cache_s, ids_out), None
+
+        if dcfg.unroll_ticks:
+            state = (buf, cache_s, ids_out)
+            for t in range(T):
+                state, _ = tick(state, jnp.int32(t))
+            (buf, cache_s, ids_out) = state
+        else:
+            (buf, cache_s, ids_out), _ = jax.lax.scan(
+                tick, (buf, cache_s, ids_out), jnp.arange(T))
+        ids_out = jax.lax.psum(
+            jnp.where(idx == n - 1, ids_out, jnp.zeros_like(ids_out)),
+            "model")
+        return ids_out, jax.tree.map(lambda a: a[None], cache_s)
+
+    in_specs = (
+        {"embed": P(), "final_norm": P(), "shared": P(),
+         "stages": P("model"),
+         **({"head": P()} if not cfg.tie_embeddings else {})},
+        P("model"), P("model"), P("model"), P())
+    return jax.shard_map(
+        pipe, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(), P("model")), axis_names={"model"}, check_vma=False)

@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, StragglerDetector,
+                                           WorkerPool)
+from repro.runtime.compression import (compress_topk, decompress_topk,
+                                       int8_quantize, int8_dequantize,
+                                       compressed_psum)
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "WorkerPool",
+           "compress_topk", "decompress_topk", "int8_quantize",
+           "int8_dequantize", "compressed_psum"]

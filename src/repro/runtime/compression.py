@@ -1,0 +1,77 @@
+"""Gradient compression for the data-parallel reduce (distributed-optimization
+trick for 1000+-node scale).
+
+Two codecs with error feedback:
+  * top-k sparsification (indices + values; k as a fraction),
+  * int8 linear quantization (per-tensor scale).
+
+``compressed_psum`` wraps a psum over a named axis: quantize → psum →
+dequantize; with top-k the all-reduce becomes a dense psum over the
+scattered-back sparse tensor (TPU collectives are dense — the win is the
+bf16→int8 byte ratio or the k/N sparsity inside a scatter; documented).
+Error feedback state makes both codecs convergence-safe (residual carried to
+the next step).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_topk(g: jax.Array, frac: float = 0.05
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (values, indices, residual).  Flattens g."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    picked = flat[idx]
+    residual = flat.at[idx].set(0.0).reshape(g.shape)
+    return picked, idx, residual
+
+
+def decompress_topk(vals: jax.Array, idx: jax.Array, shape,
+                    dtype=jnp.float32) -> jax.Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    flat = flat.at[idx].add(vals)
+    return flat.reshape(shape).astype(dtype)
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(g: jax.Array, axis_name: str, method: str = "int8",
+                    err: Optional[jax.Array] = None, frac: float = 0.05
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """psum with lossy compression + error feedback.
+
+    Returns (reduced, new_error).  ``err`` is the carried residual."""
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    if method == "int8":
+        q, scale = int8_quantize(gf)
+        # scale must be common across ranks: take the max scale
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        red_q = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        red = red_q.astype(jnp.float32) * scale
+        new_err = gf - q.astype(jnp.float32) * scale
+    elif method == "topk":
+        vals, idx, new_err = compress_topk(gf, frac)
+        sparse = decompress_topk(vals, idx, gf.shape)
+        red = jax.lax.psum(sparse, axis_name)
+    else:
+        red = jax.lax.psum(gf, axis_name)
+        new_err = jnp.zeros_like(gf)
+    return red.astype(g.dtype), new_err

@@ -1,0 +1,129 @@
+"""Fault tolerance & elasticity runtime.
+
+At thousand-node scale, three mechanisms keep a DynMo job alive:
+
+1. ``HeartbeatMonitor`` — per-worker liveness with configurable timeout; a
+   missed heartbeat marks the worker dead and triggers the elastic-restart
+   path (checkpoint restore onto the surviving mesh, repro.checkpoint.elastic).
+2. ``StragglerDetector`` — per-stage step-time EMAs; a persistent slowdown
+   (thermal throttle, noisy neighbor, flaky HBM) appears to DynMo *exactly*
+   like load imbalance (paper §1: hardware-variability note), so the detector
+   simply feeds a per-stage slowdown multiplier into the balancer's time
+   vector and the ordinary rebalance absorbs the straggler.
+3. ``WorkerPool`` — the job-manager interface: re-packing releases workers
+   (paper §3.4.2, ECK-style), failures shrink the pool, recovered/granted
+   workers grow it.  Here it is an in-process abstraction with the same API
+   a k8s operator would expose (request / release / heartbeat).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Set
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: int, timeout_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self._last = {w: clock() for w in range(workers)}
+        self._lock = threading.Lock()
+        self._failed: Set[int] = set()
+
+    def beat(self, worker: int, at: Optional[float] = None) -> None:
+        with self._lock:
+            if worker in self._failed:
+                return
+            self._last[worker] = self.clock() if at is None else at
+
+    def failed_workers(self) -> Set[int]:
+        now = self.clock()
+        with self._lock:
+            for w, t in self._last.items():
+                if w not in self._failed and now - t > self.timeout:
+                    self._failed.add(w)
+            return set(self._failed)
+
+    def revive(self, worker: int) -> None:
+        with self._lock:
+            self._failed.discard(worker)
+            self._last[worker] = self.clock()
+
+
+class StragglerDetector:
+    """EMA of per-stage step times; exposes slowdown multipliers ≥ 1 that
+    the controller multiplies into the by-time cost vector."""
+
+    def __init__(self, num_stages: int, ema: float = 0.9,
+                 threshold: float = 1.15):
+        self.ema = ema
+        self.threshold = threshold
+        self.times = np.zeros(num_stages)
+        self.initialized = False
+
+    def update(self, stage_times: np.ndarray) -> None:
+        stage_times = np.asarray(stage_times, dtype=np.float64)
+        if not self.initialized:
+            self.times = stage_times.copy()
+            self.initialized = True
+        else:
+            self.times = self.ema * self.times + (1 - self.ema) * stage_times
+
+    def slowdown(self, expected: np.ndarray) -> np.ndarray:
+        """Per-stage multiplier: measured / expected, clipped at 1 from
+        below; > threshold flags a straggler."""
+        expected = np.maximum(np.asarray(expected, dtype=np.float64), 1e-12)
+        if not self.initialized:
+            return np.ones_like(expected)
+        return np.maximum(1.0, self.times / expected)
+
+    def stragglers(self, expected: np.ndarray) -> List[int]:
+        s = self.slowdown(expected)
+        return [int(i) for i in np.nonzero(s > self.threshold)[0]]
+
+
+@dataclasses.dataclass
+class WorkerPool:
+    """Job-manager facing pool (k8s/ECK stand-in).  DynMo's re-packing calls
+    ``release``; failures call ``fail``; elastic growth calls ``request``."""
+    total: int
+    active: Optional[Set[int]] = None
+
+    def __post_init__(self):
+        if self.active is None:
+            self.active = set(range(self.total))
+        self.released: Set[int] = set()
+        self.dead: Set[int] = set()
+        self.log: List[str] = []
+
+    def release(self, workers) -> None:
+        for w in workers:
+            if w in self.active:
+                self.active.discard(w)
+                self.released.add(w)
+                self.log.append(f"release:{w}")
+
+    def fail(self, worker: int) -> None:
+        self.active.discard(worker)
+        self.dead.add(worker)
+        self.log.append(f"fail:{worker}")
+
+    def request(self, n: int) -> List[int]:
+        grant = []
+        for w in sorted(self.released):
+            if len(grant) == n:
+                break
+            grant.append(w)
+        for w in grant:
+            self.released.discard(w)
+            self.active.add(w)
+            self.log.append(f"grant:{w}")
+        return grant
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)

@@ -1,0 +1,36 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+Multi-device tests run in subprocesses that set the flag themselves.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 900) -> str:
+    """Run ``code`` in a fresh python with N fake devices; raises on failure,
+    returns stdout."""
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={devices}")
+        import sys
+        sys.path.insert(0, {SRC!r})
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout

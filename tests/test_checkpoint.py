@@ -1,0 +1,114 @@
+"""Checkpoint + elastic restart tests (fault tolerance, paper §3.4.2)."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
+                                         save_checkpoint)
+from repro.checkpoint.elastic import elastic_restore
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.models import model as M
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+
+def _setup(stages=4):
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                         d_model=64, d_ff=128)
+    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig()
+    params = M.init_params(jax.random.PRNGKey(0), cfg, dcfg)
+    dyn = M.init_dyn(cfg, dcfg, dyncfg)
+    init_fn, _ = make_optimizer(OptConfig(name="adamw"))
+    opt = init_fn(params)
+    return cfg, dcfg, dyncfg, params, opt, dyn
+
+
+def _tree_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.allclose(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+def test_roundtrip(tmp_path):
+    cfg, dcfg, dyncfg, params, opt, dyn = _setup()
+    lps = [2, 2, 2, 2]
+    save_checkpoint(str(tmp_path), 7, params, opt, dyn, lps)
+    templates = (jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape,
+                                                             a.dtype),
+                              t) for t in (params, opt, dyn))
+    p2, o2, d2, index = load_checkpoint(str(tmp_path), tuple(templates))
+    assert index["step"] == 7
+    assert index["layers_per_stage"] == lps
+    assert _tree_equal(params, p2)
+    assert _tree_equal(opt, o2)
+    assert _tree_equal(dyn, d2)
+
+
+def test_torn_checkpoint_falls_back(tmp_path):
+    cfg, dcfg, dyncfg, params, opt, dyn = _setup()
+    lps = [2, 2, 2, 2]
+    save_checkpoint(str(tmp_path), 5, params, opt, dyn, lps)
+    save_checkpoint(str(tmp_path), 10, params, opt, dyn, lps)
+    # corrupt the newest
+    victim = os.path.join(str(tmp_path), "step_00000010", "stage_001.npz")
+    with open(victim, "wb") as fh:
+        fh.write(b"garbage")
+    templates = tuple(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+        for t in (params, opt, dyn))
+    _, _, _, index = load_checkpoint(str(tmp_path), templates)
+    assert index["step"] == 5      # fell back to the complete one
+
+
+def test_manager_gc(tmp_path):
+    cfg, dcfg, dyncfg, params, opt, dyn = _setup()
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    for s in range(5):
+        mgr.maybe_save(s, params, opt, dyn, [2, 2, 2, 2])
+    dirs = sorted(d for d in os.listdir(str(tmp_path))
+                  if d.startswith("step_"))
+    assert len(dirs) == 2
+    assert dirs[-1] == "step_00000004"
+
+
+def test_elastic_restore_preserves_model(tmp_path):
+    """Restore 4-stage state onto 2 stages (re-pack path): the model function
+    must be IDENTICAL — same reference loss."""
+    cfg, dcfg4, dyncfg, params, opt, dyn = _setup(stages=4)
+    assignment4 = M.make_assignment(cfg, dcfg4)
+    rng = np.random.RandomState(0)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    loss4 = M.reference_loss(cfg, dcfg4, dyncfg, params, assignment4, dyn,
+                             tok, tok)
+
+    dcfg2 = DistConfig(num_stages=2, slot_slack=2, remat="none",
+                       param_dtype="float32")
+    p2, o2, d2, assignment2, lps2 = elastic_restore(
+        cfg, dcfg4, dcfg2, params, opt, dyn, [2, 2, 2, 2])
+    assert sum(lps2) == cfg.total_blocks()
+    loss2 = M.reference_loss(cfg, dcfg2, dyncfg, p2, assignment2, d2, tok,
+                             tok)
+    assert abs(float(loss4) - float(loss2)) < 1e-5
+
+
+def test_elastic_grow(tmp_path):
+    """2 -> 6 stages (recovered workers)."""
+    cfg, dcfg2, dyncfg, params, opt, dyn = _setup(stages=2)
+    assignment2 = M.make_assignment(cfg, dcfg2)
+    rng = np.random.RandomState(0)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    loss2 = M.reference_loss(cfg, dcfg2, dyncfg, params, assignment2, dyn,
+                             tok, tok)
+    dcfg6 = DistConfig(num_stages=6, slot_slack=2, remat="none",
+                       param_dtype="float32")
+    p6, o6, d6, assignment6, _ = elastic_restore(
+        cfg, dcfg2, dcfg6, params, opt, dyn, [4, 4])
+    loss6 = M.reference_loss(cfg, dcfg6, dyncfg, p6, assignment6, d6, tok,
+                             tok)
+    assert abs(float(loss2) - float(loss6)) < 1e-5

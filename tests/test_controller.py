@@ -1,0 +1,110 @@
+"""DynMo controller tests: profile → decide → migrate loop (paper Fig. 2)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.core.balancer import imbalance, stage_loads
+from repro.core.controller import ControllerConfig, DynMoController
+from repro.core.profiler import LayerProfile, profile_from_stats
+from repro.dynamics.config import DynamicsConfig
+from repro.models import model as M
+
+
+def _setup(stages=4, layers=8):
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=layers,
+                         d_model=64, d_ff=128)
+    dcfg = DistConfig(num_stages=stages, slot_slack=3, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig(kind="pruning")
+    return cfg, dcfg, dyncfg
+
+
+def test_controller_rebalances_on_imbalance():
+    cfg, dcfg, dyncfg = _setup()
+    ctrl = DynMoController(cfg, dcfg, dyncfg,
+                           ControllerConfig(method="partition",
+                                            rebalance_every=1))
+    L = cfg.total_blocks()
+    times = np.concatenate([np.full(L // 2, 0.1), np.full(L - L // 2, 1.0)])
+    prof = LayerProfile(times, np.full(L, 1e6), np.zeros(dcfg.num_stages),
+                        [None] * L)
+    new_lps, ev = ctrl.decide(prof, iteration=1)
+    assert ev.rebalanced
+    assert ev.imbalance_after < ev.imbalance_before
+    loads = stage_loads(times, new_lps)
+    assert imbalance(loads) < 0.6
+
+
+def test_controller_skips_when_balanced():
+    cfg, dcfg, dyncfg = _setup()
+    ctrl = DynMoController(cfg, dcfg, dyncfg,
+                           ControllerConfig(method="diffusion",
+                                            rebalance_every=1))
+    L = cfg.total_blocks()
+    prof = LayerProfile(np.ones(L), np.ones(L), np.zeros(4), [None] * L)
+    new_lps, ev = ctrl.decide(prof, iteration=1)
+    assert new_lps is None
+    assert not ev.rebalanced
+
+
+def test_controller_migration_preserves_loss():
+    """Rebalance + migrate, then the reference loss must be unchanged —
+    the paper's 'no impact on model accuracy' property."""
+    cfg, dcfg, dyncfg = _setup()
+    params = M.init_params(jax.random.PRNGKey(0), cfg, dcfg)
+    assignment = M.make_assignment(cfg, dcfg)
+    dyn = M.init_dyn(cfg, dcfg, dyncfg)
+    rng = np.random.RandomState(0)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    loss_before = M.reference_loss(cfg, dcfg, dyncfg, params, assignment,
+                                   dyn, tok, tok)
+    ctrl = DynMoController(cfg, dcfg, dyncfg,
+                           ControllerConfig(method="partition",
+                                            rebalance_every=1))
+    L = cfg.total_blocks()
+    times = np.concatenate([np.full(L - 2, 0.1), np.full(2, 2.0)])
+    prof = LayerProfile(times, np.full(L, 1e6), np.zeros(4), [None] * L)
+    new_lps, ev = ctrl.decide(prof, 1)
+    assert new_lps is not None and new_lps != [2, 2, 2, 2]
+    params2, _, dyn2, assignment2, _ = ctrl.apply(new_lps, params, None, dyn)
+    loss_after = M.reference_loss(cfg, dcfg, dyncfg, params2, assignment2,
+                                  dyn2, tok, tok)
+    assert abs(float(loss_before) - float(loss_after)) < 1e-5
+
+
+def test_profile_from_stats_folds_dynamism():
+    cfg, dcfg, dyncfg = _setup()
+    S, L_max = dcfg.num_stages, dcfg.slots_for(cfg)
+    assignment = M.make_assignment(cfg, dcfg)
+    tags = np.asarray(assignment["tags"])
+    num_micro = 4
+    stats = {
+        "ff_active": np.where(tags != 0, num_micro * 0.5, 0.0),
+        "attn_density": np.where(tags != 0, num_micro * 1.0, 0.0),
+        "expert_load": np.zeros((S, L_max, 1)),
+    }
+    prof = profile_from_stats(cfg, stats, tags, num_micro, 1024, 64)
+    assert len(prof.time_per_layer) == cfg.total_blocks()
+    assert all(abs(ds.retained - 0.5) < 1e-6 for ds in prof.dyn_states)
+    # halved FFN -> cheaper than full
+    full = profile_from_stats(
+        cfg, {**stats, "ff_active": np.where(tags != 0, num_micro, 0.0)},
+        tags, num_micro, 1024, 64)
+    assert prof.time_per_layer.sum() < full.time_per_layer.sum()
+
+
+def test_controller_repack_path():
+    cfg, dcfg, dyncfg = _setup(stages=4, layers=8)
+    ctrl = DynMoController(
+        cfg, dcfg, dyncfg,
+        ControllerConfig(method="partition", rebalance_every=1, repack=True,
+                         repack_max_mem=1e9, repack_target=2))
+    L = cfg.total_blocks()
+    times = np.linspace(1.0, 2.0, L)
+    prof = LayerProfile(times, np.full(L, 1e6), np.zeros(4), [None] * L)
+    new_lps, ev = ctrl.decide(prof, 1)
+    if new_lps is not None:
+        assert ev.active_workers <= 4

@@ -1,0 +1,93 @@
+"""Dynamism scheme tests: schedule math, trajectories, global block pruning
+(Algorithm 1, TPU-adapted)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.dynamics.pruning import (block_magnitudes, global_block_prune,
+                                    target_keep_blocks)
+from repro.dynamics.trajectories import make_trajectory, zhu_gupta_sparsity
+from repro.models import model as M
+from repro.models.blocks import n_prune_blocks
+
+
+def test_zhu_gupta_schedule():
+    """Paper Eq. (3): cubic ramp from s_i to s_f between t0 and t1."""
+    cfg = DynamicsConfig(prune_initial_sparsity=0.0,
+                         prune_final_sparsity=0.9,
+                         prune_start_iter=3000, prune_end_iter=7000)
+    assert zhu_gupta_sparsity(0, cfg) == 0.0
+    assert zhu_gupta_sparsity(2999, cfg) == 0.0
+    assert zhu_gupta_sparsity(7000, cfg) == 0.9
+    assert zhu_gupta_sparsity(10 ** 6, cfg) == 0.9
+    mid = zhu_gupta_sparsity(5000, cfg)
+    assert 0.0 < mid < 0.9
+    # monotone non-decreasing
+    vals = [zhu_gupta_sparsity(k, cfg) for k in range(3000, 7001, 100)]
+    assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:]))
+    # fast early, slow late (cubic): first quarter prunes more than last
+    q1 = zhu_gupta_sparsity(4000, cfg) - zhu_gupta_sparsity(3000, cfg)
+    q4 = zhu_gupta_sparsity(7000, cfg) - zhu_gupta_sparsity(6000, cfg)
+    assert q1 > q4
+
+
+@pytest.mark.parametrize("kind", ["pruning", "freezing", "sparse_attention",
+                                  "early_exit", "moe", "mod"])
+def test_trajectories_bounds(kind):
+    mc = get_config("gpt-paper-32l")
+    cfg = DynamicsConfig(kind=kind)
+    traj = make_trajectory(kind, mc, cfg, total_iters=10000)
+    for k in (0, 1000, 5000, 9999):
+        states = traj(k)
+        assert len(states) == mc.total_blocks()
+        for ds in states:
+            assert 0.0 < ds.retained <= 1.0
+            assert 0.0 < ds.attn_density <= 1.0
+            assert 0.0 < ds.token_frac <= 1.0
+            assert 1.0 <= ds.expert_hot <= 4.0
+
+
+def test_trajectory_creates_imbalance():
+    """The whole point: dynamism must skew per-layer costs."""
+    from repro.core.cost_model import cost_vector
+    mc = get_config("gpt-paper-40l")
+    cfg = DynamicsConfig(kind="early_exit")
+    traj = make_trajectory("early_exit", mc, cfg)
+    t = cost_vector(mc, 2048, 2048, traj(5000), by="time")
+    assert t.max() / t.min() > 2.0
+
+
+def test_global_block_prune_exact_topk():
+    """Distributed block pruning == numpy global top-k oracle."""
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=6,
+                         d_model=64, d_ff=256)
+    dcfg = DistConfig(num_stages=3, slot_slack=1, param_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg, dcfg)
+    assignment = M.make_assignment(cfg, dcfg)
+    npb = n_prune_blocks(cfg)
+    keep = 7
+    mask = np.asarray(global_block_prune(cfg, params["stages"],
+                                         assignment["tags"], keep))
+    mag = np.array(block_magnitudes(cfg, params["stages"]))
+    tags = np.asarray(assignment["tags"])
+    mag[tags == 0] = -np.inf
+    flat = mag.reshape(-1)
+    thresh = np.sort(flat)[::-1][keep - 1]
+    want = ((mag >= thresh) & np.isfinite(mag)).astype(np.float32)
+    assert (mask == want).all()
+    assert int(mask.sum()) == keep
+    # pad slots always masked out
+    assert (mask[tags == 0] == 0).all()
+
+
+def test_target_keep_blocks():
+    cfg = get_config("smollm-360m")
+    L = cfg.total_blocks()
+    npb = n_prune_blocks(cfg)
+    assert target_keep_blocks(cfg, L, 0.0) == L * npb
+    assert target_keep_blocks(cfg, L, 0.9) == max(
+        L, int(round(L * npb * 0.1)))

@@ -1,0 +1,73 @@
+"""Optimizer tests: descent, clipping, freeze masking, adafactor factoring."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.optim.schedule import cosine_schedule
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "sgd"])
+def test_descent_on_quadratic(name):
+    cfg = OptConfig(name=name, lr=0.1, weight_decay=0.0, clip_norm=1e9)
+    init_fn, update_fn = make_optimizer(cfg)
+    params = {"stages": {"w": jnp.ones((2, 2, 4, 4)) * 3.0},
+              "embed": jnp.ones((8, 4)) * 2.0}
+    state = init_fn(params)
+
+    def loss(p):
+        return (jnp.sum(p["stages"]["w"] ** 2)
+                + jnp.sum(p["embed"] ** 2))
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, gn = update_fn(g, state, params, 0.05)
+    assert float(loss(params)) < 0.2 * l0, name
+
+
+def test_freeze_mask_blocks_updates():
+    cfg = OptConfig(name="adamw", lr=0.1, weight_decay=0.0)
+    init_fn, update_fn = make_optimizer(cfg)
+    params = {"stages": {"w": jnp.ones((2, 3, 4))}}
+    state = init_fn(params)
+    g = {"stages": {"w": jnp.ones((2, 3, 4))}}
+    frozen = jnp.zeros((2, 3)).at[0, 1].set(1.0).at[1, 2].set(1.0)
+    p2, state, _ = update_fn(g, state, params, 0.1, frozen=frozen)
+    w2 = np.asarray(p2["stages"]["w"])
+    assert (w2[0, 1] == 1.0).all() and (w2[1, 2] == 1.0).all()
+    assert (w2[0, 0] != 1.0).all() and (w2[1, 0] != 1.0).all()
+
+
+def test_adafactor_memory_is_factored():
+    cfg = OptConfig(name="adafactor", adafactor_min_dim=4)
+    init_fn, _ = make_optimizer(cfg)
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((16,))}
+    st = init_fn(params)
+    assert st["f"]["w"]["vr"].shape == (256,)
+    assert st["f"]["w"]["vc"].shape == (512,)
+    assert st["f"]["b"]["v"].shape == (16,)
+    # factored state is ~(m+n)/(m*n) of AdamW's
+    factored = 256 + 512
+    assert factored < 256 * 512 // 100
+
+
+def test_grad_clipping():
+    cfg = OptConfig(name="sgd", clip_norm=1.0)
+    init_fn, update_fn = make_optimizer(cfg)
+    params = {"w": jnp.zeros((4,))}
+    st = init_fn(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    p2, st, gn = update_fn(g, st, params, 1.0)
+    assert float(gn) > 100.0
+    assert np.abs(np.asarray(p2["w"])).max() <= 0.51   # clipped to norm 1
+
+
+def test_cosine_schedule():
+    lr0 = float(cosine_schedule(jnp.float32(0), 1000, 1e-3, warmup=100))
+    lrw = float(cosine_schedule(jnp.float32(100), 1000, 1e-3, warmup=100))
+    lre = float(cosine_schedule(jnp.float32(999), 1000, 1e-3, warmup=100))
+    assert lr0 < lrw
+    assert lre < 0.2 * lrw

@@ -1,0 +1,58 @@
+"""Re-packing tests (paper §3.4, Algorithm 2)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.repack import repack_adjacent, repack_first_fit
+
+mems = st.lists(st.floats(0.1, 10.0), min_size=2, max_size=16)
+
+
+@settings(max_examples=100, deadline=None)
+@given(mem=mems, cap=st.floats(1.0, 40.0))
+def test_first_fit_invariants(mem, cap):
+    nl = [4] * len(mem)
+    plan = repack_first_fit(mem, nl, max_mem=cap)
+    # memory capacity never exceeded on active workers
+    for s, m in enumerate(plan.mem_usage):
+        if plan.active_workers[s]:
+            assert m < cap or m == mem[s]  # untouched worker may exceed cap
+    # layers conserved
+    assert sum(plan.layers_per_stage) == sum(nl)
+    # inactive workers hold nothing
+    for s, a in enumerate(plan.active_workers):
+        if not a:
+            assert plan.layers_per_stage[s] == 0
+            assert plan.mem_usage[s] == 0.0
+    # never increases worker count
+    assert plan.num_active <= len(mem)
+
+
+def test_first_fit_consolidates():
+    plan = repack_first_fit([1.0, 1.0, 1.0, 1.0], [2, 2, 2, 2], max_mem=4.1)
+    # 4 workers of mem 1 fit pairwise under 4.1 -> deep consolidation
+    assert plan.num_active <= 2
+
+
+def test_target_respected():
+    plan = repack_first_fit([1.0] * 8, [1] * 8, max_mem=100.0,
+                            target_num_workers=4)
+    assert plan.num_active >= 4
+
+
+@settings(max_examples=60, deadline=None)
+@given(mem=mems, cap=st.floats(1.0, 40.0))
+def test_adjacent_preserves_order(mem, cap):
+    nl = [3] * len(mem)
+    plan = repack_adjacent(mem, nl, max_mem=cap)
+    assert sum(plan.layers_per_stage) == sum(nl)
+    # adjacency: an emptied stage's layers went to a later active stage —
+    # contiguous global order is preserved by construction (layers only move
+    # to the next active neighbour)
+    assert plan.num_active >= 1
+
+
+def test_paper_repack_scenario():
+    """Fig. 4: as pruning shrinks the model, 8 GPUs pack into fewer."""
+    mem = [2.0] * 8          # after heavy pruning each stage uses 2 of 16GB
+    plan = repack_first_fit(mem, [4] * 8, max_mem=16.0)
+    assert plan.num_active <= 2   # 8x2GB packs into 1-2 workers

@@ -1,0 +1,106 @@
+"""Pipeline simulator tests: closed-form GPipe checks + dynamism scenarios."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cost_model import LayerDynState, cost_vector
+from repro.core.simulator import (TrainSimConfig, simulate_pipeline,
+                                  simulate_training,
+                                  stage_times_from_layers)
+from repro.dynamics.config import DynamicsConfig
+from repro.dynamics.trajectories import make_trajectory
+
+
+def test_gpipe_closed_form():
+    """Balanced stages: makespan = (m + S - 1)(f + b); bubble = (S-1)/(m+S-1)."""
+    S, m, f, b = 4, 8, 1.0, 2.0
+    r = simulate_pipeline([f] * S, [b] * S, m, schedule="gpipe")
+    assert abs(r.makespan - (m + S - 1) * (f + b)) < 1e-9
+    assert abs(r.bubble_ratio - (S - 1) / (m + S - 1)) < 1e-9
+
+
+def test_1f1b_no_worse_than_gpipe():
+    rng = np.random.RandomState(0)
+    for _ in range(10):
+        S = rng.randint(2, 8)
+        m = rng.randint(2, 16)
+        f = rng.rand(S) + 0.1
+        b = 2 * (rng.rand(S) + 0.1)
+        g = simulate_pipeline(f, b, m, schedule="gpipe")
+        o = simulate_pipeline(f, b, m, schedule="1f1b")
+        assert o.makespan <= g.makespan + 1e-9
+
+
+def test_bottleneck_stage_dominates():
+    """One hot stage should set the steady-state rate."""
+    S, m = 4, 32
+    f = np.array([1.0, 1.0, 4.0, 1.0])
+    b = 2 * f
+    r = simulate_pipeline(f, b, m, schedule="1f1b")
+    # steady state >= m * (f+b) of the hottest stage
+    assert r.makespan >= m * 6.0 * 2 - 1e-9
+
+
+def test_balancing_improves_makespan():
+    """Imbalanced per-layer costs: DynMo split beats uniform split."""
+    from repro.core.balancer import balance, partition_balance
+    rng = np.random.RandomState(1)
+    layer_f = np.concatenate([np.full(16, 0.1), np.full(16, 1.0)])
+    layer_b = 2 * layer_f
+    uni = balance("uniform", layer_f + layer_b, 4).layers_per_stage
+    opt = partition_balance(layer_f + layer_b, 4).layers_per_stage
+    r_uni = simulate_pipeline(*stage_times_from_layers(layer_f, layer_b, uni),
+                              16)
+    r_opt = simulate_pipeline(*stage_times_from_layers(layer_f, layer_b, opt),
+                              16)
+    assert r_opt.makespan < 0.75 * r_uni.makespan
+    assert r_opt.bubble_ratio < r_uni.bubble_ratio
+
+
+@pytest.mark.parametrize("kind,arch,seq,min_speedup", [
+    # floors are deliberately below the expected values (stochastic
+    # trajectories); the paper-band comparison lives in
+    # benchmarks/bench_throughput.py with the paper's baseline conventions.
+    # MoE needs an actual MoE arch; sparse attention needs long sequences
+    # (at 2k attention is <20% of a layer's FLOPs).
+    ("early_exit", "gpt-paper-32l", 2048, 1.25),
+    ("freezing", "gpt-paper-32l", 2048, 1.10),
+    ("sparse_attention", "gpt-paper-32l", 16384, 1.03),
+    ("pruning", "gpt-paper-32l", 2048, 1.05),
+    ("moe", "mixtral-8x7b", 2048, 1.01),
+    ("mod", "gpt-paper-32l", 2048, 1.04),
+])
+def test_dynmo_speedup_per_case(kind, arch, seq, min_speedup):
+    """End-to-end sim: DynMo (best of partition/diffusion, by-time) vs
+    static uniform running the SAME dynamic model; m = 4·S microbatches
+    (paper's 4 per GPU — at m≈S the fill/drain phase dominates and layer
+    migration cannot help; see EXPERIMENTS.md granularity discussion)."""
+    cfg = get_config(arch)
+    dyncfg = DynamicsConfig(kind=kind, prune_start_iter=1000,
+                            prune_end_iter=6000)
+    traj = make_trajectory(kind, cfg, dyncfg, total_iters=8000, seed=0)
+    tokens = 64 * seq
+
+    def layer_time_fn(k):
+        states = traj(k)
+        t = cost_vector(cfg, tokens // 8, seq, states, by="time")
+        return t / 3.0, 2 * t / 3.0
+
+    pbytes = cost_vector(cfg, tokens, seq, None, by="param") * 2
+    S, m = 8, 32
+    base = TrainSimConfig(num_stages=S, num_micro=m, tokens_per_iter=tokens,
+                          iters=8000, sample_every=200, rebalance_every=0,
+                          balancer="uniform")
+    r0 = simulate_training(layer_time_fn, pbytes, base)
+    best = 0.0
+    for method in ("partition", "diffusion"):
+        dynmo = TrainSimConfig(num_stages=S, num_micro=m,
+                               tokens_per_iter=tokens, iters=8000,
+                               sample_every=200, rebalance_every=200,
+                               balancer=method, cost_by="time",
+                               max_slots=16)
+        r1 = simulate_training(layer_time_fn, pbytes, dynmo)
+        best = max(best, r1.throughput / r0.throughput)
+        # overhead stays single-digit percent (paper §3.3.1)
+        assert r1.overhead_frac < 0.1, r1.overhead_frac
+    assert best >= min_speedup, (kind, best)
