@@ -1,10 +1,12 @@
-"""Kernel microbenchmarks (§4.2.2 / §4.2.4).
+"""Kernel microbenchmarks (§4.2.2 / §4.2.4), forward AND backward.
 
 On this CPU container, interpret-mode wall time is not TPU time; the
 *derived* column reports what matters for the roofline: the fraction of MXU
 tile work the kernels actually skip at each sparsity (work ratio vs dense),
-validated against per-tile counting, plus interpret-mode wall time as a
-relative sanity check.
+for the forward pass and for the flash/pruned backward pass — the backward
+reuses the forward's block mask (see kernels/*/backward.py), so its ratio
+must track the forward's.  Interpret-mode wall time (fwd and fwd+bwd via
+jax.value_and_grad) is kept as a relative sanity check.
 """
 from __future__ import annotations
 
@@ -15,13 +17,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.block_sparse_attention import block_sparse_attention
-from repro.kernels.pruned_matmul import pruned_matmul
+from repro.kernels.block_sparse_attention import (attention_tile_work,
+                                                  block_sparse_attention)
+from repro.kernels.pruned_matmul import matmul_tile_work, pruned_matmul
 
 
 def _time(fn, *args, reps=2, **kw):
-    fn(*args, **kw)[0].block_until_ready() if isinstance(
-        fn(*args, **kw), tuple) else fn(*args, **kw).block_until_ready()
+    jax.tree.leaves(fn(*args, **kw))[0].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args, **kw)
@@ -32,32 +34,55 @@ def _time(fn, *args, reps=2, **kw):
 def run(quick: bool = False):
     rng = np.random.RandomState(0)
     rows = []
-    # block-sparse attention: work ratio = active (q,kv) tiles / causal tiles
+    # ---- block-sparse attention: active (q,kv) tiles / causal tiles ------
     b, s, h, d, bq = 1, 256, 2, 64, 64
     q = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
     k = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
     v = jnp.asarray(rng.randn(b, s, h, d) * 0.3, jnp.float32)
     nb = s // bq
-    causal_tiles = nb * (nb + 1) // 2
+
+    def attn_loss(q, k, v, mask):
+        return jnp.sum(block_sparse_attention(
+            q, k, v, mask, causal=True, block_q=bq, block_k=bq,
+            interpret=True) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(attn_loss, argnums=(0, 1, 2)))
     for density in (1.0, 0.5, 0.25):
         mask_np = (rng.rand(b, h, nb, nb) <= density).astype(np.int32)
-        tril = np.tril(np.ones((nb, nb), np.int32))
-        active = int((mask_np * tril).sum()) / (b * h)
-        us = _time(block_sparse_attention, q, k, v, jnp.asarray(mask_np),
-                   causal=True, block_q=bq, block_k=bq, interpret=True)
-        rows.append((f"bsa_tile_work_ratio_d{int(density*100)}", us,
-                     active / causal_tiles))
-    # pruned matmul: work ratio = kept blocks / all blocks
+        mask = jnp.asarray(mask_np)
+        work = attention_tile_work(mask_np, causal=True, block_q=bq,
+                                   block_k=bq)
+        us_f = _time(block_sparse_attention, q, k, v, mask, causal=True,
+                     block_q=bq, block_k=bq, interpret=True)
+        us_b = _time(grad_fn, q, k, v, mask)
+        tag = f"d{int(density * 100)}"
+        rows.append((f"bsa_fwd_work_ratio_{tag}", us_f,
+                     work["fwd_active"] / work["fwd_total"]))
+        rows.append((f"bsa_bwd_work_ratio_{tag}", us_b,
+                     work["bwd_active"] / work["bwd_total"]))
+    # ---- pruned matmul: kept blocks / all blocks -------------------------
     M, K, N = 256, 512, 512
     x = jnp.asarray(rng.randn(M, K) * 0.2, jnp.float32)
     w = jnp.asarray(rng.randn(K, N) * 0.2, jnp.float32)
+
+    def pm_loss(x, w, mask):
+        return jnp.sum(pruned_matmul(x, w, mask, mask_axis="n",
+                                     interpret=True) ** 2)
+
+    pm_grad = jax.jit(jax.value_and_grad(pm_loss, argnums=(0, 1)))
     for sparsity in (0.0, 0.5, 0.9):
         nbk = N // 128
         keep = max(1, int(round(nbk * (1 - sparsity))))
         mask = jnp.asarray([1] * keep + [0] * (nbk - keep), jnp.int32)
-        us = _time(pruned_matmul, x, w, mask, mask_axis="n", interpret=True)
-        rows.append((f"pruned_matmul_work_ratio_s{int(sparsity*100)}", us,
-                     keep / nbk))
+        work = matmul_tile_work(M, K, N, np.asarray(mask), mask_axis="n")
+        us_f = _time(pruned_matmul, x, w, mask, mask_axis="n",
+                     interpret=True)
+        us_b = _time(pm_grad, x, w, mask)
+        tag = f"s{int(sparsity * 100)}"
+        rows.append((f"pruned_matmul_fwd_work_ratio_{tag}", us_f,
+                     work["fwd_active"] / work["fwd_total"]))
+        rows.append((f"pruned_matmul_bwd_work_ratio_{tag}", us_b,
+                     work["bwd_active"] / work["bwd_total"]))
     return rows
 
 

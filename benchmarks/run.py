@@ -1,11 +1,13 @@
 """Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; benches that return their rows also
+get a ``BENCH_<name>.json`` snapshot (perf-trajectory tracking).
 
   python -m benchmarks.run [--quick] [--only idleness,throughput,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -31,7 +33,16 @@ def main() -> None:
     for name in names:
         t0 = time.perf_counter()
         print(f"### bench:{name}")
-        benches[name](quick=args.quick)
+        rows = benches[name](quick=args.quick)
+        # snapshot benches that return uniform (name, us, derived) rows
+        if (isinstance(rows, list) and rows
+                and all(isinstance(r, tuple) and len(r) == 3
+                        and isinstance(r[0], str) for r in rows)):
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump([{"name": n, "us_per_call": us, "derived": d}
+                           for n, us, d in rows], f, indent=1)
+            print(f"### bench:{name} wrote {path}", file=sys.stderr)
         print(f"### bench:{name} done in {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)
 

@@ -207,6 +207,12 @@ class DistConfig:
     unroll_ticks: bool = False     # unroll schedule loop (exact cost analysis)
     unroll_slots: bool = False
     param_dtype: str = "bfloat16"
+    kernel_impl: str = "scan"      # reference | scan | pallas — attention +
+                                   # SwiGLU inner impl: "reference" is the
+                                   # O(s^2) oracle, "scan" the pure-JAX flash
+                                   # scan, "pallas" the block-skipping TPU
+                                   # kernels (interpret mode off-TPU); see
+                                   # DESIGN.md §kernel dispatch
     optimizer: str = "adamw"       # adamw | adafactor
     grad_compression: str = "none" # none | topk | int8
     collective_matmul: bool = False

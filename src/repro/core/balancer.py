@@ -196,23 +196,24 @@ def diffusion_balance(costs: Sequence[float], num_stages: int,
         """Optimal 2-partition of the contiguous span [lo, hi): the cut that
         minimises max(left, right) load, tie-broken by smaller gap, then by
         the percolation direction (equal-quality cuts drift load toward the
-        lighter side of the ring).  Pure pair-local information."""
+        lighter side of the ring).  Pure pair-local information.
+
+        Vectorized prefix-sum scan (the controller runs this for every
+        neighbor pair every round — O(n) per pair instead of a Python
+        loop): the stable lexsort reproduces the sequential scan's
+        earliest-cut tie-break."""
         seg = costs[span_lo:span_hi]
-        total = float(seg.sum())
-        best_cut, best_key = cur_left, None
-        acc = 0.0
         n = len(seg)
-        for cut in range(0, n + 1):
-            if cut > 0:
-                acc += float(seg[cut - 1])
-            if cut > max_slots or (n - cut) > max_slots:
-                continue
-            left, right = acc, total - acc
-            tie_dir = cut if not prefer_small_left else -cut
-            key = (max(left, right), abs(left - right), -tie_dir)
-            if best_key is None or key < best_key:
-                best_key, best_cut = key, cut
-        return best_cut
+        left = np.concatenate([[0.0], np.cumsum(seg)])      # [n + 1]
+        right = left[-1] - left
+        cuts = np.arange(n + 1)
+        ok = (cuts <= max_slots) & ((n - cuts) <= max_slots)
+        if not ok.any():
+            return cur_left
+        key1 = np.where(ok, np.maximum(left, right), np.inf)
+        key2 = np.abs(left - right)
+        key3 = -cuts if not prefer_small_left else cuts      # = -tie_dir
+        return int(np.lexsort((key3, key2, key1))[0])
 
     def window_pass(lps, width: int, offset: int) -> Tuple[List[int], bool]:
         """Re-partition each window of `width` consecutive stages optimally

@@ -35,37 +35,38 @@ class MigrationPlan:
                 jnp.asarray(self.valid))
 
 
+def _locate(lps) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized locate: global layer g -> (stage[g], slot[g]) under a
+    contiguous split."""
+    lps = np.asarray(lps, np.int64)
+    stages = np.repeat(np.arange(len(lps)), lps)
+    starts = np.concatenate([[0], np.cumsum(lps)[:-1]])
+    slots = np.arange(int(lps.sum())) - starts[stages]
+    return stages, slots
+
+
 def build_plan(old_lps: Sequence[int], new_lps: Sequence[int],
                L_max: int) -> MigrationPlan:
     """Map each destination slot to its source slot under contiguous splits.
 
     Global layer g lives at (stage, slot) = locate(lps, g); plan[dst] = src.
-    """
+    Pure numpy prefix-sum construction — the controller rebuilds a plan
+    every rebalance (each iteration for MoE/MoD, §3.3.1), so this is on the
+    decision-latency critical path."""
     total_old, total_new = sum(old_lps), sum(new_lps)
     assert total_old == total_new, (total_old, total_new)
     S = len(new_lps)
     assert max(new_lps) <= L_max, "destination split exceeds slot capacity"
 
-    def locate(lps):
-        out = []
-        for s, n in enumerate(lps):
-            for l in range(n):
-                out.append((s, l))
-        return out
-
-    src_of_global = locate(old_lps)
-    dst_of_global = locate(new_lps)
+    src_st, src_sl = _locate(old_lps)
+    dst_st, dst_sl = _locate(new_lps)
     src_stage = np.zeros((S, L_max), np.int32)
     src_slot = np.zeros((S, L_max), np.int32)
     valid = np.zeros((S, L_max), bool)
-    moved = 0
-    for g, (ds, dl) in enumerate(dst_of_global):
-        ss, sl = src_of_global[g]
-        src_stage[ds, dl] = ss
-        src_slot[ds, dl] = sl
-        valid[ds, dl] = True
-        if ss != ds:
-            moved += 1
+    src_stage[dst_st, dst_sl] = src_st
+    src_slot[dst_st, dst_sl] = src_sl
+    valid[dst_st, dst_sl] = True
+    moved = int(np.sum(src_st != dst_st))
     return MigrationPlan(src_stage, src_slot, valid, moved)
 
 
@@ -111,11 +112,8 @@ def migrate(params_stages: Dict[str, jax.Array], opt_stages: Any,
     # assignment arrays rebuilt host-side from the pattern + new split
     S = len(new_lps)
     tags = np.full((S, L_max), BLOCK_PAD, np.int32)
-    g = 0
-    for s, n in enumerate(new_lps):
-        for l in range(n):
-            tags[s, l] = tags_pattern[g]
-            g += 1
+    dst_st, dst_sl = _locate(new_lps)
+    tags[dst_st, dst_sl] = np.asarray(tags_pattern, np.int32)
     lps = np.asarray(new_lps, np.int64)
     assignment = {
         "tags": jnp.asarray(tags),

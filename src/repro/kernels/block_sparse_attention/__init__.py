@@ -1,5 +1,7 @@
-from repro.kernels.block_sparse_attention.ops import block_sparse_attention
+from repro.kernels.block_sparse_attention.ops import (attention_tile_work,
+                                                      block_sparse_attention)
 from repro.kernels.block_sparse_attention.ref import (
     block_sparse_attention_ref)
 
-__all__ = ["block_sparse_attention", "block_sparse_attention_ref"]
+__all__ = ["attention_tile_work", "block_sparse_attention",
+           "block_sparse_attention_ref"]

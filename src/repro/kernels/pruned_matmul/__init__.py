@@ -1,7 +1,8 @@
+from repro.kernels.pruned_matmul.backward import matmul_tile_work
 from repro.kernels.pruned_matmul.ops import (pruned_matmul,
                                              pruned_swiglu)
 from repro.kernels.pruned_matmul.ref import (pruned_matmul_ref,
                                              pruned_swiglu_ref)
 
-__all__ = ["pruned_matmul", "pruned_swiglu", "pruned_matmul_ref",
-           "pruned_swiglu_ref"]
+__all__ = ["matmul_tile_work", "pruned_matmul", "pruned_swiglu",
+           "pruned_matmul_ref", "pruned_swiglu_ref"]

@@ -10,17 +10,26 @@ from __future__ import annotations
 import jax
 
 
+def _auto_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types, tolerant of jax versions where
+    ``axis_types`` (jax.sharding.AxisType, >= 0.5) does not exist yet —
+    Auto is the implicit default there."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _auto_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh for CPU integration runs / tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _auto_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

@@ -69,6 +69,8 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                  dynamism: str = "none", rebalance_every: int = 10,
                  balancer: str = "diffusion", ckpt_dir: Optional[str] = None,
                  log_every: int = 10, seed: int = 0,
+                 kernel_impl: str = "scan",
+                 dyn_overrides: Optional[Dict[str, Any]] = None,
                  mesh=None) -> Dict[str, Any]:
     from repro.data.loader import DataConfig, make_loader
     from repro.launch.mesh import make_host_mesh
@@ -78,8 +80,8 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                              num_heads=4, num_kv_heads=2, d_ff=2 * d_model,
                              vocab_size=512)
     dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
-                      param_dtype="float32")
-    dyncfg = DynamicsConfig(kind=dynamism)
+                      param_dtype="float32", kernel_impl=kernel_impl)
+    dyncfg = DynamicsConfig(kind=dynamism, **(dyn_overrides or {}))
     mesh = mesh or make_host_mesh(data=1, model=stages)
     shapes = PipelineShapes(num_micro=num_micro, mb_global=mb_global,
                             seq=seq)
@@ -173,6 +175,8 @@ def main():
     ap.add_argument("--num-micro", type=int, default=4)
     ap.add_argument("--mb-global", type=int, default=4)
     ap.add_argument("--dynamism", default="none")
+    ap.add_argument("--kernel-impl", default="scan",
+                    choices=["reference", "scan", "pallas"])
     ap.add_argument("--balancer", default="diffusion")
     ap.add_argument("--rebalance-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
@@ -181,8 +185,8 @@ def main():
         args.arch, steps=args.steps, stages=args.stages, layers=args.layers,
         d_model=args.d_model, seq=args.seq, num_micro=args.num_micro,
         mb_global=args.mb_global, dynamism=args.dynamism,
-        balancer=args.balancer, rebalance_every=args.rebalance_every,
-        ckpt_dir=args.ckpt_dir)
+        kernel_impl=args.kernel_impl, balancer=args.balancer,
+        rebalance_every=args.rebalance_every, ckpt_dir=args.ckpt_dir)
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
           f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}")
 

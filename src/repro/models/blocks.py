@@ -31,8 +31,8 @@ from repro.configs.base import (
 from repro.models import mamba as mamba_lib
 from repro.models import xlstm as xlstm_lib
 from repro.models.layers import (
-    apply_rope, decode_attention, flash_attention, pin_batch, rms_norm,
-    swiglu,
+    apply_rope, decode_attention, expand_ff_mask as _expand_ff_mask,
+    flash_attention, gelu_mlp, pin_batch, rms_norm, swiglu,
 )
 
 PRUNE_BLOCK = 128      # block-structured pruning granularity (MXU tile width)
@@ -297,7 +297,8 @@ def hash_block_mask(x, *, nbuckets: int, block: int, causal: bool = True):
 def _attn_fwd(x, wq, wk, wv, wo, *, cfg, mode, cache, pos,
               rope: bool = True, causal: bool = True,
               block_mask=None, bq=None, bv=None, bo=None,
-              kv_override=None, cache_keys=("k", "v"), dyncfg=None):
+              kv_override=None, cache_keys=("k", "v"), dyncfg=None,
+              kernel_impl: str = "scan"):
     """GQA attention with optional RoPE/SWA/bias/cache.  x: [mb, s, d];
     pos: [s] absolute positions (train/prefill) or scalar (decode).
     Returns (out, new_cache, density)."""
@@ -354,7 +355,8 @@ def _attn_fwd(x, wq, wk, wv, wo, *, cfg, mode, cache, pos,
             k = apply_rope(k, pk, cfg.rope_theta)
         out = flash_attention(q, k, v, causal=causal,
                               sliding_window=cfg.sliding_window,
-                              block_mask=block_mask, kv_block=kv_block)
+                              block_mask=block_mask, kv_block=kv_block,
+                              impl=kernel_impl)
         if mode == "prefill" and cache is not None:
             kc, vc = cache[cache_keys[0]], cache[cache_keys[1]]
             cap = kc.shape[1]
@@ -430,32 +432,31 @@ def moe_ffn(p, x, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # Per-type block forward
 # ---------------------------------------------------------------------------
-def _expand_ff_mask(ff_mask, dim):
-    """[n_blocks] -> [dim] feature mask."""
-    return jnp.repeat(ff_mask, dim // ff_mask.shape[0])
-
-
-def _dense_block(p, x, *, cfg, mode, cache, pos, dyn, dyncfg):
+def _dense_block(p, x, *, cfg, mode, cache, pos, dyn, dyncfg,
+                 kernel_impl="scan"):
     h, cache, density = _attn_fwd(
         rms_norm(x, p["attn_norm"], cfg.norm_eps),
         p["wq"], p["wk"], p["wv"], p["wo"], cfg=cfg, mode=mode,
-        cache=cache, pos=pos, dyncfg=dyncfg)
+        cache=cache, pos=pos, dyncfg=dyncfg, kernel_impl=kernel_impl)
     x = x + h
     hn = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
-    ff_mask = _expand_ff_mask(dyn["ff_mask"], cfg.d_ff) \
-        if cfg.d_ff else None
-    x = x + swiglu(hn, p["wi"], p["wg"], p["wof"], ff_mask)
+    # block-level mask: layers.swiglu expands for the dense impls and feeds
+    # the pallas impl's tile gating directly
+    ff_mask = dyn["ff_mask"] if cfg.d_ff else None
+    x = x + swiglu(hn, p["wi"], p["wg"], p["wof"], ff_mask,
+                   impl=kernel_impl)
     stats = _zero_stats(cfg)
     stats["ff_active"] = jnp.mean(dyn["ff_mask"])
     stats["attn_density"] = density
     return x, cache, stats, jnp.float32(0.0)
 
 
-def _moe_block(p, x, *, cfg, mode, cache, pos, dyn, dyncfg):
+def _moe_block(p, x, *, cfg, mode, cache, pos, dyn, dyncfg,
+               kernel_impl="scan"):
     h, cache, density = _attn_fwd(
         rms_norm(x, p["attn_norm"], cfg.norm_eps),
         p["wq"], p["wk"], p["wv"], p["wo"], cfg=cfg, mode=mode,
-        cache=cache, pos=pos, dyncfg=dyncfg)
+        cache=cache, pos=pos, dyncfg=dyncfg, kernel_impl=kernel_impl)
     x = x + h
     hn = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     y, load, aux_loss = moe_ffn(p, hn, cfg)
@@ -468,7 +469,7 @@ def _moe_block(p, x, *, cfg, mode, cache, pos, dyn, dyncfg):
 
 
 def _mamba_block(p, x, *, cfg, mode, cache, pos, dyn, shared=None,
-                 with_shared_attn=False, dyncfg=None):
+                 with_shared_attn=False, dyncfg=None, kernel_impl="scan"):
     m = _dims(cfg)
     d_in, nh, st = m["d_in"], m["nh_m"], m["st"]
     b, s, _ = x.shape
@@ -507,7 +508,8 @@ def _mamba_block(p, x, *, cfg, mode, cache, pos, dyn, shared=None,
             rms_norm(x, shared["ga_norm"], cfg.norm_eps),
             shared["ga_wq"], shared["ga_wk"], shared["ga_wv"],
             shared["ga_wo"], cfg=cfg, mode=mode,
-            cache=new_cache, pos=pos, dyncfg=dyncfg)
+            cache=new_cache, pos=pos, dyncfg=dyncfg,
+            kernel_impl=kernel_impl)
         x = x + h
     stats = _zero_stats(cfg)
     stats["ff_active"] = jnp.float32(1.0)
@@ -609,30 +611,31 @@ def _layer_norm(x, scale, bias, eps):
             + bias.astype(jnp.float32)).astype(x.dtype)
 
 
-def _enc_block(p, x, *, cfg, mode, cache, pos, dyn):
+def _enc_block(p, x, *, cfg, mode, cache, pos, dyn, kernel_impl="scan"):
     h, _, _ = _attn_fwd(_layer_norm(x, p["e_ln1"], p["e_ln1b"], cfg.norm_eps),
                         p["e_wq"], p["e_wk"], p["e_wv"], p["e_wo"],
                         cfg=cfg, mode="train", cache=None,
                         pos=jnp.arange(x.shape[1]), rope=False,
                         causal=False, bq=p["e_bq"], bv=p["e_bv"],
-                        bo=p["e_bo"])
+                        bo=p["e_bo"], kernel_impl=kernel_impl)
     x = x + h
     hn = _layer_norm(x, p["e_ln2"], p["e_ln2b"], cfg.norm_eps)
-    ff_mask = _expand_ff_mask(dyn["ff_mask"], cfg.d_ff)
-    h = jax.nn.gelu(hn @ p["e_w1"] + p["e_b1"]) * ff_mask.astype(x.dtype)
-    x = x + h @ p["e_w2"] + p["e_b2"]
+    x = x + gelu_mlp(hn, p["e_w1"], p["e_b1"], p["e_w2"], p["e_b2"],
+                     dyn["ff_mask"], impl=kernel_impl)
     stats = _zero_stats(cfg)
     stats["ff_active"] = jnp.mean(dyn["ff_mask"])
     return x, cache, stats, jnp.float32(0.0)
 
 
-def _dec_block(p, x, *, cfg, mode, cache, pos, dyn, enc_out):
+def _dec_block(p, x, *, cfg, mode, cache, pos, dyn, enc_out,
+               kernel_impl="scan"):
     # self attention (causal, learned positions added at embedding)
     h, cache, _ = _attn_fwd(
         _layer_norm(x, p["d_ln1"], p["d_ln1b"], cfg.norm_eps),
         p["d_wq"], p["d_wk"], p["d_wv"], p["d_wo"],
         cfg=cfg, mode=mode, cache=cache, pos=pos, rope=False,
-        causal=True, bq=p["d_bq"], bv=p["d_bv"], bo=p["d_bo"])
+        causal=True, bq=p["d_bq"], bv=p["d_bv"], bo=p["d_bo"],
+        kernel_impl=kernel_impl)
     x = x + h
     # cross attention
     hn = _layer_norm(x, p["d_ln2"], p["d_ln2b"], cfg.norm_eps)
@@ -651,12 +654,11 @@ def _dec_block(p, x, *, cfg, mode, cache, pos, dyn, enc_out):
             hn, p["c_wq"], p["c_wk"], p["c_wv"], p["c_wo"], cfg=cfg,
             mode=mode, cache=cache, pos=pos, rope=False, causal=False,
             bq=p["c_bq"], bv=p["c_bv"], bo=p["c_bo"], kv_override=enc_out,
-            cache_keys=("ck", "cv"))
+            cache_keys=("ck", "cv"), kernel_impl=kernel_impl)
     x = x + h
     hn = _layer_norm(x, p["d_ln3"], p["d_ln3b"], cfg.norm_eps)
-    ff_mask = _expand_ff_mask(dyn["ff_mask"], cfg.d_ff)
-    h = jax.nn.gelu(hn @ p["d_w1"] + p["d_b1"]) * ff_mask.astype(x.dtype)
-    x = x + h @ p["d_w2"] + p["d_b2"]
+    x = x + gelu_mlp(hn, p["d_w1"], p["d_b1"], p["d_w2"], p["d_b2"],
+                     dyn["ff_mask"], impl=kernel_impl)
     stats = _zero_stats(cfg)
     stats["ff_active"] = jnp.mean(dyn["ff_mask"])
     return x, new_cache, stats, jnp.float32(0.0)
@@ -666,8 +668,10 @@ def _dec_block(p, x, *, cfg, mode, cache, pos, dyn, enc_out):
 # Dispatch
 # ---------------------------------------------------------------------------
 def apply_block(cfg: ModelConfig, dyncfg, mode: str, p, shared, carry, tag,
-                dyn, cache, pos):
+                dyn, cache, pos, *, kernel_impl: str = "scan"):
     """Apply one slot.  ``tag`` is a runtime int32 BLOCK_* type id.
+    ``kernel_impl`` (DistConfig.kernel_impl, static) selects the attention /
+    SwiGLU inner implementation — see layers.flash_attention.
 
     ``carry`` is the pipeline activation dict: {"x": [mb, s, d]} plus
     {"enc": [mb, enc_seq, d]} for encoder–decoder archs (the encoder stream
@@ -683,11 +687,11 @@ def apply_block(cfg: ModelConfig, dyncfg, mode: str, p, shared, carry, tag,
             if t == BLOCK_DENSE:
                 y, c, s_, a = _dense_block(
                     p_, x_, cfg=cfg, mode=mode, cache=cache_, pos=pos,
-                    dyn=dyn_, dyncfg=dyncfg)
+                    dyn=dyn_, dyncfg=dyncfg, kernel_impl=kernel_impl)
             elif t == BLOCK_MOE:
                 y, c, s_, a = _moe_block(
                     p_, x_, cfg=cfg, mode=mode, cache=cache_, pos=pos,
-                    dyn=dyn_, dyncfg=dyncfg)
+                    dyn=dyn_, dyncfg=dyncfg, kernel_impl=kernel_impl)
             elif t == BLOCK_MAMBA:
                 y, c, s_, a = _mamba_block(
                     p_, x_, cfg=cfg, mode=mode, cache=cache_, pos=pos,
@@ -696,7 +700,7 @@ def apply_block(cfg: ModelConfig, dyncfg, mode: str, p, shared, carry, tag,
                 y, c, s_, a = _mamba_block(
                     p_, x_, cfg=cfg, mode=mode, cache=cache_, pos=pos,
                     dyn=dyn_, shared=shared, with_shared_attn=True,
-                    dyncfg=dyncfg)
+                    dyncfg=dyncfg, kernel_impl=kernel_impl)
             elif t == BLOCK_MLSTM:
                 y, c, s_, a = _mlstm_block(
                     p_, x_, cfg=cfg, mode=mode, cache=cache_, pos=pos,
@@ -710,12 +714,13 @@ def apply_block(cfg: ModelConfig, dyncfg, mode: str, p, shared, carry, tag,
                     return carry_, cache_, _zero_stats(cfg), jnp.float32(0.0)
                 e, c, s_, a = _enc_block(
                     p_, carry_["enc"], cfg=cfg, mode=mode, cache=cache_,
-                    pos=pos, dyn=dyn_)
+                    pos=pos, dyn=dyn_, kernel_impl=kernel_impl)
                 return {**carry_, "enc": e}, c, s_, a
             elif t == BLOCK_DEC:
                 y, c, s_, a = _dec_block(
                     p_, x_, cfg=cfg, mode=mode, cache=cache_, pos=pos,
-                    dyn=dyn_, enc_out=carry_.get("enc"))
+                    dyn=dyn_, enc_out=carry_.get("enc"),
+                    kernel_impl=kernel_impl)
             else:
                 raise ValueError(t)
             # shared params are f32 (boundary-psum dtype rule); keep the

@@ -14,6 +14,16 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+KERNEL_IMPLS = ("reference", "scan", "pallas")
+
+
+def expand_ff_mask(ff_mask: jax.Array, dim: int) -> jax.Array:
+    """Block-level [n_blocks] -> feature-level [dim] pruning mask (no-op if
+    already expanded).  Single home for the expansion rule — swiglu,
+    gelu_mlp and blocks.py all share it."""
+    if ff_mask.shape[0] != dim:
+        ff_mask = jnp.repeat(ff_mask, dim // ff_mask.shape[0])
+    return ff_mask
 
 
 def pin_batch(x: jax.Array) -> jax.Array:
@@ -71,14 +81,76 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 
 
 def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array,
-           ff_mask: Optional[jax.Array] = None) -> jax.Array:
-    """SwiGLU MLP.  ``ff_mask`` [d_ff] zeroes pruned feature blocks (block-
-    structured pruning): masked columns contribute nothing, matching the
-    pruned_matmul kernel's semantics."""
+           ff_mask: Optional[jax.Array] = None, *, impl: str = "scan",
+           interpret: Optional[bool] = None) -> jax.Array:
+    """SwiGLU MLP.  ``ff_mask`` zeroes pruned feature blocks (block-
+    structured pruning) — either block-level [n_blocks] or expanded [d_ff].
+
+    ``impl="pallas"`` routes through the fused block-pruned Pallas SwiGLU
+    (kernels.pruned_matmul): pruned blocks skip MXU tiles in forward AND
+    backward.  The pallas path needs the block-level mask (granularity =
+    d_ff // n_blocks); the dense paths accept either and expand.  Single-
+    token calls (decode) stay dense — padding 1 row to a 128-tile wastes
+    the MXU, mirroring the decode_attention special case."""
+    assert impl in KERNEL_IMPLS, impl
+    d_ff = wi.shape[1]
+    if impl == "pallas" and x.shape[-2] > 1:
+        from repro.kernels.pruned_matmul import pruned_swiglu
+        if ff_mask is None:
+            bmask, bf = jnp.ones((1,), jnp.float32), d_ff
+        else:
+            nb = ff_mask.shape[0]
+            # an expanded [d_ff] mask would pass divisibility with bf=1 —
+            # width-1 "blocks" defeat the MXU tiling; demand block-level
+            assert nb < d_ff and d_ff % nb == 0, (
+                "pallas swiglu needs a block-level ff_mask",
+                ff_mask.shape, d_ff)
+            bmask, bf = ff_mask, d_ff // nb
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return pin_batch(pruned_swiglu(x, wi, wg, wo, bmask, bf=bf,
+                                       interpret=interpret))
     h = pin_batch(jax.nn.silu(x @ wg) * (x @ wi))
     if ff_mask is not None:
-        h = h * ff_mask.astype(h.dtype)
+        h = h * expand_ff_mask(ff_mask, d_ff).astype(h.dtype)
     return pin_batch(h @ wo)
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+             b2: jax.Array, ff_mask: Optional[jax.Array] = None, *,
+             impl: str = "scan",
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Biased GELU MLP (whisper enc/dec FFN) with block-structured pruning.
+
+    Same dispatch contract as ``swiglu``: the dense impls accept a
+    block-level or expanded ``ff_mask``; ``impl="pallas"`` needs the
+    block-level mask and runs both matmuls through the pruned Pallas kernel
+    (mask over "n" for the up-projection, over "k" for the down-projection).
+    The bias lands after the pruned up-projection and pruned columns are
+    re-zeroed before GELU's output enters the down-projection, so kept
+    columns match the dense path exactly."""
+    assert impl in KERNEL_IMPLS, impl
+    d_ff = w1.shape[1]
+    if impl == "pallas" and x.shape[-2] > 1:
+        from repro.kernels.pruned_matmul import pruned_matmul
+        bmask = (jnp.ones((1,), jnp.float32) if ff_mask is None
+                 else ff_mask)
+        nb = bmask.shape[0]
+        assert nb < d_ff and d_ff % nb == 0, (
+            "pallas gelu_mlp needs a block-level ff_mask", bmask.shape,
+            d_ff)
+        bf = d_ff // nb
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        h = pruned_matmul(x, w1, bmask, mask_axis="n", bn=bf,
+                          interpret=interpret) + b1
+        h = jax.nn.gelu(h) * jnp.repeat(bmask, bf).astype(x.dtype)
+        return pruned_matmul(h, w2, bmask, mask_axis="k", bk=bf,
+                             interpret=interpret) + b2
+    h = jax.nn.gelu(x @ w1 + b1)
+    if ff_mask is not None:
+        h = h * expand_ff_mask(ff_mask, d_ff).astype(x.dtype)
+    return h @ w2 + b2
 
 
 # ---------------------------------------------------------------------------
@@ -114,8 +186,16 @@ def attention_reference(q, k, v, *, causal: bool, sliding_window: int = 0,
                            scores, NEG_INF)
     if block_mask is not None:
         bs = block_size
-        m = jnp.repeat(jnp.repeat(block_mask, bs, axis=-2), bs, axis=-1)
-        scores = jnp.where(m[None, :, :sq, :k.shape[1]] > 0, scores, NEG_INF)
+        bm = block_mask if block_mask.ndim == 4 else block_mask[None]
+        m = jnp.repeat(jnp.repeat(bm, bs, axis=-2), bs, axis=-1)
+        sk = k.shape[1]
+        if m.shape[-2] < sq or m.shape[-1] < sk:
+            # trailing partial blocks reuse the last mask row/col (matches
+            # the flash paths' clipped block-id gather)
+            m = jnp.pad(m, ((0, 0), (0, 0),
+                            (0, max(0, sq - m.shape[-2])),
+                            (0, max(0, sk - m.shape[-1]))), mode="edge")
+        scores = jnp.where(m[..., :sq, :sk] > 0, scores, NEG_INF)
     # guard fully-masked rows
     probs = jax.nn.softmax(scores, axis=-1)
     probs = jnp.where(jnp.max(scores, -1, keepdims=True) <= NEG_INF / 2,
@@ -126,16 +206,62 @@ def attention_reference(q, k, v, *, causal: bool, sliding_window: int = 0,
 def flash_attention(q, k, v, *, causal: bool, sliding_window: int = 0,
                     q_offset: int = 0,
                     block_mask: Optional[jax.Array] = None,
-                    kv_block: int = 512) -> jax.Array:
+                    kv_block: int = 512, impl: str = "scan",
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Flash attention with a FLASH BACKWARD (custom VJP): the backward
     recomputes scores block-by-block from (q, k, v, out, lse) instead of
     storing per-block probability matrices — without this, differentiating
     the forward scan materialises the full O(sq·sk) score tensor per layer
     per slot (measured: the dominant memory term of every attention cell).
+
+    ``impl`` selects the inner implementation (DistConfig.kernel_impl):
+      * "reference" — the O(s^2) dense oracle;
+      * "scan"      — the pure-JAX online-softmax scan (this module);
+      * "pallas"    — the block-skipping Pallas kernels with the Pallas
+        flash backward (kernels.block_sparse_attention); masked tiles do
+        no MXU work in forward or backward.  Sliding-window / offset
+        queries aren't expressible as block masks — those fall back to
+        the scan (see DESIGN.md).
     """
+    assert impl in KERNEL_IMPLS, impl
+    if impl == "pallas" and sliding_window == 0 and q_offset == 0:
+        return _pallas_attention(q, k, v, block_mask, causal, kv_block,
+                                 interpret)
+    if impl == "reference":
+        return attention_reference(
+            q, k, v, causal=causal, sliding_window=sliding_window,
+            q_offset=q_offset, block_mask=block_mask, block_size=kv_block)
     out, _ = _flash_vjp(q, k, v, block_mask, causal, sliding_window,
                         q_offset, kv_block)
     return out
+
+
+def _pallas_attention(q, k, v, block_mask, causal, kv_block,
+                      interpret=None):
+    """Route through the Pallas block-sparse kernel (dense = all-ones mask).
+
+    Accepts the model's mask layouts ([h, nqb, nkb] or [b, h|1, nqb, nkb])
+    and broadcasts/edge-extends them to the kernel's [b, hq, nqb, nkb]."""
+    from repro.kernels.block_sparse_attention import block_sparse_attention
+    b, sq, hq, _ = q.shape
+    sk = k.shape[1]
+    block = kv_block if block_mask is not None else min(kv_block, 128)
+    nqb = -(-sq // block)
+    nkb = -(-sk // block)
+    if block_mask is None:
+        bm = jnp.ones((b, hq, nqb, nkb), jnp.float32)
+    else:
+        bm = block_mask if block_mask.ndim == 4 else block_mask[None]
+        # trailing partial blocks reuse the last mask row/col (the scan
+        # path's qb_ids gather clips the same way)
+        qb = jnp.clip(jnp.arange(nqb), 0, bm.shape[2] - 1)
+        kb = jnp.clip(jnp.arange(nkb), 0, bm.shape[3] - 1)
+        bm = bm[:, :, qb][:, :, :, kb]
+        bm = jnp.broadcast_to(bm, (b, hq, nqb, nkb)).astype(jnp.float32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return block_sparse_attention(q, k, v, bm, causal=causal, block_q=block,
+                                  block_k=block, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))

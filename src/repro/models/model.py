@@ -257,7 +257,8 @@ def reference_loss(cfg: ModelConfig, dcfg: DistConfig,
             carry_in = carry
             carry, _, stats, aux = B.apply_block(
                 cfg, dyncfg, "train", p, params["shared"], carry,
-                jnp.int32(tags_np[s, l]), dyn_slot, None, pos)
+                jnp.int32(tags_np[s, l]), dyn_slot, None, pos,
+                kernel_impl=dcfg.kernel_impl)
             if dyncfg.uses_mod:
                 from repro.models.model import _mod_wrap
                 carry, _ = _mod_wrap(cfg, dyncfg, dyn_slot, carry_in, carry)
@@ -349,7 +350,7 @@ def stage_forward(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
         def run(carry):
             out_carry, out_cache, stats, aux = B.apply_block(
                 cfg, dyncfg, mode, p, shared, carry, tag, dyn_slot,
-                cache_slot, pos)
+                cache_slot, pos, kernel_impl=dcfg.kernel_impl)
             extra = jnp.float32(1.0)
             # EE/MoD wrappers only act on real (non-pad) slots
             if dyncfg.uses_mod and mode == "train":
@@ -376,7 +377,8 @@ def stage_forward(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
                 carry_, shared_, dyn_slot_, tag_f, pos_f = op
                 out_carry, _, stats, aux = B.apply_block(
                     cfg, dyncfg, mode, p_, shared_, carry_,
-                    tag_f.astype(jnp.int32), dyn_slot_, None, pos_f)
+                    tag_f.astype(jnp.int32), dyn_slot_, None, pos_f,
+                    kernel_impl=dcfg.kernel_impl)
                 return out_carry, stats, aux
 
             out_carry, stats, aux = B.freezable(frz_fn)(

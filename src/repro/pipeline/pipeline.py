@@ -30,6 +30,22 @@ from repro.models import model as M
 AUX_LOSS_COEF = 0.01
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+    """jax.shard_map compat: on older jax (< jax.shard_map) fall back to
+    jax.experimental.shard_map, fully manual, with check_rep=False
+    (≙ check_vma=False).  Partial-auto (``auto=``) is deliberately NOT used
+    there: it lowers axis_index via PartitionId, which XLA-CPU SPMD rejects.
+    Axes unmentioned by the specs simply replicate — same math, DP/FSDP
+    sharding of the non-manual axes only applies on current jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class PipelineShapes:
     """Concrete global shapes of one pipeline execution."""
@@ -93,8 +109,11 @@ def _make_pin(mesh, dcfg):
             return x
         if x.ndim >= 1 and x.shape[0] % dp == 0 and x.shape[0] >= dp:
             # the constraint must be built on the *context* (abstract) mesh:
-            # inside shard_map 'model' is Manual there, not Auto
-            am = jax.sharding.get_abstract_mesh()
+            # inside shard_map 'model' is Manual there, not Auto.  Older jax
+            # has no abstract-mesh tracking — the pin is a no-op there.
+            am = getattr(jax.sharding, "get_abstract_mesh", lambda: None)()
+            if am is None:
+                return x
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(am, P(spec_axes,
                                        *([None] * (x.ndim - 1)))))
@@ -141,7 +160,7 @@ def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
         dyn_s = _stage_slice(dyn)
         shared = params["shared"]
         idx = jax.lax.axis_index("model")
-        n = jax.lax.axis_size("model")
+        n = mesh.shape["model"]      # static axis extent (version-portable)
         T = shapes.num_micro + S - 1
         pos = jnp.arange(shapes.seq_total)
         depth_base = assignment["depth_base"][0]
@@ -277,9 +296,9 @@ def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
         P("model"),       # dyn arrays lead with stage axis
         P(),              # batch replicated over model (sharded over data)
     )
-    return jax.shard_map(
+    return _shard_map(
         pipe, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(), P("model")), axis_names={"model"}, check_vma=False)
+        out_specs=(P(), P("model")), axis_names={"model"})
 
 
 # ---------------------------------------------------------------------------
@@ -305,7 +324,7 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
         cache_s = _stage_slice(cache)           # {field: [L_max, m, B, ...]}
         shared = params["shared"]
         idx = jax.lax.axis_index("model")
-        n = jax.lax.axis_size("model")
+        n = mesh.shape["model"]      # static axis extent (version-portable)
         m = shapes.num_micro
         T = m + S - 1
 
@@ -389,10 +408,9 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
          "stages": P("model"),
          **({"head": P()} if not cfg.tie_embeddings else {})},
         P("model"), P("model"), P("model"), P(), P())
-    return jax.shard_map(
+    return _shard_map(
         pipe, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(), P(), P("model")), axis_names={"model"},
-        check_vma=False)
+        out_specs=(P(), P(), P("model")), axis_names={"model"})
 
 
 # ---------------------------------------------------------------------------
@@ -414,7 +432,7 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
         cache_s = _stage_slice(cache)
         shared = params["shared"]
         idx = jax.lax.axis_index("model")
-        n = jax.lax.axis_size("model")
+        n = mesh.shape["model"]      # static axis extent (version-portable)
         m = shapes.num_micro
         T = m + S - 1
         pos = jnp.arange(shapes.seq_total)
@@ -491,6 +509,6 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
          "stages": P("model"),
          **({"head": P()} if not cfg.tie_embeddings else {})},
         P("model"), P("model"), P("model"), P())
-    return jax.shard_map(
+    return _shard_map(
         pipe, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(), P("model")), axis_names={"model"}, check_vma=False)
+        out_specs=(P(), P("model")), axis_names={"model"})

@@ -1,0 +1,56 @@
+"""Minimal deterministic stand-in for the hypothesis API used by this repo.
+
+The real dependency is declared in pyproject.toml; containers without it
+still run the property tests against a fixed seeded sample sweep instead of
+erroring at collection.  Only the strategies this test-suite uses are
+implemented (lists/floats/integers)."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:                                    # noqa: N801  (st alias)
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.randint(min_value,
+                                                     max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                       max_value)))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.randint(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+def settings(max_examples=20, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # zero-arg wrapper (like real hypothesis): the drawn params must not
+        # look like pytest fixtures
+        def run():
+            rng = np.random.RandomState(0)
+            for _ in range(getattr(run, "_max_examples", 20)):
+                fn(**{k: s.draw(rng) for k, s in strats.items()})
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco

@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # dep gated: fixed-seed sweep instead of shrinking
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.balancer import (balance, diffusion_balance, imbalance,
                                  partition_balance, stage_loads)

@@ -1,6 +1,9 @@
 """Re-packing tests (paper §3.4, Algorithm 2)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # dep gated: fixed-seed sweep instead of shrinking
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.repack import repack_adjacent, repack_first_fit
 

@@ -82,16 +82,17 @@ def test_compressed_psum_single_axis():
     """psum over a singleton axis == identity recovery (exactness check of
     the codec inside the collective wrapper)."""
     from repro.runtime.compression import compressed_psum
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _auto_mesh
+    mesh = _auto_mesh((1,), ("d",))
     g = jnp.asarray(np.random.RandomState(2).randn(256), jnp.float32)
 
     def f(x):
         red, err = compressed_psum(x, "d", method="int8")
         return red, err
 
-    red, err = jax.jit(jax.shard_map(
+    from repro.pipeline.pipeline import _shard_map
+    red, err = jax.jit(_shard_map(
         f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-        out_specs=jax.sharding.PartitionSpec(), check_vma=False))(g)
+        out_specs=jax.sharding.PartitionSpec(), axis_names={"d"}))(g)
     np.testing.assert_allclose(np.asarray(red + err), np.asarray(g),
                                atol=1e-5)

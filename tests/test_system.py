@@ -8,13 +8,27 @@ These are the heavyweight integration gates:
   * mini multi-pod dry-run (AOT lower/compile on a (2,2,2) mesh with the
     production sharding rules — same code path as the 512-chip dry-run).
 """
+import jax
 import pytest
 
 from conftest import run_in_subprocess
 
+# grad-of-shard_map with MoE scalar residuals trips an upstream _SpecError
+# in jax<0.5's experimental shard_map transpose (its own error text says to
+# file a jax issue); the modern jax.shard_map path is fine.  Dense archs
+# grad correctly on both.
+requires_modern_shard_map = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="MoE grad through jax.experimental.shard_map (jax<0.5) hits an "
+           "upstream _SpecError; needs jax.shard_map")
+
 
 @pytest.mark.slow
-def test_pipeline_equals_reference_dense_and_moe():
+@pytest.mark.parametrize("arch", [
+    "smollm-360m",
+    pytest.param("mixtral-8x7b", marks=requires_modern_shard_map),
+])
+def test_pipeline_equals_reference(arch):
     out = run_in_subprocess("""
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs import get_config, reduced_config, DistConfig
@@ -22,9 +36,9 @@ from repro.dynamics import DynamicsConfig
 from repro.models import model as M
 from repro.pipeline.pipeline import PipelineShapes, build_loss_fn
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-for arch in ("smollm-360m", "mixtral-8x7b"):
+from repro.launch.mesh import _auto_mesh
+mesh = _auto_mesh((2, 4), ("data", "model"))
+for arch in (__ARCH__,):
     cfg = reduced_config(get_config(arch), num_layers=6)
     dcfg = DistConfig(num_stages=4, slot_slack=1, remat="none",
                       param_dtype="float32")
@@ -53,7 +67,7 @@ for arch in ("smollm-360m", "mixtral-8x7b"):
     assert np.isfinite(gs) and gs > 0
     print(arch, "OK", float(loss))
 print("PASS")
-""", devices=8, timeout=900)
+""".replace("__ARCH__", repr(arch)), devices=8, timeout=900)
     assert "PASS" in out
 
 
@@ -69,8 +83,8 @@ from repro.models import model as M
 from repro.core.controller import ControllerConfig, DynMoController
 from repro.pipeline.pipeline import PipelineShapes, build_loss_fn
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _auto_mesh
+mesh = _auto_mesh((2, 4), ("data", "model"))
 cfg = reduced_config(get_config("smollm-360m"), num_layers=8)
 dcfg = DistConfig(num_stages=4, slot_slack=3, remat="none",
                   param_dtype="float32")
@@ -111,8 +125,8 @@ from repro.models import blocks as B
 from repro.pipeline.pipeline import (PipelineShapes, build_decode_fn,
                                      build_prefill_fn)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _auto_mesh
+mesh = _auto_mesh((2, 4), ("data", "model"))
 cfg = reduced_config(get_config("smollm-360m"), num_layers=6)
 dcfg = DistConfig(num_stages=4, slot_slack=1, remat="none",
                   param_dtype="float32")
@@ -169,6 +183,7 @@ print("PASS")
 
 
 @pytest.mark.slow
+@requires_modern_shard_map       # reduced mixtral: MoE grad, see above
 def test_mini_multipod_dryrun():
     out = run_in_subprocess("""
 import jax, jax.numpy as jnp
@@ -181,8 +196,8 @@ from repro.launch.train import make_train_step
 from repro.optim.optimizers import OptConfig, make_optimizer
 from repro.pipeline.pipeline import PipelineShapes
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import _auto_mesh
+mesh = _auto_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = reduced_config(get_config("mixtral-8x7b"), num_layers=4, d_model=64,
                      num_heads=4, num_kv_heads=2, d_ff=256)
 dcfg = DistConfig(num_stages=2, slot_slack=1, remat="full",
@@ -218,6 +233,28 @@ colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
 assert "collective-permute" in colls   # the pipeline ring exists
 print("PASS", sorted(set(colls)))
 """, devices=8, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dynamism", ["sparse_attention", "pruning"])
+def test_training_loop_pallas_kernels(dynamism):
+    """End-to-end pipelined training through kernel_impl="pallas": the
+    block-skipping Pallas kernels (interpret mode on CPU) carry the real
+    forward AND backward for attention + SwiGLU under both dynamism schemes.
+    sparse_block is shrunk so the hash mask actually fires at toy seq."""
+    out = run_in_subprocess(f"""
+from repro.launch.train import run_training
+out = run_training("smollm-360m", steps=6, stages=2, layers=4, d_model=64,
+                   seq=32, num_micro=2, mb_global=2,
+                   dynamism={dynamism!r}, kernel_impl="pallas",
+                   dyn_overrides=dict(sparse_block=16, sparse_nbuckets=4),
+                   rebalance_every=3, log_every=100)
+import math
+assert all(math.isfinite(l) for l in out["losses"]), out["losses"]
+assert out["losses"][-1] < out["losses"][0] + 0.5, out["losses"]
+print("PASS", out["losses"][0], "->", out["losses"][-1])
+""", devices=2, timeout=900)
     assert "PASS" in out
 
 
