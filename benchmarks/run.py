@@ -19,8 +19,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_idleness, bench_kernels, bench_overhead,
-                            bench_repack, bench_roofline, bench_throughput)
+    from benchmarks import (bench_elastic, bench_idleness, bench_kernels,
+                            bench_overhead, bench_repack, bench_roofline,
+                            bench_throughput)
     benches = {
         "idleness": bench_idleness.main,        # Fig. 1
         "throughput": bench_throughput.main,    # Fig. 3 (+ bubble ratios)
@@ -28,6 +29,7 @@ def main() -> None:
         "overhead": bench_overhead.main,        # Fig. 4 right
         "kernels": bench_kernels.main,          # §4.2.2 / §4.2.4
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
+        "elastic": bench_elastic.main,          # §3.4 live shrink (engine)
     }
     names = (args.only.split(",") if args.only else list(benches))
     for name in names:

@@ -1,13 +1,20 @@
-"""Fault tolerance + elasticity walkthrough (paper §3.4.2):
+"""Fault tolerance + elasticity walkthrough (paper §3.4).
 
-1. train on 4 pipeline stages with checkpointing;
-2. simulate losing half the workers (or re-packing freeing them);
-3. elastic-restart the SAME model on 2 stages from the checkpoint;
-4. verify the loss trajectory continues seamlessly;
-5. grow back to 4 stages when workers return.
+Two modes:
 
-    PYTHONPATH=src python examples/elastic_restart.py
+  --mode live (default): the ElasticEngine path — shrink 4→2 stages and
+    grow back IN PROCESS, no restart: state is flattened to global layer
+    order, re-split, and placed onto a submesh over the surviving devices;
+    released workers go back to the WorkerPool and are granted back later.
+
+  --mode restart: the checkpoint-coordinated fallback (§3.4.2) — required
+    when the job manager must actually reschedule processes (multi-node
+    failures): train, checkpoint, "lose" workers, elastic-restore onto the
+    smaller mesh, continue, grow back on recovery.
+
+    PYTHONPATH=src python examples/elastic_restart.py [--mode live|restart]
 """
+import argparse
 import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
@@ -20,25 +27,84 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 
-def main():
+def _setup():
+    from repro.configs import get_config, reduced_config
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                         d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                         vocab_size=512)
+    return cfg, 2, 2, 32       # cfg, micro, mbg, seq
+
+
+def main_live():
+    """Engine mode: one process, three worlds, zero restarts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import DistConfig
+    from repro.data.loader import DataConfig, make_loader
+    from repro.dynamics.config import DynamicsConfig
+    from repro.launch.engine import ElasticEngine
+    from repro.pipeline.pipeline import PipelineShapes
+
+    cfg, micro, mbg, seq = _setup()
+    dcfg = DistConfig(num_stages=4, slot_slack=3, remat="none",
+                      param_dtype="float32")
+    engine = ElasticEngine(cfg, dcfg, DynamicsConfig(),
+                           PipelineShapes(micro, mbg, seq), data=1)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    loader = make_loader(cfg, DataConfig(micro, mbg, seq))
+    it = iter(loader)
+
+    def train_some(n):
+        losses = []
+        for _ in range(n):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            loss, _, _ = engine.step(state, batch, jnp.float32(3e-4))
+            losses.append(float(loss))
+        return losses
+
+    print("phase 1: 4-stage training")
+    losses1 = train_some(6)
+    print(f"  losses: {[f'{l:.3f}' for l in losses1]}")
+
+    print("phase 2: repack decision -> LIVE shrink to 2 stages "
+          "(same process, no checkpoint)")
+    state = engine.shrink(state, 2, step=6)
+    rz = engine.resizes[-1]
+    print(f"  released workers {rz.workers} in {rz.seconds*1e3:.0f}ms; "
+          f"pool active={engine.pool.num_active}; "
+          f"schedule {rz.ticks_before}->{rz.ticks_after} ticks")
+    losses2 = train_some(6)
+    print(f"  losses: {[f'{l:.3f}' for l in losses2]}")
+    assert losses2[0] < losses1[0], "training must continue, not restart"
+
+    print("phase 3: workers recovered -> LIVE grow back to 4 stages")
+    state = engine.grow(state, 2, step=12)
+    rz = engine.resizes[-1]
+    print(f"  granted workers {rz.workers}; "
+          f"pool active={engine.pool.num_active}")
+    losses3 = train_some(6)
+    print(f"  losses: {[f'{l:.3f}' for l in losses3]}")
+    print(f"live shrink + regrow completed; loss descended "
+          f"{losses1[0]:.3f} -> {losses3[-1]:.3f}; "
+          f"pool log: {engine.pool.log}")
+
+
+def main_restart():
+    """Checkpoint-coordinated fallback (§3.4.2) — the restart path."""
     import jax
     import jax.numpy as jnp
     from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
     from repro.checkpoint.elastic import elastic_restore
-    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.configs import DistConfig
     from repro.data.loader import DataConfig, make_loader
     from repro.dynamics.config import DynamicsConfig
     from repro.launch.mesh import make_host_mesh
     from repro.launch.train import make_train_step
     from repro.models import model as M
-    from repro.optim.optimizers import OptConfig, make_optimizer
     from repro.pipeline.pipeline import PipelineShapes
-    from repro.runtime.fault_tolerance import HeartbeatMonitor, WorkerPool
+    from repro.runtime.fault_tolerance import WorkerPool
 
-    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
-                         d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
-                         vocab_size=512)
-    micro, mbg, seq = 2, 2, 32
+    cfg, micro, mbg, seq = _setup()
     ckdir = tempfile.mkdtemp(prefix="dynmo_elastic_")
     pool = WorkerPool(4)
 
@@ -117,6 +183,13 @@ def main():
     print(f"  losses: {[f'{l:.3f}' for l in losses3]}")
     print("elastic shrink + regrow completed; loss descended "
           f"{losses1[0]:.3f} -> {losses3[-1]:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="live", choices=["live", "restart"])
+    args = ap.parse_args()
+    (main_live if args.mode == "live" else main_restart)()
 
 
 if __name__ == "__main__":

@@ -71,11 +71,17 @@ def main():
     opt = init_opt(params)
     step_jit = jax.jit(train_step, donate_argnums=(0, 1))
 
+    # finite per-worker budget (1.1× the unpruned per-stage footprint):
+    # consolidation plans fire only once pruning actually shrinks memory
+    from repro.core.cost_model import stage_memory_budget
     ctrl = DynMoController(
         cfg, dcfg, dyncfg,
         ControllerConfig(method="diffusion", cost_by="time",
                          rebalance_every=20, repack=True,
-                         repack_max_mem=float("inf"), repack_target=2))
+                         repack_max_mem=stage_memory_budget(
+                             cfg, micro * mbg * seq, seq,
+                             dcfg.bytes_per_param, stages, cap_factor=1.1),
+                         repack_target=2))
     ckdir = tempfile.mkdtemp(prefix="dynmo_ck_")
     ckpt = CheckpointManager(ckdir, every=max(20, args.steps // 4))
     loader = make_loader(cfg, DataConfig(micro, mbg, seq))
@@ -101,16 +107,29 @@ def main():
                 print(f"  [prune] target sparsity {sp:.2f}; "
                       f"kept blocks density {dens:.2f}")
 
-            stats_np = jax.tree.map(np.asarray, stats)
-            params, opt, dyn, new_assignment, _, ev = ctrl.step(
-                step + 1, stats_np, np.asarray(assignment["tags"]),
-                micro, tokens_step, seq, params, opt, dyn)
-            if new_assignment is not None:
-                assignment = new_assignment
-                print(f"  [dynmo] rebalanced -> {ctrl.lps} "
-                      f"(imb {ev.imbalance_before:.2f} -> "
-                      f"{ev.imbalance_after:.2f}, active workers "
-                      f"{ev.active_workers})")
+            if ctrl.cadence(step + 1):
+                # stats sync only on controller cadence (§3.3.1)
+                from repro.launch.engine import fold_stats
+                stats_np = fold_stats(stats, stages)
+                params, opt, dyn, new_assignment, _, ev = ctrl.step(
+                    step + 1, stats_np, np.asarray(assignment["tags"]),
+                    micro, tokens_step, seq, params, opt, dyn)
+                if new_assignment is not None:
+                    assignment = new_assignment
+                    print(f"  [dynmo] rebalanced -> {ctrl.lps} "
+                          f"(imb {ev.imbalance_before:.2f} -> "
+                          f"{ev.imbalance_after:.2f}, active workers "
+                          f"{ev.active_workers})")
+                plan = ctrl.take_resize()
+                if plan is not None:
+                    print(f"  [repack] plan: consolidate onto "
+                          f"{plan.target_stages} workers "
+                          f"({plan.policy}); the live path "
+                          f"(repro.launch.train --repack) executes this "
+                          f"in-process via the ElasticEngine")
+                    # advisory-only demo: report once, then keep ordinary
+                    # rebalancing running (a standing plan supersedes it)
+                    ctrl.ccfg.repack = False
             ckpt.maybe_save(step, params, opt, dyn, ctrl.lps)
             if step % 20 == 0:
                 print(f"step {step:4d} loss {float(loss):.4f} "

@@ -9,41 +9,41 @@ additional overhead for resharding" (paper).  Works for both shrink
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs.base import DistConfig, ModelConfig
 from repro.models.model import make_assignment, uniform_boundaries
 
 
+def resplit_indices(old_lps: Sequence[int], new_lps: Sequence[int],
+                    new_L_max: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side plan: for each destination slot of the new layout, the
+    (src_stage, src_slot) it gathers from, plus a validity mask for PAD
+    slots.  Tiny (S×L_max ints) — the *data* never round-trips.
+
+    The index-map math is migration.build_plan's (it already supports a
+    different source/destination stage count); this adapter only names the
+    cross-stage-count use."""
+    from repro.core.migration import build_plan
+    plan = build_plan(old_lps, new_lps, new_L_max)
+    return plan.src_stage, plan.src_slot, plan.valid
+
+
 def _resplit_stage_tree(tree, old_lps: Sequence[int],
                         new_lps: Sequence[int], new_L_max: int):
     """Re-split [S_old, L_old, ...] stacked arrays to [S_new, L_new, ...]
-    along global layer order."""
-    old_lps = list(map(int, old_lps))
-    new_lps = list(map(int, new_lps))
-    assert sum(old_lps) == sum(new_lps)
+    along global layer order.
 
-    def one(a):
-        a = np.asarray(a)
-        S_old, L_old = a.shape[0], a.shape[1]
-        layers = []
-        for s, n in enumerate(old_lps):
-            for l in range(n):
-                layers.append(a[s, l])
-        out = np.zeros((len(new_lps), new_L_max) + a.shape[2:], a.dtype)
-        g = 0
-        for s, n in enumerate(new_lps):
-            for l in range(n):
-                out[s, l] = layers[g]
-                g += 1
-        return jnp.asarray(out)
-
-    return jax.tree.map(one, tree)
+    Device-side: the index map is planned on host (a few hundred ints) and
+    the state moves via one gather per leaf (migration.apply_plan) — no
+    numpy round-trip of the tensors, so a live shrink/grow never syncs
+    weights to host memory.  PAD destination slots are zeroed (their tags
+    mark them inactive)."""
+    from repro.core.migration import apply_plan, build_plan
+    return apply_plan(tree, build_plan(old_lps, new_lps, new_L_max))
 
 
 def elastic_restore(cfg: ModelConfig, old_dcfg: DistConfig,
@@ -68,15 +68,8 @@ def elastic_restore(cfg: ModelConfig, old_dcfg: DistConfig,
 
 def _reshape_opt(opt_state, old_lps, new_lps, L_new):
     """Optimizer moments mirror the param tree: reshape the stages subtree,
-    keep everything else (count, non-stage moments)."""
-    def walk(node):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                if k == "stages":
-                    out[k] = _resplit_stage_tree(v, old_lps, new_lps, L_new)
-                else:
-                    out[k] = walk(v)
-            return out
-        return node
-    return walk(opt_state)
+    keep everything else (count, non-stage moments) — migration's opt walk
+    with the cross-stage-count plan."""
+    from repro.core.migration import _apply_plan_to_opt, build_plan
+    return _apply_plan_to_opt(opt_state,
+                              build_plan(old_lps, new_lps, L_new))

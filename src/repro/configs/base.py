@@ -194,6 +194,14 @@ SHAPES: Dict[str, ShapeConfig] = {
 }
 
 
+# bytes per element for every param dtype the trainer supports; repack memory
+# budgets and profiler byte vectors must use the *configured* dtype, not a
+# hard-coded bf16 assumption (the CLI trainer runs float32)
+DTYPE_BYTES: Dict[str, int] = {
+    "float32": 4, "bfloat16": 2, "float16": 2, "float64": 8,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
     """Parallelism layout knobs."""
@@ -225,6 +233,10 @@ class DistConfig:
     @property
     def num_slots(self) -> int:
         raise NotImplementedError("use slots_for(model_cfg)")
+
+    @property
+    def bytes_per_param(self) -> int:
+        return DTYPE_BYTES.get(self.param_dtype, 2)
 
     def slots_for(self, mc: ModelConfig) -> int:
         return math.ceil(mc.total_blocks() / self.num_stages) + self.slot_slack

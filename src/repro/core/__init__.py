@@ -4,9 +4,10 @@ discrete-event pipeline simulator, and the autonomous controller."""
 from repro.core.balancer import (BalanceResult, balance, diffusion_balance,
                                  imbalance, partition_balance, stage_loads)
 from repro.core.controller import (ControllerConfig, ControllerEvent,
-                                   DynMoController)
+                                   DynMoController, ResizePlan)
 from repro.core.migration import MigrationPlan, apply_plan, build_plan, migrate
-from repro.core.repack import RepackPlan, repack_adjacent, repack_first_fit
+from repro.core.repack import (RepackPlan, repack, repack_adjacent,
+                               repack_first_fit)
 from repro.core.simulator import (SimResult, TrainSimConfig, TrainSimResult,
                                   simulate_pipeline, simulate_training,
                                   stage_times_from_layers)
@@ -14,8 +15,9 @@ from repro.core.simulator import (SimResult, TrainSimConfig, TrainSimResult,
 __all__ = [
     "BalanceResult", "balance", "diffusion_balance", "imbalance",
     "partition_balance", "stage_loads", "ControllerConfig", "ControllerEvent",
-    "DynMoController", "MigrationPlan", "apply_plan", "build_plan", "migrate",
-    "RepackPlan", "repack_adjacent", "repack_first_fit", "SimResult",
+    "DynMoController", "ResizePlan", "MigrationPlan", "apply_plan",
+    "build_plan", "migrate",
+    "RepackPlan", "repack", "repack_adjacent", "repack_first_fit", "SimResult",
     "TrainSimConfig", "TrainSimResult", "simulate_pipeline",
     "simulate_training", "stage_times_from_layers",
 ]

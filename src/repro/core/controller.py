@@ -21,6 +21,7 @@ from repro.configs.base import DistConfig, ModelConfig
 from repro.core import balancer as bal
 from repro.core import migration as mig
 from repro.core import repack as rp
+from repro.core.cost_model import MEM_STATE_FACTOR
 from repro.core.profiler import LayerProfile, profile_from_stats
 from repro.dynamics.config import DynamicsConfig
 
@@ -32,6 +33,7 @@ class ControllerConfig:
     rebalance_every: int = 1
     imbalance_threshold: float = 0.05  # skip rebalance below this ΔL
     repack: bool = False
+    repack_policy: str = "adjacent"  # adjacent | first_fit
     repack_max_mem: float = float("inf")
     repack_target: int = 1
     mem_cap: float = float("inf")
@@ -48,6 +50,28 @@ class ControllerEvent:
     rebalanced: bool
 
 
+@dataclasses.dataclass
+class ResizePlan:
+    """A repack decision the elastic runtime can act on *live*: rebuild the
+    pipeline onto ``target_stages`` workers and release the rest back to the
+    job manager (paper §3.4, Alg. 2).  ``layers_per_stage`` is the compacted
+    per-surviving-stage layer count in pipeline order; the engine may re-split
+    uniformly if a count exceeds the shrunk world's slot capacity.
+
+    ``released_stages`` names the logical stages the packing emptied (for
+    logging/tests); the actually released WORKER ids are decided by the
+    engine, which re-splits contiguously onto the stage→worker map's prefix
+    and releases the tail — see ``ResizeEvent.workers`` for the ids handed
+    to the pool.  ``mem_per_stage`` is the memory of the CONTIGUOUS groups
+    the engine will execute (checked against the budget at decision time)."""
+    iteration: int
+    target_stages: int
+    layers_per_stage: List[int]     # compact (no zero shadow stages)
+    released_stages: List[int]      # stage indices deactivated by the plan
+    policy: str
+    mem_per_stage: List[float]      # memory of the executed contiguous split
+
+
 class DynMoController:
     """Stateful controller owning the current assignment."""
 
@@ -62,11 +86,33 @@ class DynMoController:
         self.pattern = cfg.block_pattern()
         self.events: List[ControllerEvent] = []
         self.active_workers = dcfg.num_stages
+        self.pending_resize: Optional[ResizePlan] = None
+
+    # -- elastic runtime hooks --------------------------------------------
+    def cadence(self, iteration: int) -> bool:
+        """Whether the controller acts this iteration.  The training loop
+        gates its device→host stats sync on this (paper §3.3.1: decision
+        latency off the critical path)."""
+        return iteration % max(1, self.ccfg.rebalance_every) == 0
+
+    def take_resize(self) -> Optional[ResizePlan]:
+        """Consume the pending repack decision (engine shrink trigger)."""
+        plan, self.pending_resize = self.pending_resize, None
+        return plan
+
+    def rebind(self, dcfg: DistConfig, layers_per_stage: Sequence[int]):
+        """Re-anchor the controller after the engine rebuilt the execution
+        world (shrink/grow): new stage count, new split."""
+        self.dcfg = dcfg
+        self.lps = list(layers_per_stage)
+        self.active_workers = dcfg.num_stages
+        self.pending_resize = None
 
     # -- decision ----------------------------------------------------------
     def decide(self, profile: LayerProfile, iteration: int
                ) -> Tuple[Optional[List[int]], ControllerEvent]:
         t0 = time.perf_counter()
+        self.pending_resize = None      # stale unconsumed plans don't linger
         costs = (profile.time_per_layer if self.ccfg.cost_by == "time"
                  else profile.param_bytes)
         loads = bal.stage_loads(costs, self.lps)
@@ -77,24 +123,59 @@ class DynMoController:
             res = bal.balance(
                 self.ccfg.method, costs, self.dcfg.num_stages,
                 max_slots=self.dcfg.slots_for(self.cfg),
-                mem=profile.param_bytes * 5.0, mem_cap=self.ccfg.mem_cap,
+                mem=profile.param_bytes * MEM_STATE_FACTOR,
+                mem_cap=self.ccfg.mem_cap,
                 init=self.lps if self.ccfg.method == "diffusion" else None)
             if res.imbalance < imb_before - 1e-9:
                 new_lps = res.layers_per_stage
                 imb_after = res.imbalance
-        if new_lps is not None and self.ccfg.repack:
-            mem_stage = bal.stage_loads(profile.param_bytes * 5.0, new_lps)
-            plan = rp.repack_adjacent(mem_stage, new_lps,
-                                      self.ccfg.repack_max_mem,
-                                      self.ccfg.repack_target,
-                                      max_layers=self.dcfg.slots_for(
-                                          self.cfg))
-            new_lps = plan.layers_per_stage
-            self.active_workers = plan.num_active
+        if self.ccfg.repack:
+            # evaluated every cadence, not only after a rebalance: uniform
+            # dynamism (e.g. global pruning) keeps the split balanced while
+            # memory still shrinks — consolidation must fire regardless.
+            cand = list(new_lps) if new_lps is not None else list(self.lps)
+            mem_layers = profile.param_bytes * MEM_STATE_FACTOR
+            mem_stage = bal.stage_loads(mem_layers, cand)
+            # max_layers: counts bounded by the CURRENT world's slot
+            # capacity, which every smaller world's capacity dominates
+            # (slots_for grows as S shrinks) — the engine never has to
+            # silently discard the plan's split as over-capacity
+            plan = rp.repack(self.ccfg.repack_policy, mem_stage, cand,
+                             self.ccfg.repack_max_mem,
+                             self.ccfg.repack_target,
+                             max_layers=self.dcfg.slots_for(self.cfg))
+            if plan.num_active < len(cand):
+                compact = [plan.layers_per_stage[s] for s in range(len(cand))
+                           if plan.active_workers[s]]
+                # the engine executes the counts as a CONTIGUOUS split, which
+                # for first_fit can group different layers than the packing
+                # did — re-check the actual placement against the budget (a
+                # group no heavier than today's worst stage is never a
+                # regression even above the cap)
+                contiguous_mem = bal.stage_loads(mem_layers, compact)
+                limit = max(self.ccfg.repack_max_mem, max(mem_stage))
+                if all(m < limit for m in contiguous_mem):
+                    self.pending_resize = ResizePlan(
+                        iteration=iteration,
+                        target_stages=plan.num_active,
+                        layers_per_stage=compact,
+                        released_stages=[s for s in range(len(cand))
+                                         if not plan.active_workers[s]],
+                        policy=self.ccfg.repack_policy,
+                        mem_per_stage=[float(m) for m in contiguous_mem])
+                    # the resize supersedes in-mesh migration: the engine's
+                    # re-split moves every layer anyway, so applying a
+                    # migration first would be double device data movement
+                    # (and the event honestly reports that no in-mesh
+                    # rebalance happened)
+                    new_lps = None
+                    imb_after = imb_before
         moved = 0
         if new_lps is not None:
             moved = mig.build_plan(self.lps, new_lps,
                                    self.dcfg.slots_for(self.cfg)).moved_layers
+        # active_workers reports the CURRENT world — a pending ResizePlan is
+        # only a decision until the engine executes it and calls rebind()
         ev = ControllerEvent(
             iteration=iteration, imbalance_before=imb_before,
             imbalance_after=imb_after, moved_layers=moved,
@@ -121,10 +202,12 @@ class DynMoController:
              tags: np.ndarray, num_micro: int, tokens: int, seq: int,
              params, opt_state, dyn, cache=None, frozen=None):
         """Full controller step: profile → decide → (maybe) migrate."""
-        if iteration % max(1, self.ccfg.rebalance_every):
+        if not self.cadence(iteration):
             return params, opt_state, dyn, None, cache, None
         profile = profile_from_stats(self.cfg, stats, tags, num_micro,
-                                     tokens, seq, frozen=frozen)
+                                     tokens, seq, frozen=frozen,
+                                     bytes_per_param=self.dcfg
+                                     .bytes_per_param)
         new_lps, ev = self.decide(profile, iteration)
         if new_lps is None:
             return params, opt_state, dyn, None, cache, ev

@@ -140,6 +140,24 @@ def model_flops(cfg: ModelConfig, tokens: int, train: bool = True) -> float:
     return (6.0 if train else 2.0) * n * tokens
 
 
+# resident bytes per param byte: weights + grads + 2 Adam moments + working
+# set; single source for every repack memory estimate (profiler, controller,
+# trainer budget) — change it HERE, not at a call site
+MEM_STATE_FACTOR = 5.0
+
+
+def stage_memory_budget(cfg: ModelConfig, tokens: int, seq: int,
+                        bytes_per_param: float, num_stages: int,
+                        cap_factor: float = 1.0) -> float:
+    """Per-worker memory budget: ``cap_factor`` × the UNPRUNED per-stage
+    footprint (params + optimizer state) under a uniform split — the repack
+    trigger the trainer hands the controller."""
+    pb = cost_vector(cfg, tokens, seq, None, by="param") \
+        * float(bytes_per_param)
+    return float(cap_factor) * float(pb.sum()) * MEM_STATE_FACTOR \
+        / max(1, num_stages)
+
+
 def cost_vector(cfg: ModelConfig, tokens: int, seq: int,
                 dyn_states: Optional[Sequence[LayerDynState]] = None,
                 by: str = "time") -> np.ndarray:

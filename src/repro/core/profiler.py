@@ -18,7 +18,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import BLOCK_PAD, ModelConfig
-from repro.core.cost_model import LayerDynState, cost_vector
+from repro.core.cost_model import (LayerDynState, MEM_STATE_FACTOR,
+                                   cost_vector)
 
 
 @dataclasses.dataclass
@@ -33,9 +34,14 @@ class LayerProfile:
 def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
                        tags: np.ndarray, num_micro: int, tokens: int,
                        seq: int, dyn_ff: Optional[np.ndarray] = None,
-                       frozen: Optional[np.ndarray] = None) -> LayerProfile:
+                       frozen: Optional[np.ndarray] = None,
+                       bytes_per_param: float = 2.0) -> LayerProfile:
     """Fold the pipeline's per-slot stats [S, L_max, ...] into per-layer
-    DynStates + cost-model times, in global layer order."""
+    DynStates + cost-model times, in global layer order.
+
+    ``bytes_per_param`` must match the trainer's param dtype
+    (``DistConfig.bytes_per_param``) — repack memory budgets are computed
+    from these byte vectors."""
     S, L_max = tags.shape
     states: List[LayerDynState] = []
     order: List[int] = []
@@ -62,12 +68,13 @@ def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
             states.append(ds)
             order.append(tags[s, l])
     times = cost_vector(cfg, tokens, seq, states, by="time")
-    params = cost_vector(cfg, tokens, seq, states, by="param") * 2.0  # bytes
+    params = cost_vector(cfg, tokens, seq, states,
+                         by="param") * float(bytes_per_param)
     mem = np.zeros(S)
     i = 0
     for s in range(S):
         n = int(np.sum(tags[s] != BLOCK_PAD))
-        mem[s] = params[i:i + n].sum() * 5.0    # weights + grads + 2 moments
+        mem[s] = params[i:i + n].sum() * MEM_STATE_FACTOR
         i += n
     return LayerProfile(times, params, mem, states)
 

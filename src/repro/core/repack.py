@@ -28,11 +28,12 @@ class RepackPlan:
 
 
 def repack_first_fit(mem_usage: Sequence[float], num_layers: Sequence[int],
-                     max_mem: float, target_num_workers: int = 1
-                     ) -> RepackPlan:
+                     max_mem: float, target_num_workers: int = 1,
+                     max_layers: int = 10 ** 9) -> RepackPlan:
     """Algorithm 2 (faithful): iterate worker pairs (src, dst>src); if their
     combined memory fits one worker's budget and we are still above the
-    target count, migrate all of src's layers to dst and deactivate src."""
+    target count, migrate all of src's layers to dst and deactivate src.
+    ``max_layers`` bounds a worker's slot capacity (L_max)."""
     mem = list(map(float, mem_usage))
     nl = list(map(int, num_layers))
     n = len(mem)
@@ -46,7 +47,8 @@ def repack_first_fit(mem_usage: Sequence[float], num_layers: Sequence[int],
                 continue
             if (mem[src] + mem[dst] < max_mem
                     and sum(active) > target_num_workers
-                    and nl[src] > 0):
+                    and nl[src] > 0
+                    and nl[src] + nl[dst] <= max_layers):
                 active[src] = 0
                 for lyr in range(nl[src]):
                     transfers.append((src, dst, lyr))
@@ -90,3 +92,23 @@ def repack_adjacent(mem_usage: Sequence[float], num_layers: Sequence[int],
                 changed = True
                 break
     return RepackPlan(transfers, active, mem, nl)
+
+
+REPACK_POLICIES = {
+    "first_fit": repack_first_fit,   # Algorithm 2 as written
+    "adjacent": repack_adjacent,     # order-preserving variant
+}
+
+
+def repack(policy: str, mem_usage: Sequence[float],
+           num_layers: Sequence[int], max_mem: float,
+           target_num_workers: int = 1,
+           max_layers: int = 10 ** 9) -> RepackPlan:
+    """Policy-dispatched consolidation; the controller selects via
+    ``ControllerConfig.repack_policy``."""
+    try:
+        fn = REPACK_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown repack policy {policy!r}; have {sorted(REPACK_POLICIES)}")
+    return fn(mem_usage, num_layers, max_mem, target_num_workers, max_layers)

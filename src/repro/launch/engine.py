@@ -1,0 +1,296 @@
+"""Elastic training engine (paper §3.4, Alg. 2 — live consolidation).
+
+``ElasticEngine`` owns the per-stage-count *execution world* — the mesh over
+a device subset, the pipeline shapes, the jitted train step, and the
+optimizer init — built lazily and cached per active stage count.  A repack
+decision from the controller triggers a **live shrink** in the same process:
+
+  1. stage-keyed state is flattened to global layer order and re-split for
+     the smaller stage count (one device-side gather per leaf — the weights
+     never round-trip through host memory);
+  2. the result is placed onto a ``model``-axis submesh over the surviving
+     device subset (released devices hold no state afterwards);
+  3. the cached (or freshly compiled) smaller world continues training.
+
+The GPipe schedule pays ``num_micro + S - 1`` ticks, so shrinking S is a
+real throughput win at equal tokens — packed-empty *shadow* stages (the old
+in-mesh repack path) kept paying the full tick count.  The symmetric grow
+path re-expands when the ``WorkerPool`` grants recovered workers back.
+
+The checkpoint-coordinated path (repro.checkpoint.elastic + restart) remains
+the fallback for multi-node jobs where the job manager must actually
+reschedule processes (§3.4.2); see DESIGN.md §Elastic runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DistConfig, ModelConfig
+from repro.dynamics.config import DynamicsConfig
+from repro.launch.mesh import make_submesh
+from repro.models import model as M
+from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.pipeline.pipeline import PipelineShapes, build_loss_fn
+from repro.runtime.fault_tolerance import WorkerPool
+
+
+def make_train_step(cfg: ModelConfig, dcfg: DistConfig,
+                    dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
+                    opt_cfg: Optional[OptConfig] = None):
+    """Returns (init_opt_fn, train_step) with
+    train_step(params, opt_state, assignment, dyn, batch, lr)
+      -> (params, opt_state, loss, stats, gnorm)."""
+    opt_cfg = opt_cfg or OptConfig(name=dcfg.optimizer)
+    loss_fn = build_loss_fn(cfg, dcfg, dyncfg, mesh, shapes)
+    init_fn, update_fn = make_optimizer(opt_cfg)
+
+    def train_step(params, opt_state, assignment, dyn, batch, lr):
+        (loss, stats), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, assignment, dyn, batch)
+        params, opt_state, gnorm = update_fn(
+            grads, opt_state, params, lr, frozen=dyn.get("frozen"))
+        return params, opt_state, loss, stats, gnorm
+
+    return init_fn, train_step
+
+
+def fold_stats(stats, num_stages: int):
+    """Materialize the per-slot stats tree on host and restore the
+    [S, L_max, ...] layout the profiler expects — shard_map's stacked
+    out_spec flattens the stage axis into the slot axis ([S·L_max, ...]).
+    This is a full device→host sync of the stats tree: call it on
+    controller cadence only, never per step (§3.3.1)."""
+    import numpy as np
+
+    def fold(a):
+        a = np.asarray(a)
+        return a.reshape((num_stages, a.shape[0] // num_stages)
+                         + a.shape[1:])
+
+    return jax.tree.map(fold, stats)
+
+
+@dataclasses.dataclass
+class EngineWorld:
+    """Everything tied to one active stage count: compiled once, cached."""
+    stages: int
+    dcfg: DistConfig
+    mesh: Any
+    init_opt: Any
+    step: Any                  # jitted, donating (params, opt_state)
+    eval_loss: Any = None      # lazily-jitted loss-only fn (no update)
+
+
+@dataclasses.dataclass
+class EngineState:
+    """The training state the engine threads through worlds."""
+    params: Any
+    opt_state: Any
+    dyn: Any
+    assignment: Any
+    lps: List[int]
+    stages: int
+
+
+@dataclasses.dataclass
+class ResizeEvent:
+    step: int
+    kind: str                  # shrink | grow
+    from_stages: int
+    to_stages: int
+    workers: List[int]         # released (shrink) or granted (grow) ids
+    seconds: float
+    ticks_before: int
+    ticks_after: int
+
+
+class ElasticEngine:
+    """Owns the per-stage-count execution worlds and the live resize paths.
+
+    ``data`` × ``stages`` devices are taken from the front of ``devices``
+    (process-global by default); stage s maps to worker column s.  Shrinking
+    keeps the first ``data*S_new`` devices and releases the tail to the
+    ``WorkerPool``; growing requests them back.
+    """
+
+    def __init__(self, cfg: ModelConfig, dcfg: DistConfig,
+                 dyncfg: DynamicsConfig, shapes: PipelineShapes, *,
+                 opt_cfg: Optional[OptConfig] = None, data: int = 1,
+                 devices: Optional[Sequence[Any]] = None,
+                 pool: Optional[WorkerPool] = None):
+        self.cfg, self.base_dcfg, self.dyncfg = cfg, dcfg, dyncfg
+        self.shapes = shapes
+        self.opt_cfg = opt_cfg
+        self.data = data
+        self.devices = (list(devices) if devices is not None
+                        else list(jax.devices()))
+        self.pool = pool or WorkerPool(dcfg.num_stages)
+        self.stage_workers: List[int] = list(range(dcfg.num_stages))
+        self._worlds: Dict[int, EngineWorld] = {}
+        self.resizes: List[ResizeEvent] = []
+        self.last_shrink_step: Optional[int] = None
+        # mirror every pool transition (including ones other engines or the
+        # heartbeat path trigger on a shared pool) into an engine-local log
+        self.pool_events: List[str] = []
+        self._pool_hook = lambda event, worker: self.pool_events.append(
+            f"{event}:{worker}")
+        self.pool.subscribe(self._pool_hook)
+
+    def close(self) -> None:
+        """Detach from a (possibly shared) pool; a discarded engine must not
+        be pinned alive by the pool's hook list."""
+        self.pool.unsubscribe(self._pool_hook)
+
+    # -- worlds ------------------------------------------------------------
+    def dcfg_for(self, stages: int) -> DistConfig:
+        return dataclasses.replace(self.base_dcfg, num_stages=stages)
+
+    def ticks(self, stages: int) -> int:
+        return self.shapes.num_micro + stages - 1
+
+    def world(self, stages: int) -> EngineWorld:
+        w = self._worlds.get(stages)
+        if w is None:
+            dcfg = self.dcfg_for(stages)
+            mesh = make_submesh(self.data, stages, devices=self.devices)
+            init_opt, step_fn = make_train_step(
+                self.cfg, dcfg, self.dyncfg, mesh, self.shapes, self.opt_cfg)
+            w = EngineWorld(stages=stages, dcfg=dcfg, mesh=mesh,
+                            init_opt=init_opt,
+                            step=jax.jit(step_fn, donate_argnums=(0, 1)))
+            self._worlds[stages] = w
+        return w
+
+    # -- placement ---------------------------------------------------------
+    def _place(self, world: EngineWorld, params, opt_state, dyn, assignment):
+        """device_put onto the world's submesh with the pipeline's layout:
+        stage-keyed leaves sharded over ``model`` (leading stage dim),
+        everything else replicated — matches the shard_map in_specs, so the
+        jitted step needs no input reshard."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        stage_sh = NamedSharding(world.mesh, P("model"))
+        repl_sh = NamedSharding(world.mesh, P())
+        put_st = lambda t: jax.tree.map(
+            lambda a: jax.device_put(a, stage_sh), t)
+        put_rp = lambda t: jax.tree.map(
+            lambda a: jax.device_put(a, repl_sh), t)
+        params = {k: (put_st(v) if k == "stages" else put_rp(v))
+                  for k, v in params.items()}
+
+        def walk_opt(node):
+            if isinstance(node, dict):
+                return {k: (put_st(v) if k == "stages" else walk_opt(v))
+                        for k, v in node.items()}
+            return jax.device_put(node, repl_sh)
+
+        opt_state = walk_opt(opt_state) if opt_state is not None else None
+        return params, opt_state, put_st(dyn), put_st(assignment)
+
+    # -- lifecycle ---------------------------------------------------------
+    def init_state(self, rng: jax.Array) -> EngineState:
+        stages = self.base_dcfg.num_stages
+        world = self.world(stages)
+        params = M.init_params(rng, self.cfg, world.dcfg)
+        assignment = M.make_assignment(self.cfg, world.dcfg)
+        dyn = M.init_dyn(self.cfg, world.dcfg, self.dyncfg)
+        opt_state = world.init_opt(params)
+        lps = M.uniform_boundaries(self.cfg.total_blocks(), stages)
+        params, opt_state, dyn, assignment = self._place(
+            world, params, opt_state, dyn, assignment)
+        return EngineState(params, opt_state, dyn, assignment, lps, stages)
+
+    def step(self, state: EngineState, batch, lr):
+        """One jitted train step in the state's current world; mutates
+        ``state.params``/``state.opt_state`` in place, returns
+        (loss, stats, gnorm) — stats stay on device (the caller decides when
+        to pay the host sync)."""
+        w = self.world(state.stages)
+        with w.mesh:
+            params, opt_state, loss, stats, gnorm = w.step(
+                state.params, state.opt_state, state.assignment, state.dyn,
+                batch, lr)
+        state.params, state.opt_state = params, opt_state
+        return loss, stats, gnorm
+
+    @staticmethod
+    def stats_to_host(state: EngineState, stats):
+        """`fold_stats` for the state's current stage count."""
+        return fold_stats(stats, len(state.lps))
+
+    def eval_loss(self, state: EngineState, batch):
+        """Loss-only evaluation (no optimizer update) in the current world —
+        used by the resize parity checks and the demo."""
+        w = self.world(state.stages)
+        if w.eval_loss is None:
+            w.eval_loss = jax.jit(build_loss_fn(
+                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes))
+        with w.mesh:
+            loss, _ = w.eval_loss(state.params, state.assignment, state.dyn,
+                                  batch)
+        return loss
+
+    # -- live resize -------------------------------------------------------
+    def resize(self, state: EngineState, new_stages: int,
+               new_lps: Optional[Sequence[int]] = None) -> EngineState:
+        """Reshape all stage-keyed state to ``new_stages`` and place it onto
+        that world's submesh — no checkpoint, no restart, no host round-trip.
+        Falls back to a uniform split when ``new_lps`` violates the target
+        world's slot capacity."""
+        from repro.checkpoint.elastic import elastic_restore
+        world = self.world(new_stages)
+        if new_lps is not None and (
+                len(new_lps) != new_stages
+                or max(new_lps) > world.dcfg.slots_for(self.cfg)):
+            new_lps = None
+        params, opt_state, dyn, assignment, lps = elastic_restore(
+            self.cfg, self.dcfg_for(state.stages), world.dcfg,
+            state.params, state.opt_state, state.dyn, state.lps, new_lps)
+        params, opt_state, dyn, assignment = self._place(
+            world, params, opt_state, dyn, assignment)
+        return EngineState(params, opt_state, dyn, assignment, lps,
+                           new_stages)
+
+    def shrink(self, state: EngineState, target_stages: int,
+               new_lps: Optional[Sequence[int]] = None,
+               step: int = -1) -> EngineState:
+        """Live consolidation: rebuild on fewer workers, release the tail of
+        the stage→worker map back to the job manager."""
+        assert target_stages < state.stages
+        t0 = time.perf_counter()
+        new_state = self.resize(state, target_stages, new_lps)
+        released = self.stage_workers[target_stages:]
+        self.stage_workers = self.stage_workers[:target_stages]
+        self.pool.release(released)
+        self.resizes.append(ResizeEvent(
+            step=step, kind="shrink", from_stages=state.stages,
+            to_stages=target_stages, workers=list(released),
+            seconds=time.perf_counter() - t0,
+            ticks_before=self.ticks(state.stages),
+            ticks_after=self.ticks(target_stages)))
+        self.last_shrink_step = step
+        return new_state
+
+    def grow(self, state: EngineState, n_workers: int,
+             step: int = -1) -> EngineState:
+        """Re-expansion: request workers back from the pool and rebuild the
+        pipeline over the larger device subset.  Grows by however many the
+        pool actually grants (possibly zero)."""
+        t0 = time.perf_counter()
+        granted = self.pool.request(n_workers)
+        if not granted:
+            return state
+        target = state.stages + len(granted)
+        new_state = self.resize(state, target)
+        self.stage_workers = self.stage_workers + granted
+        self.resizes.append(ResizeEvent(
+            step=step, kind="grow", from_stages=state.stages,
+            to_stages=target, workers=list(granted),
+            seconds=time.perf_counter() - t0,
+            ticks_before=self.ticks(state.stages),
+            ticks_after=self.ticks(target)))
+        return new_state

@@ -32,6 +32,26 @@ def make_host_mesh(data: int = 2, model: int = 4):
     return _auto_mesh((data, model), ("data", "model"))
 
 
+def make_submesh(data: int, model: int, devices=None):
+    """Mesh over an *explicit device subset* — the elastic engine's shrink
+    path rebuilds the pipeline on the first ``data*model`` devices of the
+    given (or process-global) device list, so released devices hold no
+    state and can be handed back to the job manager.
+
+    Uses jax.sharding.Mesh directly (jax.make_mesh offers no device subset
+    on every supported jax version); Auto axis types are the default there.
+    """
+    import numpy as np
+    devs = list(devices) if devices is not None else list(jax.devices())
+    need = data * model
+    if len(devs) < need:
+        raise ValueError(
+            f"submesh needs {need} devices (data={data} x model={model}), "
+            f"have {len(devs)}")
+    arr = np.array(devs[:need]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """The DP axes of a mesh (everything except the pipeline axis)."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,13 +1,16 @@
-"""Training step assembly + CLI trainer.
+"""CLI trainer on top of the elastic engine.
 
-``make_train_step`` wires the pipelined loss, optimizer, and freeze masking
-into one jitted step.  The CLI driver runs real (CPU-scale) training with the
-DynMo controller in the loop: dynamism events mutate the dyn state, the
-profiler folds the step's stats, and rebalances migrate layers live.
+``run_training`` drives the DynMo loop end-to-end: dynamism events mutate
+the dyn state, the profiler folds the step's stats on controller cadence,
+rebalances migrate layers live, and — with ``--repack`` — the controller's
+consolidation decision triggers an in-process shrink onto fewer workers via
+``repro.launch.engine.ElasticEngine`` (released workers go back to the
+``WorkerPool``; ``--grow-back N`` re-expands N steps later).
 
-Usage (CPU integration scale):
-  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
-      --layers 8 --d-model 128 --stages 4 --steps 50 --dynamism pruning
+Usage (CPU integration scale, 4 forced host devices):
+  REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.train \
+      --arch smollm-360m --layers 8 --d-model 128 --stages 4 --steps 50 \
+      --dynamism pruning --repack
 """
 from __future__ import annotations
 
@@ -20,9 +23,8 @@ if os.environ.get("REPRO_TRAIN_DEVICES"):       # must precede jax import
 
 import argparse
 import dataclasses
-import functools
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,34 +36,15 @@ from repro.core.controller import ControllerConfig, DynMoController
 from repro.dynamics.config import DynamicsConfig
 from repro.dynamics import pruning as prn
 from repro.dynamics.trajectories import zhu_gupta_sparsity
-from repro.models import model as M
-from repro.optim.optimizers import OptConfig, make_optimizer
+from repro.launch.engine import ElasticEngine, make_train_step  # noqa: F401
+# make_train_step is re-exported for back-compat (tests/examples import it
+# from here); it moved to engine.py, which owns step assembly now.
 from repro.optim.schedule import cosine_schedule
-from repro.pipeline.pipeline import PipelineShapes, build_loss_fn
-
-
-def make_train_step(cfg: ModelConfig, dcfg: DistConfig,
-                    dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
-                    opt_cfg: Optional[OptConfig] = None):
-    """Returns (init_opt_fn, train_step) with
-    train_step(params, opt_state, assignment, dyn, batch, lr)
-      -> (params, opt_state, loss, stats, gnorm)."""
-    opt_cfg = opt_cfg or OptConfig(name=dcfg.optimizer)
-    loss_fn = build_loss_fn(cfg, dcfg, dyncfg, mesh, shapes)
-    init_fn, update_fn = make_optimizer(opt_cfg)
-
-    def train_step(params, opt_state, assignment, dyn, batch, lr):
-        (loss, stats), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, assignment, dyn, batch)
-        params, opt_state, gnorm = update_fn(
-            grads, opt_state, params, lr, frozen=dyn.get("frozen"))
-        return params, opt_state, loss, stats, gnorm
-
-    return init_fn, train_step
+from repro.pipeline.pipeline import PipelineShapes
 
 
 # ---------------------------------------------------------------------------
-# CLI integration trainer (CPU scale, real rebalancing)
+# CLI integration trainer (CPU scale, real rebalancing + live elasticity)
 # ---------------------------------------------------------------------------
 def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                  num_micro: int = 4, mb_global: int = 4, seq: int = 64,
@@ -71,9 +54,10 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                  log_every: int = 10, seed: int = 0,
                  kernel_impl: str = "scan",
                  dyn_overrides: Optional[Dict[str, Any]] = None,
-                 mesh=None) -> Dict[str, Any]:
+                 repack: bool = False, repack_policy: str = "adjacent",
+                 repack_mem_cap: float = 1.1, repack_target: int = 1,
+                 grow_back: Optional[int] = None) -> Dict[str, Any]:
     from repro.data.loader import DataConfig, make_loader
-    from repro.launch.mesh import make_host_mesh
     cfg = get_config(arch)
     if layers is not None:
         cfg = reduced_config(cfg, num_layers=layers, d_model=d_model,
@@ -82,21 +66,26 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
     dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
                       param_dtype="float32", kernel_impl=kernel_impl)
     dyncfg = DynamicsConfig(kind=dynamism, **(dyn_overrides or {}))
-    mesh = mesh or make_host_mesh(data=1, model=stages)
     shapes = PipelineShapes(num_micro=num_micro, mb_global=mb_global,
                             seq=seq)
+    tokens_per_step = num_micro * mb_global * seq
 
-    rng = jax.random.PRNGKey(seed)
-    params = M.init_params(rng, cfg, dcfg)
-    assignment = M.make_assignment(cfg, dcfg)
-    dyn = M.init_dyn(cfg, dcfg, dyncfg)
-    init_opt, train_step = make_train_step(cfg, dcfg, dyncfg, mesh, shapes)
-    opt_state = init_opt(params)
-    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+    engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=1)
+    state = engine.init_state(jax.random.PRNGKey(seed))
 
-    ctrl = DynMoController(
-        cfg, dcfg, dyncfg,
-        ControllerConfig(method=balancer, rebalance_every=rebalance_every))
+    ccfg = ControllerConfig(method=balancer, rebalance_every=rebalance_every,
+                            repack=repack, repack_policy=repack_policy,
+                            repack_target=max(1, repack_target))
+    if repack:
+        # per-worker memory budget: capacity factor × the dtype-correct
+        # per-stage footprint of the UNPRUNED model under a uniform split —
+        # consolidation becomes feasible once dynamism shrinks the model
+        from repro.core.cost_model import stage_memory_budget
+        ccfg.repack_max_mem = stage_memory_budget(
+            cfg, tokens_per_step, seq, dcfg.bytes_per_param, stages,
+            cap_factor=repack_mem_cap)
+    ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg)
+
     loader = make_loader(cfg, DataConfig(num_micro, mb_global, seq,
                                          seed=seed))
     ckpt = None
@@ -104,64 +93,105 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
         from repro.checkpoint.checkpoint import CheckpointManager
         ckpt = CheckpointManager(ckpt_dir, every=max(10, steps // 5))
 
-    losses, events = [], []
+    losses, events, step_times, stages_hist = [], [], [], []
     t0 = time.perf_counter()
-    tokens_per_step = num_micro * mb_global * seq
-    with mesh:
-        for step, batch in enumerate(loader):
-            if step >= steps:
-                break
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
-            params, opt_state, loss, stats, gnorm = step_jit(
-                params, opt_state, assignment, dyn, batch, lr)
-            losses.append(float(loss))
+    for step, batch in enumerate(loader):
+        if step >= steps:
+            break
+        t_step = time.perf_counter()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
+        loss, stats, gnorm = engine.step(state, batch, lr)
+        # one scalar sync for the loss curve; the full per-slot stats tree
+        # stays on device until controller cadence (§3.3.1)
+        losses.append(float(loss))
+        step_times.append(time.perf_counter() - t_step)
+        stages_hist.append(state.stages)
 
-            # ---- dynamism events (black-box to the controller)
-            if dynamism == "pruning" and step and step % 10 == 0:
-                sp = zhu_gupta_sparsity(
-                    step * 100, dataclasses.replace(
-                        dyncfg, prune_start_iter=0, prune_end_iter=steps * 100,
-                        prune_frequency=1))
-                keep = prn.target_keep_blocks(
-                    cfg, cfg.total_blocks(), sp)
-                dyn = dict(dyn)
-                dyn["ff_mask"] = prn.global_block_prune(
-                    cfg, params["stages"], assignment["tags"], keep)
-            if dynamism == "freezing" and step and step % 10 == 0:
-                front = int(cfg.total_blocks() * min(0.6, step / steps))
-                fr = np.zeros_like(np.asarray(dyn["frozen"]))
-                g = 0
-                tags_np = np.asarray(assignment["tags"])
-                for s in range(tags_np.shape[0]):
-                    for l in range(tags_np.shape[1]):
-                        if tags_np[s, l] != 0:
-                            if g < front:
-                                fr[s, l] = 1.0
-                            g += 1
-                dyn = dict(dyn)
-                dyn["frozen"] = jnp.asarray(fr)
+        # ---- dynamism events (black-box to the controller)
+        if dynamism == "pruning" and step and step % 10 == 0:
+            sp = zhu_gupta_sparsity(
+                step * 100, dataclasses.replace(
+                    dyncfg, prune_start_iter=0, prune_end_iter=steps * 100,
+                    prune_frequency=1))
+            keep = prn.target_keep_blocks(
+                cfg, cfg.total_blocks(), sp)
+            dyn = dict(state.dyn)
+            dyn["ff_mask"] = prn.global_block_prune(
+                cfg, state.params["stages"], state.assignment["tags"], keep)
+            state.dyn = dyn
+        if dynamism == "freezing" and step and step % 10 == 0:
+            front = int(cfg.total_blocks() * min(0.6, step / steps))
+            fr = np.zeros_like(np.asarray(state.dyn["frozen"]))
+            g = 0
+            tags_np = np.asarray(state.assignment["tags"])
+            for s in range(tags_np.shape[0]):
+                for l in range(tags_np.shape[1]):
+                    if tags_np[s, l] != 0:
+                        if g < front:
+                            fr[s, l] = 1.0
+                        g += 1
+            dyn = dict(state.dyn)
+            dyn["frozen"] = jnp.asarray(fr)
+            state.dyn = dyn
 
-            # ---- DynMo controller
-            stats_np = jax.tree.map(np.asarray, stats)
-            params, opt_state, dyn, new_assignment, _, ev = ctrl.step(
-                step + 1, stats_np, np.asarray(assignment["tags"]),
+        # ---- DynMo controller (device→host sync only on cadence)
+        if ctrl.cadence(step + 1):
+            stats_np = engine.stats_to_host(state, stats)
+            p, o, d, new_assignment, _, ev = ctrl.step(
+                step + 1, stats_np, np.asarray(state.assignment["tags"]),
                 shapes.num_micro, tokens_per_step, seq,
-                params, opt_state, dyn,
-                frozen=np.asarray(dyn["frozen"]))
+                state.params, state.opt_state, state.dyn,
+                frozen=np.asarray(state.dyn["frozen"]))
+            state.params, state.opt_state, state.dyn = p, o, d
             if new_assignment is not None:
-                assignment = new_assignment
+                state.assignment = new_assignment
+                state.lps = list(ctrl.lps)
             if ev is not None and ev.rebalanced:
                 events.append(ev)
-            if ckpt:
-                ckpt.maybe_save(step, params, opt_state, dyn, ctrl.lps)
-            if step % log_every == 0:
-                print(f"step {step:4d} loss {float(loss):.4f} "
-                      f"gnorm {float(gnorm):.3f} lps={ctrl.lps}")
+            plan = ctrl.take_resize()
+            if plan is not None and plan.target_stages < state.stages:
+                state = engine.shrink(state, plan.target_stages,
+                                      plan.layers_per_stage, step=step)
+                ctrl.rebind(engine.dcfg_for(state.stages), state.lps)
+                rz = engine.resizes[-1]
+                print(f"step {step:4d} SHRINK {rz.from_stages}->"
+                      f"{rz.to_stages} stages ({plan.policy}); released "
+                      f"workers {rz.workers}; pool active="
+                      f"{engine.pool.num_active}; schedule "
+                      f"{rz.ticks_before}->{rz.ticks_after} ticks")
+        if (grow_back and engine.last_shrink_step is not None
+                and state.stages < stages
+                and step >= engine.last_shrink_step + grow_back):
+            prev_stages = state.stages
+            state = engine.grow(state, stages - state.stages, step=step)
+            if state.stages > prev_stages:    # pool may grant nothing yet
+                ctrl.rebind(engine.dcfg_for(state.stages), state.lps)
+                # granted workers stay for this job: stop planning resizes
+                # so ordinary rebalancing keeps running (a pending plan
+                # would otherwise suppress it every cadence)
+                ctrl.ccfg.repack = False
+                rz = engine.resizes[-1]
+                print(f"step {step:4d} GROW {rz.from_stages}->"
+                      f"{rz.to_stages} stages; granted workers "
+                      f"{rz.workers}; pool active="
+                      f"{engine.pool.num_active}")
+        if ckpt:
+            ckpt.maybe_save(step, state.params, state.opt_state, state.dyn,
+                            ctrl.lps)
+        if step % log_every == 0:
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} S={state.stages} "
+                  f"lps={ctrl.lps}")
     wall = time.perf_counter() - t0
     return {"losses": losses, "events": events, "wall_s": wall,
-            "final_lps": ctrl.lps, "params": params,
-            "assignment": assignment, "tokens_per_step": tokens_per_step}
+            "final_lps": ctrl.lps, "params": state.params,
+            "assignment": state.assignment,
+            "tokens_per_step": tokens_per_step,
+            "step_times": step_times, "stages_history": stages_hist,
+            "resizes": [dataclasses.asdict(e) for e in engine.resizes],
+            "pool_log": list(engine.pool.log),
+            "final_stages": state.stages}
 
 
 def main():
@@ -180,15 +210,37 @@ def main():
     ap.add_argument("--balancer", default="diffusion")
     ap.add_argument("--rebalance-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--repack", action="store_true",
+                    help="enable live worker consolidation (paper Alg. 2)")
+    ap.add_argument("--repack-policy", default="adjacent",
+                    choices=["adjacent", "first_fit"])
+    ap.add_argument("--repack-mem-cap", type=float, default=1.1,
+                    help="per-worker memory budget as a multiple of the "
+                         "unpruned per-stage footprint")
+    ap.add_argument("--repack-target", type=int, default=1,
+                    help="never consolidate below this many workers")
+    ap.add_argument("--grow-back", type=int, default=None,
+                    help="re-expand to the original stage count N steps "
+                         "after a shrink (workers granted back by the pool)")
     args = ap.parse_args()
     out = run_training(
         args.arch, steps=args.steps, stages=args.stages, layers=args.layers,
         d_model=args.d_model, seq=args.seq, num_micro=args.num_micro,
         mb_global=args.mb_global, dynamism=args.dynamism,
         kernel_impl=args.kernel_impl, balancer=args.balancer,
-        rebalance_every=args.rebalance_every, ckpt_dir=args.ckpt_dir)
+        rebalance_every=args.rebalance_every, ckpt_dir=args.ckpt_dir,
+        repack=args.repack, repack_policy=args.repack_policy,
+        repack_mem_cap=args.repack_mem_cap,
+        repack_target=args.repack_target, grow_back=args.grow_back)
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
-          f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}")
+          f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}; "
+          f"resizes={len(out['resizes'])}; "
+          f"final stages={out['final_stages']}")
+    for rz in out["resizes"]:
+        print(f"  {rz['kind']} @step {rz['step']}: {rz['from_stages']}->"
+              f"{rz['to_stages']} stages, workers {rz['workers']}, "
+              f"{rz['seconds']*1e3:.0f}ms, ticks {rz['ticks_before']}->"
+              f"{rz['ticks_after']}")
 
 
 if __name__ == "__main__":

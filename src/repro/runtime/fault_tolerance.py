@@ -99,18 +99,37 @@ class WorkerPool:
         self.released: Set[int] = set()
         self.dead: Set[int] = set()
         self.log: List[str] = []
+        self._hooks: List[Callable[[str, int], None]] = []
+
+    def subscribe(self, hook: Callable[[str, int], None]) -> None:
+        """Register a release/acquire observer ``hook(event, worker)`` with
+        event in {"release", "fail", "grant"} — the elastic engine subscribes
+        to mirror pool transitions into its ``pool_events`` log; a k8s
+        operator would translate them into scale-down/scale-up RPCs."""
+        self._hooks.append(hook)
+
+    def unsubscribe(self, hook: Callable[[str, int], None]) -> None:
+        """Remove a hook (engines on a shared pool must detach on close so
+        the pool doesn't pin them alive)."""
+        if hook in self._hooks:
+            self._hooks.remove(hook)
+
+    def _notify(self, event: str, worker: int) -> None:
+        self.log.append(f"{event}:{worker}")
+        for h in self._hooks:
+            h(event, worker)
 
     def release(self, workers) -> None:
         for w in workers:
             if w in self.active:
                 self.active.discard(w)
                 self.released.add(w)
-                self.log.append(f"release:{w}")
+                self._notify("release", w)
 
     def fail(self, worker: int) -> None:
         self.active.discard(worker)
         self.dead.add(worker)
-        self.log.append(f"fail:{worker}")
+        self._notify("fail", worker)
 
     def request(self, n: int) -> List[int]:
         grant = []
@@ -121,7 +140,7 @@ class WorkerPool:
         for w in grant:
             self.released.discard(w)
             self.active.add(w)
-            self.log.append(f"grant:{w}")
+            self._notify("grant", w)
         return grant
 
     @property

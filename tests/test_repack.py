@@ -1,11 +1,13 @@
 """Re-packing tests (paper §3.4, Algorithm 2)."""
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:     # dep gated: fixed-seed sweep instead of shrinking
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.repack import repack_adjacent, repack_first_fit
+from repro.core.repack import (REPACK_POLICIES, repack, repack_adjacent,
+                               repack_first_fit)
 
 mems = st.lists(st.floats(0.1, 10.0), min_size=2, max_size=16)
 
@@ -59,3 +61,52 @@ def test_paper_repack_scenario():
     mem = [2.0] * 8          # after heavy pruning each stage uses 2 of 16GB
     plan = repack_first_fit(mem, [4] * 8, max_mem=16.0)
     assert plan.num_active <= 2   # 8x2GB packs into 1-2 workers
+
+
+# -- selectable-policy invariants (engine resize input) ----------------------
+@settings(max_examples=60, deadline=None)
+@given(mem=mems, cap=st.floats(1.0, 40.0), target=st.integers(1, 4))
+def test_policy_invariants(mem, cap, target):
+    """The invariants the live resize path relies on, for every policy:
+    layer conservation, memory cap respected on every merged-into worker,
+    num_active consistency, target respected."""
+    nl = [3] * len(mem)
+    for policy in sorted(REPACK_POLICIES):
+        plan = repack(policy, mem, nl, max_mem=cap,
+                      target_num_workers=target)
+        # num_active consistency: property == mask sum == nonzero stages
+        assert plan.num_active == sum(plan.active_workers)
+        assert plan.num_active == sum(1 for n_ in plan.layers_per_stage
+                                      if n_)
+        # layers conserved, compaction covers all of them
+        assert sum(plan.layers_per_stage) == sum(nl)
+        compact = [plan.layers_per_stage[s] for s in range(len(mem))
+                   if plan.active_workers[s]]
+        assert sum(compact) == sum(nl) and all(n_ > 0 for n_ in compact)
+        # memory: inactive workers drained; any worker that RECEIVED layers
+        # is under the cap (an untouched one may exceed it from the start)
+        for s in range(len(mem)):
+            if not plan.active_workers[s]:
+                assert plan.mem_usage[s] == 0.0
+                assert plan.layers_per_stage[s] == 0
+            elif plan.mem_usage[s] > mem[s]:
+                assert plan.mem_usage[s] < cap
+        # never below the target worker count (nor above the input count)
+        assert min(len(mem), target) <= plan.num_active <= len(mem)
+        # transfers mirror the counts: every emptied stage's layers moved
+        # at least once (chained merges re-move already-merged layers)
+        assert len(plan.transfers) >= 3 * sum(
+            1 for s in range(len(mem)) if not plan.active_workers[s])
+
+
+@pytest.mark.parametrize("policy", sorted(REPACK_POLICIES))
+def test_policy_respects_max_layers(policy):
+    plan = repack(policy, [1.0] * 4, [4] * 4, max_mem=100.0,
+                  target_num_workers=1, max_layers=8)
+    assert max(plan.layers_per_stage) <= 8
+    assert plan.num_active == 2      # 16 layers / 8-slot cap -> 2 workers
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        repack("best_fit", [1.0], [1], max_mem=1.0)
