@@ -67,7 +67,7 @@ def sim_case(kind: str, arch: str, balancer: str, cost_by: str,
         rebalance_every=reb_freq if rebalance else 0,
         balancer=balancer, cost_by=cost_by, schedule="1f1b",
         max_slots=max(2, (L + S - 1) // S + 4),
-        repack=repack, repack_max_mem=pbytes.sum() * 5.0 / S * 1.6,
+        repack=repack, repack_mem_cap=pbytes.sum() * 5.0 / S * 1.6,
         layer_mem=pbytes * 5.0)
     return simulate_training(layer_time_fn, pbytes, cfg)
 

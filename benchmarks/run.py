@@ -27,6 +27,7 @@ def main() -> None:
         "throughput": bench_throughput.main,    # Fig. 3 (+ bubble ratios)
         "repack": bench_repack.main,            # Fig. 4 left
         "overhead": bench_overhead.main,        # Fig. 4 right
+        "controller": bench_overhead.main_controller,  # §3.3.1 async plane
         "kernels": bench_kernels.main,          # §4.2.2 / §4.2.4
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
         "elastic": bench_elastic.main,          # §3.4 live shrink (engine)

@@ -1,0 +1,59 @@
+"""Cluster control-plane demo: async decisions + signal-driven elasticity.
+
+Runs the full §3.3.1/§3.4.2 story on CPU with forced host devices:
+
+  * the DynMo controller decides on a background thread (double-buffered
+    stats mailbox — the training thread only publishes snapshots);
+  * gradual pruning shrinks the model until the controller's repack
+    decision consolidates 4 workers onto 2 *live*;
+  * the released workers go back to a job manager running in a SEPARATE
+    process (file-backed RPC, `repro.cluster.rpc`);
+  * mid-run the released machines "come back" (simulated heartbeat
+    recovery) and the autoscaler grows the pipeline to 4 again — no
+    `--grow-back` step counting anywhere.
+
+Run:
+  REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python examples/autoscale_cluster.py
+"""
+import argparse
+import os
+
+os.environ.setdefault("REPRO_TRAIN_DEVICES", "4")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--recover-at", type=int, default=18,
+                    help="step at which released workers start heartbeating "
+                         "again")
+    ap.add_argument("--job-manager", default="file",
+                    choices=["inproc", "file"])
+    args = ap.parse_args()
+
+    from repro.launch.train import run_training
+    out = run_training(
+        "smollm-360m", steps=args.steps, stages=4, layers=8, d_model=128,
+        seq=32, num_micro=4, mb_global=2, dynamism="pruning",
+        repack=True, rebalance_every=5, log_every=5,
+        async_controller=True, autoscale=True,
+        simulate_recover=args.recover_at, job_manager=args.job_manager)
+
+    ctl = out["controller"]
+    print(f"\nloss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}; "
+          f"controller[{ctl['mode']}] decided={ctl['decided']} "
+          f"dropped={ctl['dropped']} stale-rejected={ctl['stale_rejected']}")
+    print(f"pool transitions over the {args.job_manager} boundary: "
+          f"{out['pool_log']}")
+    for rz in out["resizes"]:
+        print(f"  {rz['kind']} @step {rz['step']}: {rz['from_stages']}->"
+              f"{rz['to_stages']} stages, workers {rz['workers']}, "
+              f"schedule {rz['ticks_before']}->{rz['ticks_after']} ticks")
+    for d in out["autoscale_decisions"]:
+        print(f"  autoscale @step {d['step']}: {d['action']} x{d['workers']}"
+              f" ({d['reason']})")
+    assert out["final_stages"] == 4, "expected the recovery grow to land"
+
+
+if __name__ == "__main__":
+    main()

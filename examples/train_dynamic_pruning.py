@@ -78,7 +78,7 @@ def main():
         cfg, dcfg, dyncfg,
         ControllerConfig(method="diffusion", cost_by="time",
                          rebalance_every=20, repack=True,
-                         repack_max_mem=stage_memory_budget(
+                         repack_mem_cap=stage_memory_budget(
                              cfg, micro * mbg * seq, seq,
                              dcfg.bytes_per_param, stages, cap_factor=1.1),
                          repack_target=2))

@@ -1,0 +1,23 @@
+"""DynMo cluster control plane: the layer between the training loop and
+the job manager.
+
+  service    — ControlPlane: off-thread profile→decide with a double-buffered
+               stats mailbox and epoch-fenced plan application (§3.3.1)
+  autoscaler — signal-driven shrink/grow policy (heartbeats + throughput
+               watermark with hysteresis) replacing CLI-driven growth
+  rpc        — JobManagerClient boundary: in-process WorkerPool wrapper and
+               a file-backed stub shaped like a k8s-operator/Ray endpoint
+"""
+from repro.cluster.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      ScaleDecision)
+from repro.cluster.rpc import (FileJobManager, InProcessJobManager,
+                               JobManagerClient, serve_file_manager,
+                               spawn_file_manager)
+from repro.cluster.service import ControlPlane, DecisionPlan, StatsSnapshot
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig", "ScaleDecision",
+    "ControlPlane", "DecisionPlan", "StatsSnapshot",
+    "JobManagerClient", "InProcessJobManager", "FileJobManager",
+    "serve_file_manager", "spawn_file_manager",
+]

@@ -1,0 +1,266 @@
+"""Job-manager RPC boundary (paper §3.4.2).
+
+DynMo's elasticity assumes a job manager that can *take released workers
+back* (and grant them again later).  ``JobManagerClient`` is the protocol
+the elastic engine talks to; two implementations:
+
+  * ``InProcessJobManager`` — wraps the in-process ``WorkerPool`` (the
+    seed's behavior, zero overhead, same logs);
+  * ``FileJobManager`` — a file-backed stub shaped like a k8s-operator /
+    Ray autoscaler endpoint: each call serializes one request file into a
+    shared directory and blocks for the matching response, written by a
+    *separate process* running ``serve_file_manager`` (CLI:
+    ``python -m repro.cluster.rpc --dir D --workers N``).  Release/grant
+    genuinely crosses a process boundary, which is what the multi-node
+    story needs tested; swapping the file transport for HTTP/gRPC changes
+    only this module.
+
+Wire protocol: ``req-<seq>.json`` → ``resp-<seq>.json``, JSON objects,
+atomically published via write-to-temp + ``os.replace`` so a reader never
+observes a partial file.  Ops: ``status | release | request | fail |
+shutdown``.  Every response carries the manager's view of the pool
+(``active`` count) so the client can mirror it without extra round trips.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
+
+from repro.runtime.fault_tolerance import WorkerPool
+
+
+@runtime_checkable
+class JobManagerClient(Protocol):
+    """What the elastic engine needs from a job manager."""
+
+    def release(self, workers: Sequence[int]) -> List[int]:
+        """Hand workers back to the manager; returns those actually taken."""
+        ...
+
+    def request(self, n: int) -> List[int]:
+        """Ask for up to ``n`` workers; returns the granted ids."""
+        ...
+
+    def fail(self, worker: int) -> None:
+        """Report a dead worker (not released — gone)."""
+        ...
+
+    @property
+    def num_active(self) -> int: ...
+
+    def close(self) -> None: ...
+
+
+class InProcessJobManager:
+    """The seed's job manager: a ``WorkerPool`` in this process.  The
+    engine's existing subscribe hooks and logs keep working unchanged."""
+
+    def __init__(self, pool: WorkerPool):
+        self.pool = pool
+
+    def release(self, workers: Sequence[int]) -> List[int]:
+        before = set(self.pool.released)
+        self.pool.release(list(workers))
+        return sorted(set(self.pool.released) - before)
+
+    def request(self, n: int) -> List[int]:
+        return self.pool.request(n)
+
+    def fail(self, worker: int) -> None:
+        self.pool.fail(worker)
+
+    @property
+    def num_active(self) -> int:
+        return self.pool.num_active
+
+    @property
+    def log(self) -> List[str]:
+        return self.pool.log
+
+    def close(self) -> None:
+        pass
+
+
+def _atomic_write_json(path: str, obj) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
+
+
+def _read_json(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+class FileJobManager:
+    """File-backed ``JobManagerClient``; the pool lives in the server
+    process.  Calls are synchronous RPCs with a poll-for-response loop —
+    release/grant are rare (resize-time only), so latency is irrelevant and
+    the transport stays trivially debuggable (``ls`` the directory)."""
+
+    def __init__(self, root: str, timeout_s: float = 30.0,
+                 poll_s: float = 0.01):
+        self.root = root
+        self.timeout_s = timeout_s
+        self.poll_s = poll_s
+        # start past any leftover req/resp files (a reused directory):
+        # colliding with a previous run's sequence numbers would read its
+        # stale responses as answers to our requests
+        self._seq = 0
+        for name in os.listdir(root):
+            if ((name.startswith("req-") or name.startswith("resp-"))
+                    and name.endswith(".json")):
+                try:
+                    self._seq = max(self._seq,
+                                    int(name.split("-", 1)[1][:-len(".json")]))
+                except ValueError:
+                    pass
+        self._active: Optional[int] = None
+        self.log: List[str] = []        # client-side mirror of transitions
+
+    def _call(self, op: str, **payload) -> dict:
+        self._seq += 1
+        seq = self._seq
+        req = os.path.join(self.root, f"req-{seq:06d}.json")
+        resp = os.path.join(self.root, f"resp-{seq:06d}.json")
+        _atomic_write_json(req, {"op": op, **payload})
+        deadline = time.monotonic() + self.timeout_s
+        while not os.path.exists(resp):
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"job manager did not answer {op} (req {seq}) within "
+                    f"{self.timeout_s}s — is the server process running on "
+                    f"{self.root!r}?")
+            time.sleep(self.poll_s)
+        out = _read_json(resp)
+        if "active" in out:
+            self._active = int(out["active"])
+        if out.get("error"):
+            raise RuntimeError(f"job manager rejected {op}: {out['error']}")
+        return out
+
+    # -- JobManagerClient --------------------------------------------------
+    def release(self, workers: Sequence[int]) -> List[int]:
+        out = self._call("release", workers=[int(w) for w in workers])
+        released = [int(w) for w in out["released"]]
+        self.log.extend(f"release:{w}" for w in released)
+        return released
+
+    def request(self, n: int) -> List[int]:
+        out = self._call("request", n=int(n))
+        granted = [int(w) for w in out["granted"]]
+        self.log.extend(f"grant:{w}" for w in granted)
+        return granted
+
+    def fail(self, worker: int) -> None:
+        self._call("fail", worker=int(worker))
+        self.log.append(f"fail:{worker}")
+
+    @property
+    def num_active(self) -> int:
+        if self._active is None:
+            self._call("status")
+        return int(self._active)
+
+    def close(self) -> None:
+        # best-effort: a dead server must not stall shutdown for the full
+        # RPC timeout, so the farewell uses its own short deadline
+        prev = self.timeout_s
+        self.timeout_s = min(prev, 2.0)
+        try:
+            self._call("shutdown")
+        except (TimeoutError, OSError):
+            pass                         # server already gone — fine
+        finally:
+            self.timeout_s = prev
+
+
+def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
+                       idle_timeout_s: Optional[float] = None) -> WorkerPool:
+    """Serve one ``WorkerPool`` over the file protocol until a ``shutdown``
+    request (or ``idle_timeout_s`` with no traffic).  Runs in its own
+    process in tests/CI; returns the final pool for inspection when called
+    in-process."""
+    pool = WorkerPool(workers)
+    done: set = set()
+    last_traffic = time.monotonic()
+    while True:
+        names = sorted(n for n in os.listdir(root)
+                       if n.startswith("req-") and n.endswith(".json"))
+        for name in names:
+            seq = name[len("req-"):-len(".json")]
+            if seq in done:
+                continue
+            if os.path.exists(os.path.join(root, f"resp-{seq}.json")):
+                done.add(seq)            # answered by a previous server
+                continue                 # process — never replay its ops
+            try:
+                req = _read_json(os.path.join(root, name))
+            except (json.JSONDecodeError, OSError):
+                continue                 # writer mid-flight; next scan
+            done.add(seq)
+            last_traffic = time.monotonic()
+            op = req.get("op")
+            out: dict = {"op": op}
+            if op == "release":
+                out["released"] = [
+                    int(w) for w in req["workers"] if w in pool.active]
+                pool.release(req["workers"])
+            elif op == "request":
+                out["granted"] = pool.request(int(req["n"]))
+            elif op == "fail":
+                pool.fail(int(req["worker"]))
+            elif op in ("status", "shutdown"):
+                pass
+            else:
+                out["error"] = f"unknown op {op!r}"
+            out["active"] = pool.num_active
+            _atomic_write_json(os.path.join(root, f"resp-{seq}.json"), out)
+            if op == "shutdown":
+                return pool
+        if (idle_timeout_s is not None
+                and time.monotonic() - last_traffic > idle_timeout_s):
+            return pool
+        time.sleep(poll_s)
+
+
+def spawn_file_manager(root: str, workers: int,
+                       idle_timeout_s: float = 300.0) -> subprocess.Popen:
+    """Start the file job manager as a separate process (the RPC actually
+    crosses a process boundary).  The idle timeout is a safety net so an
+    orphaned server never outlives its job by much."""
+    return subprocess.Popen(
+        [sys.executable, "-c",
+         "from repro.cluster.rpc import main; main()", "--dir", root,
+         "--workers", str(workers), "--idle-timeout",
+         str(idle_timeout_s)],
+        env={**os.environ,
+             "PYTHONPATH": os.pathsep.join(
+                 p for p in [os.environ.get("PYTHONPATH"),
+                             os.path.dirname(os.path.dirname(
+                                 os.path.dirname(
+                                     os.path.abspath(__file__))))]
+                 if p)})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="file-backed job manager")
+    ap.add_argument("--dir", required=True)
+    ap.add_argument("--workers", type=int, required=True)
+    ap.add_argument("--poll", type=float, default=0.01)
+    ap.add_argument("--idle-timeout", type=float, default=None)
+    args = ap.parse_args()
+    pool = serve_file_manager(args.dir, args.workers, poll_s=args.poll,
+                              idle_timeout_s=args.idle_timeout)
+    print(f"job manager done: active={pool.num_active} "
+          f"released={sorted(pool.released)} dead={sorted(pool.dead)}")
+
+
+if __name__ == "__main__":
+    main()

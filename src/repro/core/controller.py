@@ -24,6 +24,7 @@ from repro.core import repack as rp
 from repro.core.cost_model import MEM_STATE_FACTOR
 from repro.core.profiler import LayerProfile, profile_from_stats
 from repro.dynamics.config import DynamicsConfig
+from repro.runtime.fault_tolerance import StragglerDetector
 
 
 @dataclasses.dataclass
@@ -34,7 +35,10 @@ class ControllerConfig:
     imbalance_threshold: float = 0.05  # skip rebalance below this ΔL
     repack: bool = False
     repack_policy: str = "adjacent"  # adjacent | first_fit
-    repack_max_mem: float = float("inf")
+    # per-worker repack budget in ABSOLUTE bytes (the trainer converts its
+    # capacity-factor CLI knob into this; one name end-to-end: CLI
+    # --repack-mem-cap → run_training(repack_mem_cap) → this field)
+    repack_mem_cap: float = float("inf")
     repack_target: int = 1
     mem_cap: float = float("inf")
 
@@ -77,8 +81,10 @@ class DynMoController:
 
     def __init__(self, cfg: ModelConfig, dcfg: DistConfig,
                  dyncfg: DynamicsConfig, ccfg: ControllerConfig,
-                 layers_per_stage: Optional[Sequence[int]] = None):
+                 layers_per_stage: Optional[Sequence[int]] = None,
+                 straggler: Optional[StragglerDetector] = None):
         self.cfg, self.dcfg, self.dyncfg, self.ccfg = cfg, dcfg, dyncfg, ccfg
+        self.straggler = straggler
         from repro.models.model import uniform_boundaries
         self.lps: List[int] = list(
             layers_per_stage
@@ -107,6 +113,9 @@ class DynMoController:
         self.lps = list(layers_per_stage)
         self.active_workers = dcfg.num_stages
         self.pending_resize = None
+        if self.straggler is not None:
+            # per-stage EMAs are meaningless across a resize
+            self.straggler.reset(dcfg.num_stages)
 
     # -- decision ----------------------------------------------------------
     def decide(self, profile: LayerProfile, iteration: int
@@ -115,6 +124,17 @@ class DynMoController:
         self.pending_resize = None      # stale unconsumed plans don't linger
         costs = (profile.time_per_layer if self.ccfg.cost_by == "time"
                  else profile.param_bytes)
+        if (self.straggler is not None and self.ccfg.cost_by == "time"
+                and self.straggler.initialized
+                and len(self.straggler.times) == len(self.lps)):
+            # a persistent straggler appears to DynMo exactly like load
+            # imbalance (paper §1): fold the measured-vs-modelled per-stage
+            # slowdown into each of the stage's layers and let the ordinary
+            # rebalance move layers off the slow worker
+            expected = np.asarray(bal.stage_loads(costs, self.lps))
+            slow = self.straggler.relative_slowdown(expected)
+            costs = np.asarray(costs, dtype=np.float64) \
+                * np.repeat(slow, self.lps)
         loads = bal.stage_loads(costs, self.lps)
         imb_before = bal.imbalance(loads)
         new_lps: Optional[List[int]] = None
@@ -141,7 +161,7 @@ class DynMoController:
             # (slots_for grows as S shrinks) — the engine never has to
             # silently discard the plan's split as over-capacity
             plan = rp.repack(self.ccfg.repack_policy, mem_stage, cand,
-                             self.ccfg.repack_max_mem,
+                             self.ccfg.repack_mem_cap,
                              self.ccfg.repack_target,
                              max_layers=self.dcfg.slots_for(self.cfg))
             if plan.num_active < len(cand):
@@ -153,7 +173,7 @@ class DynMoController:
                 # group no heavier than today's worst stage is never a
                 # regression even above the cap)
                 contiguous_mem = bal.stage_loads(mem_layers, compact)
-                limit = max(self.ccfg.repack_max_mem, max(mem_stage))
+                limit = max(self.ccfg.repack_mem_cap, max(mem_stage))
                 if all(m < limit for m in contiguous_mem):
                     self.pending_resize = ResizePlan(
                         iteration=iteration,

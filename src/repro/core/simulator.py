@@ -123,7 +123,7 @@ class TrainSimConfig:
     comm: float = 0.0
     max_slots: int = 10 ** 9
     repack: bool = False
-    repack_max_mem: float = float("inf")
+    repack_mem_cap: float = float("inf")
     layer_mem: Optional[np.ndarray] = None
     migration_bw: float = ICI_BW
     profile_overhead_frac: float = 1.0   # one profiling iteration's cost
@@ -193,7 +193,7 @@ def simulate_training(layer_time_fn: Callable[[int], Tuple[np.ndarray,
             if sim.repack and sim.layer_mem is not None:
                 mem_stage = bal.stage_loads(sim.layer_mem, lps)
                 plan = rp.repack_adjacent(mem_stage, lps,
-                                          sim.repack_max_mem)
+                                          sim.repack_mem_cap)
                 t_overhead["migration"] += _moved_bytes(
                     lps, plan.layers_per_stage, layer_param_bytes) \
                     / sim.migration_bw

@@ -30,6 +30,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.cluster.rpc import InProcessJobManager, JobManagerClient
 from repro.configs.base import DistConfig, ModelConfig
 from repro.dynamics.config import DynamicsConfig
 from repro.launch.mesh import make_submesh
@@ -100,7 +101,7 @@ class EngineState:
 @dataclasses.dataclass
 class ResizeEvent:
     step: int
-    kind: str                  # shrink | grow
+    kind: str                  # shrink | grow | evict
     from_stages: int
     to_stages: int
     workers: List[int]         # released (shrink) or granted (grow) ids
@@ -122,29 +123,45 @@ class ElasticEngine:
                  dyncfg: DynamicsConfig, shapes: PipelineShapes, *,
                  opt_cfg: Optional[OptConfig] = None, data: int = 1,
                  devices: Optional[Sequence[Any]] = None,
-                 pool: Optional[WorkerPool] = None):
+                 pool: Optional[WorkerPool] = None,
+                 job_manager: Optional[JobManagerClient] = None):
         self.cfg, self.base_dcfg, self.dyncfg = cfg, dcfg, dyncfg
         self.shapes = shapes
         self.opt_cfg = opt_cfg
         self.data = data
         self.devices = (list(devices) if devices is not None
                         else list(jax.devices()))
-        self.pool = pool or WorkerPool(dcfg.num_stages)
+        if job_manager is None:
+            # in-process default: same WorkerPool semantics as always
+            self.pool: Optional[WorkerPool] = pool or WorkerPool(
+                dcfg.num_stages)
+            self.jm: JobManagerClient = InProcessJobManager(self.pool)
+        else:
+            # the real pool lives behind the RPC boundary (its process owns
+            # it); release/grant cross it via the client
+            self.jm = job_manager
+            self.pool = pool
         self.stage_workers: List[int] = list(range(dcfg.num_stages))
         self._worlds: Dict[int, EngineWorld] = {}
         self.resizes: List[ResizeEvent] = []
         self.last_shrink_step: Optional[int] = None
+        # world epoch: bumped by every resize; the control plane fences
+        # decision plans with it so a plan decided against a stale world
+        # (wrong stage count / layer split) is never applied
+        self.epoch = 0
         # mirror every pool transition (including ones other engines or the
         # heartbeat path trigger on a shared pool) into an engine-local log
         self.pool_events: List[str] = []
         self._pool_hook = lambda event, worker: self.pool_events.append(
             f"{event}:{worker}")
-        self.pool.subscribe(self._pool_hook)
+        if self.pool is not None:
+            self.pool.subscribe(self._pool_hook)
 
     def close(self) -> None:
         """Detach from a (possibly shared) pool; a discarded engine must not
         be pinned alive by the pool's hook list."""
-        self.pool.unsubscribe(self._pool_hook)
+        if self.pool is not None:
+            self.pool.unsubscribe(self._pool_hook)
 
     # -- worlds ------------------------------------------------------------
     def dcfg_for(self, stages: int) -> DistConfig:
@@ -252,6 +269,7 @@ class ElasticEngine:
             state.params, state.opt_state, state.dyn, state.lps, new_lps)
         params, opt_state, dyn, assignment = self._place(
             world, params, opt_state, dyn, assignment)
+        self.epoch += 1
         return EngineState(params, opt_state, dyn, assignment, lps,
                            new_stages)
 
@@ -265,7 +283,7 @@ class ElasticEngine:
         new_state = self.resize(state, target_stages, new_lps)
         released = self.stage_workers[target_stages:]
         self.stage_workers = self.stage_workers[:target_stages]
-        self.pool.release(released)
+        self.jm.release(released)
         self.resizes.append(ResizeEvent(
             step=step, kind="shrink", from_stages=state.stages,
             to_stages=target_stages, workers=list(released),
@@ -275,13 +293,39 @@ class ElasticEngine:
         self.last_shrink_step = step
         return new_state
 
+    def evict(self, state: EngineState, workers: Sequence[int],
+              step: int = -1) -> EngineState:
+        """Failure path: rebuild the pipeline WITHOUT ``workers`` (dead —
+        reported to the job manager as failed, not released; they are not
+        grantable until the manager revives them).  Unlike ``shrink`` the
+        lost workers may sit anywhere in the stage→worker map."""
+        lost = [w for w in workers if w in self.stage_workers]
+        if not lost:
+            return state
+        target = len(self.stage_workers) - len(lost)
+        assert target >= 1, "cannot evict every worker"
+        t0 = time.perf_counter()
+        new_state = self.resize(state, target)
+        self.stage_workers = [w for w in self.stage_workers
+                              if w not in set(lost)]
+        for w in lost:
+            self.jm.fail(w)
+        self.resizes.append(ResizeEvent(
+            step=step, kind="evict", from_stages=state.stages,
+            to_stages=target, workers=list(lost),
+            seconds=time.perf_counter() - t0,
+            ticks_before=self.ticks(state.stages),
+            ticks_after=self.ticks(target)))
+        self.last_shrink_step = step
+        return new_state
+
     def grow(self, state: EngineState, n_workers: int,
              step: int = -1) -> EngineState:
         """Re-expansion: request workers back from the pool and rebuild the
         pipeline over the larger device subset.  Grows by however many the
         pool actually grants (possibly zero)."""
         t0 = time.perf_counter()
-        granted = self.pool.request(n_workers)
+        granted = self.jm.request(n_workers)
         if not granted:
             return state
         target = state.stages + len(granted)

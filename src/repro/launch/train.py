@@ -1,16 +1,22 @@
-"""CLI trainer on top of the elastic engine.
+"""CLI trainer on top of the elastic engine and the cluster control plane.
 
 ``run_training`` drives the DynMo loop end-to-end: dynamism events mutate
-the dyn state, the profiler folds the step's stats on controller cadence,
-rebalances migrate layers live, and — with ``--repack`` — the controller's
-consolidation decision triggers an in-process shrink onto fewer workers via
-``repro.launch.engine.ElasticEngine`` (released workers go back to the
-``WorkerPool``; ``--grow-back N`` re-expands N steps later).
+the dyn state, the ``ControlPlane`` folds the step's stats through
+profile→decide — inline or on a background thread (``--async-controller``,
+paper §3.3.1: zero decision latency on the training thread) — rebalances
+migrate layers live at safe points, and a repack decision triggers an
+in-process shrink onto fewer workers via ``repro.launch.engine.ElasticEngine``.
+
+Released workers cross the job-manager boundary (``--job-manager file``
+puts a real process on the other side); re-expansion is signal-driven with
+``--autoscale`` (heartbeat recoveries + throughput watermark, replacing the
+legacy fixed-step ``--grow-back N``, which remains for back-compat).
 
 Usage (CPU integration scale, 4 forced host devices):
   REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.train \
-      --arch smollm-360m --layers 8 --d-model 128 --stages 4 --steps 50 \
-      --dynamism pruning --repack
+      --arch smollm-360m --layers 8 --d-model 128 --stages 4 --steps 30 \
+      --dynamism pruning --repack --async-controller --autoscale \
+      --job-manager file --simulate-recover 18
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ if os.environ.get("REPRO_TRAIN_DEVICES"):       # must precede jax import
 
 import argparse
 import dataclasses
+import tempfile
 import time
 from typing import Any, Dict, Optional
 
@@ -30,6 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.rpc import FileJobManager, spawn_file_manager
+from repro.cluster.service import ControlPlane, StatsSnapshot
 from repro.configs.base import DistConfig, ModelConfig, get_config, \
     reduced_config
 from repro.core.controller import ControllerConfig, DynMoController
@@ -41,6 +51,18 @@ from repro.launch.engine import ElasticEngine, make_train_step  # noqa: F401
 # from here); it moved to engine.py, which owns step assembly now.
 from repro.optim.schedule import cosine_schedule
 from repro.pipeline.pipeline import PipelineShapes
+from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
+
+
+def _parse_straggler(spec: Optional[str]) -> Optional[Dict[int, float]]:
+    """"2:1.5,3:1.2" → {2: 1.5, 3: 1.2}."""
+    if not spec:
+        return None
+    out: Dict[int, float] = {}
+    for part in spec.split(","):
+        s, m = part.split(":")
+        out[int(s)] = float(m)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +78,16 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                  dyn_overrides: Optional[Dict[str, Any]] = None,
                  repack: bool = False, repack_policy: str = "adjacent",
                  repack_mem_cap: float = 1.1, repack_target: int = 1,
-                 grow_back: Optional[int] = None) -> Dict[str, Any]:
+                 grow_back: Optional[int] = None,
+                 async_controller: bool = False, async_drain: bool = False,
+                 autoscale: bool = False,
+                 autoscale_watermark: bool = False,
+                 heartbeat_timeout: float = 3.0,
+                 simulate_recover: Optional[int] = None,
+                 job_manager: str = "inproc",
+                 job_manager_dir: Optional[str] = None,
+                 straggler: Optional[Dict[int, float]] = None
+                 ) -> Dict[str, Any]:
     from repro.data.loader import DataConfig, make_loader
     cfg = get_config(arch)
     if layers is not None:
@@ -70,7 +101,25 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                             seq=seq)
     tokens_per_step = num_micro * mb_global * seq
 
-    engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=1)
+    # ---- job-manager boundary (in-process pool or file RPC to a server
+    # process — release/grant actually leave this process in file mode)
+    jm = jm_proc = None
+    if job_manager == "file":
+        # always a FRESH directory (a unique subdir when the caller names a
+        # location): leftover req/resp files from a previous run would be
+        # replayed by the new server and misread by the new client
+        if job_manager_dir:
+            os.makedirs(job_manager_dir, exist_ok=True)
+            jm_dir = tempfile.mkdtemp(prefix="run_", dir=job_manager_dir)
+        else:
+            jm_dir = tempfile.mkdtemp(prefix="dynmo_jm_")
+        jm_proc = spawn_file_manager(jm_dir, stages)
+        jm = FileJobManager(jm_dir, timeout_s=60.0)
+    elif job_manager != "inproc":
+        raise ValueError(f"unknown job manager {job_manager!r}")
+
+    engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=1,
+                           job_manager=jm)
     state = engine.init_state(jax.random.PRNGKey(seed))
 
     ccfg = ControllerConfig(method=balancer, rebalance_every=rebalance_every,
@@ -81,10 +130,26 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
         # per-stage footprint of the UNPRUNED model under a uniform split —
         # consolidation becomes feasible once dynamism shrinks the model
         from repro.core.cost_model import stage_memory_budget
-        ccfg.repack_max_mem = stage_memory_budget(
+        ccfg.repack_mem_cap = stage_memory_budget(
             cfg, tokens_per_step, seq, dcfg.bytes_per_param, stages,
             cap_factor=repack_mem_cap)
-    ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg)
+    det = StragglerDetector(stages) if straggler else None
+    ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg, straggler=det)
+    cp = ControlPlane(ctrl, async_mode=async_controller,
+                      epoch_fn=lambda: engine.epoch)
+
+    # ---- autoscaler: heartbeats + throughput watermark (replaces
+    # --grow-back); the monitor runs on a step-granular simulated clock so
+    # CI runs are deterministic
+    monitor = scaler = None
+    sim_clock = [0.0]
+    if autoscale:
+        monitor = HeartbeatMonitor(stages, timeout_s=heartbeat_timeout,
+                                   clock=lambda: sim_clock[0])
+        scaler = Autoscaler(
+            AutoscalerConfig(min_stages=max(1, repack_target),
+                             max_stages=stages,
+                             watermark=autoscale_watermark), monitor)
 
     loader = make_loader(cfg, DataConfig(num_micro, mb_global, seq,
                                          seed=seed))
@@ -93,105 +158,193 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
         from repro.checkpoint.checkpoint import CheckpointManager
         ckpt = CheckpointManager(ckpt_dir, every=max(10, steps // 5))
 
+    def after_resize(step: int, kind: str) -> None:
+        cp.rebind(engine.dcfg_for(state.stages), state.lps)
+        if scaler is not None:
+            scaler.note_resize(step, state.stages)
+        rz = engine.resizes[-1]
+        if monitor is not None and rz.kind == "shrink":
+            # released workers leave the heartbeat set deliberately; a
+            # later revive is the recovery signal the autoscaler grows on
+            for w in rz.workers:
+                monitor.expire(w)
+        if monitor is not None and rz.kind == "grow":
+            # regranted workers (any grow path: recovery, watermark,
+            # legacy --grow-back) must beat again — without the revive
+            # they would stay marked failed and a later real death of the
+            # same worker could never be detected
+            for w in rz.workers:
+                monitor.revive(w)
+        print(f"step {step:4d} {kind.upper()} {rz.from_stages}->"
+              f"{rz.to_stages} stages; workers {rz.workers}; "
+              f"pool active={engine.jm.num_active}; schedule "
+              f"{rz.ticks_before}->{rz.ticks_after} ticks")
+
     losses, events, step_times, stages_hist = [], [], [], []
     t0 = time.perf_counter()
-    for step, batch in enumerate(loader):
-        if step >= steps:
-            break
-        t_step = time.perf_counter()
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
-        loss, stats, gnorm = engine.step(state, batch, lr)
-        # one scalar sync for the loss curve; the full per-slot stats tree
-        # stays on device until controller cadence (§3.3.1)
-        losses.append(float(loss))
-        step_times.append(time.perf_counter() - t_step)
-        stages_hist.append(state.stages)
+    try:
+        for step, batch in enumerate(loader):
+            if step >= steps:
+                break
+            t_step = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
+            loss, stats, gnorm = engine.step(state, batch, lr)
+            # one scalar sync for the loss curve; the full per-slot stats
+            # tree stays on device until controller cadence (§3.3.1)
+            losses.append(float(loss))
+            step_times.append(time.perf_counter() - t_step)
+            stages_hist.append(state.stages)
 
-        # ---- dynamism events (black-box to the controller)
-        if dynamism == "pruning" and step and step % 10 == 0:
-            sp = zhu_gupta_sparsity(
-                step * 100, dataclasses.replace(
-                    dyncfg, prune_start_iter=0, prune_end_iter=steps * 100,
-                    prune_frequency=1))
-            keep = prn.target_keep_blocks(
-                cfg, cfg.total_blocks(), sp)
-            dyn = dict(state.dyn)
-            dyn["ff_mask"] = prn.global_block_prune(
-                cfg, state.params["stages"], state.assignment["tags"], keep)
-            state.dyn = dyn
-        if dynamism == "freezing" and step and step % 10 == 0:
-            front = int(cfg.total_blocks() * min(0.6, step / steps))
-            fr = np.zeros_like(np.asarray(state.dyn["frozen"]))
-            g = 0
-            tags_np = np.asarray(state.assignment["tags"])
-            for s in range(tags_np.shape[0]):
-                for l in range(tags_np.shape[1]):
-                    if tags_np[s, l] != 0:
-                        if g < front:
-                            fr[s, l] = 1.0
-                        g += 1
-            dyn = dict(state.dyn)
-            dyn["frozen"] = jnp.asarray(fr)
-            state.dyn = dyn
+            # ---- dynamism events (black-box to the controller)
+            if dynamism == "pruning" and step and step % 10 == 0:
+                sp = zhu_gupta_sparsity(
+                    step * 100, dataclasses.replace(
+                        dyncfg, prune_start_iter=0,
+                        prune_end_iter=steps * 100, prune_frequency=1))
+                keep = prn.target_keep_blocks(
+                    cfg, cfg.total_blocks(), sp)
+                dyn = dict(state.dyn)
+                dyn["ff_mask"] = prn.global_block_prune(
+                    cfg, state.params["stages"], state.assignment["tags"],
+                    keep)
+                state.dyn = dyn
+            if dynamism == "freezing" and step and step % 10 == 0:
+                front = int(cfg.total_blocks() * min(0.6, step / steps))
+                fr = np.zeros_like(np.asarray(state.dyn["frozen"]))
+                g = 0
+                tags_np = np.asarray(state.assignment["tags"])
+                for s in range(tags_np.shape[0]):
+                    for l in range(tags_np.shape[1]):
+                        if tags_np[s, l] != 0:
+                            if g < front:
+                                fr[s, l] = 1.0
+                            g += 1
+                dyn = dict(state.dyn)
+                dyn["frozen"] = jnp.asarray(fr)
+                state.dyn = dyn
 
-        # ---- DynMo controller (device→host sync only on cadence)
-        if ctrl.cadence(step + 1):
-            stats_np = engine.stats_to_host(state, stats)
-            p, o, d, new_assignment, _, ev = ctrl.step(
-                step + 1, stats_np, np.asarray(state.assignment["tags"]),
-                shapes.num_micro, tokens_per_step, seq,
-                state.params, state.opt_state, state.dyn,
-                frozen=np.asarray(state.dyn["frozen"]))
-            state.params, state.opt_state, state.dyn = p, o, d
-            if new_assignment is not None:
-                state.assignment = new_assignment
-                state.lps = list(ctrl.lps)
-            if ev is not None and ev.rebalanced:
-                events.append(ev)
-            plan = ctrl.take_resize()
-            if plan is not None and plan.target_stages < state.stages:
-                state = engine.shrink(state, plan.target_stages,
-                                      plan.layers_per_stage, step=step)
-                ctrl.rebind(engine.dcfg_for(state.stages), state.lps)
-                rz = engine.resizes[-1]
-                print(f"step {step:4d} SHRINK {rz.from_stages}->"
-                      f"{rz.to_stages} stages ({plan.policy}); released "
-                      f"workers {rz.workers}; pool active="
-                      f"{engine.pool.num_active}; schedule "
-                      f"{rz.ticks_before}->{rz.ticks_after} ticks")
-        if (grow_back and engine.last_shrink_step is not None
-                and state.stages < stages
-                and step >= engine.last_shrink_step + grow_back):
-            prev_stages = state.stages
-            state = engine.grow(state, stages - state.stages, step=step)
-            if state.stages > prev_stages:    # pool may grant nothing yet
-                ctrl.rebind(engine.dcfg_for(state.stages), state.lps)
-                # granted workers stay for this job: stop planning resizes
-                # so ordinary rebalancing keeps running (a pending plan
-                # would otherwise suppress it every cadence)
-                ctrl.ccfg.repack = False
-                rz = engine.resizes[-1]
-                print(f"step {step:4d} GROW {rz.from_stages}->"
-                      f"{rz.to_stages} stages; granted workers "
-                      f"{rz.workers}; pool active="
-                      f"{engine.pool.num_active}")
-        if ckpt:
-            ckpt.maybe_save(step, state.params, state.opt_state, state.dyn,
-                            ctrl.lps)
-        if step % log_every == 0:
-            print(f"step {step:4d} loss {float(loss):.4f} "
-                  f"gnorm {float(gnorm):.3f} S={state.stages} "
-                  f"lps={ctrl.lps}")
+            # ---- heartbeats (simulated per-step liveness: active workers
+            # beat; released/dead ones go silent and time out)
+            if monitor is not None:
+                sim_clock[0] = float(step)
+                for w in engine.stage_workers:
+                    monitor.beat(w)
+                if simulate_recover is not None and step == simulate_recover:
+                    for w in range(stages):
+                        if w not in engine.stage_workers:
+                            monitor.revive(w)
+
+            # ---- publish stats to the control plane on cadence (the only
+            # device→host stats sync; in async mode this is a pointer swap)
+            if ctrl.cadence(step + 1):
+                measured = None
+                if straggler:
+                    # simulation knob: a straggling WORKER multiplies its
+                    # stage's wall time; feed the detector the same shape a
+                    # real per-worker timer would report.  Keyed by WORKER
+                    # id — after an evict/resize the slow machine keeps its
+                    # id but sits at a different stage index
+                    share = np.asarray(state.lps, np.float64)
+                    share = share / share.sum() * step_times[-1]
+                    measured = share * np.array(
+                        [straggler.get(engine.stage_workers[s], 1.0)
+                         for s in range(state.stages)])
+                cp.publish(StatsSnapshot(
+                    iteration=step + 1, epoch=engine.epoch,
+                    stats=engine.stats_to_host(state, stats),
+                    tags=np.asarray(state.assignment["tags"]),
+                    num_micro=shapes.num_micro, tokens=tokens_per_step,
+                    seq=seq, frozen=np.asarray(state.dyn["frozen"]),
+                    stage_times=measured))
+                if async_drain:
+                    cp.drain()
+
+            # ---- safe point: apply the newest finished plan (epoch-fenced;
+            # a plan decided against a pre-resize world is rejected)
+            plan = cp.poll(engine.epoch)
+            if plan is not None:
+                if plan.event is not None and plan.event.rebalanced:
+                    events.append(plan.event)
+                if (plan.resize is not None
+                        and plan.resize.target_stages < state.stages):
+                    state = engine.shrink(state, plan.resize.target_stages,
+                                          plan.resize.layers_per_stage,
+                                          step=step)
+                    after_resize(step, f"shrink[{plan.resize.policy}]")
+                elif plan.new_lps is not None:
+                    p, o, d, new_assignment, _ = cp.apply(
+                        plan, state.params, state.opt_state, state.dyn)
+                    state.params, state.opt_state, state.dyn = p, o, d
+                    state.assignment = new_assignment
+                    state.lps = list(cp.ctrl.lps)
+
+            # ---- autoscaler: heartbeat + watermark signals
+            if scaler is not None:
+                d = scaler.observe(step, step_times[-1], state.stages,
+                                   engine.stage_workers, tokens_per_step)
+                if d.action == "evict":
+                    state = engine.evict(state, d.ids, step=step)
+                    after_resize(step, "evict")
+                elif d.action == "grow" and state.stages < stages:
+                    prev = state.stages
+                    state = engine.grow(state, d.workers, step=step)
+                    if state.stages > prev:   # pool may grant nothing
+                        # granted workers stay for this job: stop planning
+                        # resizes so ordinary rebalancing keeps running
+                        cp.with_ctrl(
+                            lambda c: setattr(c.ccfg, "repack", False))
+                        after_resize(step, "grow")
+                elif (d.action == "shrink"
+                        and state.stages > max(1, repack_target)):
+                    state = engine.shrink(
+                        state, max(max(1, repack_target),
+                                   state.stages - d.workers), step=step)
+                    after_resize(step, "shrink[watermark]")
+
+            # ---- legacy fixed-step growth (back-compat; superseded by
+            # --autoscale)
+            if (grow_back and engine.last_shrink_step is not None
+                    and state.stages < stages
+                    and step >= engine.last_shrink_step + grow_back):
+                prev_stages = state.stages
+                state = engine.grow(state, stages - state.stages, step=step)
+                if state.stages > prev_stages:
+                    cp.with_ctrl(lambda c: setattr(c.ccfg, "repack", False))
+                    after_resize(step, "grow")
+            if ckpt:
+                ckpt.maybe_save(step, state.params, state.opt_state,
+                                state.dyn, state.lps)
+            if step % log_every == 0:
+                print(f"step {step:4d} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.3f} S={state.stages} "
+                      f"lps={state.lps}")
+    finally:
+        cp.close()
+        if jm is not None:
+            jm.close()                      # tells the server to exit
+        if jm_proc is not None:
+            try:
+                jm_proc.wait(timeout=10)
+            except Exception:
+                jm_proc.kill()
     wall = time.perf_counter() - t0
     return {"losses": losses, "events": events, "wall_s": wall,
-            "final_lps": ctrl.lps, "params": state.params,
+            "final_lps": list(state.lps), "params": state.params,
             "assignment": state.assignment,
             "tokens_per_step": tokens_per_step,
             "step_times": step_times, "stages_history": stages_hist,
             "resizes": [dataclasses.asdict(e) for e in engine.resizes],
-            "pool_log": list(engine.pool.log),
-            "final_stages": state.stages}
+            "pool_log": list(engine.jm.log),
+            "final_stages": state.stages,
+            "controller": {
+                "mode": "async" if async_controller else "inline",
+                "published": cp.published, "decided": cp.decided,
+                "dropped": cp.dropped,
+                "stale_rejected": cp.stale_rejected},
+            "autoscale_decisions": ([dataclasses.asdict(d)
+                                     for d in scaler.decisions]
+                                    if scaler is not None else [])}
 
 
 def main():
@@ -220,8 +373,37 @@ def main():
     ap.add_argument("--repack-target", type=int, default=1,
                     help="never consolidate below this many workers")
     ap.add_argument("--grow-back", type=int, default=None,
-                    help="re-expand to the original stage count N steps "
-                         "after a shrink (workers granted back by the pool)")
+                    help="legacy: re-expand N steps after a shrink "
+                         "(prefer --autoscale)")
+    ap.add_argument("--async-controller", action="store_true",
+                    help="run profile->decide on a background thread "
+                         "(double-buffered stats mailbox, epoch-fenced "
+                         "plans)")
+    ap.add_argument("--async-drain", action="store_true",
+                    help="deterministic async mode: block for each "
+                         "decision (parity testing)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="signal-driven shrink/grow: heartbeat failures/"
+                         "recoveries (+ throughput watermark with "
+                         "--autoscale-watermark)")
+    ap.add_argument("--autoscale-watermark", action="store_true",
+                    help="also scale on the per-worker throughput "
+                         "watermark (wall-clock based — leave off on "
+                         "noisy shared machines)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=3.0,
+                    help="missed-beat timeout in steps (simulated clock)")
+    ap.add_argument("--simulate-recover", type=int, default=None,
+                    help="revive all non-active workers at this step "
+                         "(heartbeat-recovery demo)")
+    ap.add_argument("--job-manager", default="inproc",
+                    choices=["inproc", "file"],
+                    help="'file' puts the WorkerPool behind a file-RPC "
+                         "server in a separate process")
+    ap.add_argument("--job-manager-dir", default=None)
+    ap.add_argument("--straggler", default=None,
+                    help="simulate slow workers, e.g. '2:1.5' (stage 2 "
+                         "runs 1.5x slow); the detector feeds the "
+                         "balancer")
     args = ap.parse_args()
     out = run_training(
         args.arch, steps=args.steps, stages=args.stages, layers=args.layers,
@@ -231,16 +413,30 @@ def main():
         rebalance_every=args.rebalance_every, ckpt_dir=args.ckpt_dir,
         repack=args.repack, repack_policy=args.repack_policy,
         repack_mem_cap=args.repack_mem_cap,
-        repack_target=args.repack_target, grow_back=args.grow_back)
+        repack_target=args.repack_target, grow_back=args.grow_back,
+        async_controller=args.async_controller,
+        async_drain=args.async_drain, autoscale=args.autoscale,
+        autoscale_watermark=args.autoscale_watermark,
+        heartbeat_timeout=args.heartbeat_timeout,
+        simulate_recover=args.simulate_recover,
+        job_manager=args.job_manager,
+        job_manager_dir=args.job_manager_dir,
+        straggler=_parse_straggler(args.straggler))
+    ctl = out["controller"]
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
           f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}; "
           f"resizes={len(out['resizes'])}; "
-          f"final stages={out['final_stages']}")
+          f"final stages={out['final_stages']}; "
+          f"controller[{ctl['mode']}] decided={ctl['decided']} "
+          f"dropped={ctl['dropped']} stale={ctl['stale_rejected']}")
     for rz in out["resizes"]:
         print(f"  {rz['kind']} @step {rz['step']}: {rz['from_stages']}->"
               f"{rz['to_stages']} stages, workers {rz['workers']}, "
               f"{rz['seconds']*1e3:.0f}ms, ticks {rz['ticks_before']}->"
               f"{rz['ticks_after']}")
+    for d in out["autoscale_decisions"]:
+        print(f"  autoscale @step {d['step']}: {d['action']} "
+              f"x{d['workers']} ({d['reason']})")
 
 
 if __name__ == "__main__":

@@ -38,7 +38,19 @@ class HeartbeatMonitor:
         with self._lock:
             if worker in self._failed:
                 return
+            if worker not in self._last:
+                # an unknown id must not silently grow the watch set — a
+                # typo'd id would otherwise be tracked but never reported
+                # failed for the real worker; ``revive`` is the only way to
+                # (re-)register a worker after construction
+                raise KeyError(
+                    f"heartbeat from unregistered worker {worker!r} "
+                    f"(known: {sorted(self._last)})")
             self._last[worker] = self.clock() if at is None else at
+
+    def known_workers(self) -> Set[int]:
+        with self._lock:
+            return set(self._last)
 
     def failed_workers(self) -> Set[int]:
         now = self.clock()
@@ -47,6 +59,14 @@ class HeartbeatMonitor:
                 if w not in self._failed and now - t > self.timeout:
                     self._failed.add(w)
             return set(self._failed)
+
+    def expire(self, worker: int) -> None:
+        """Mark a worker gone without waiting out the timeout — used when
+        it leaves deliberately (released back to the job manager) rather
+        than by crashing.  ``revive`` is the symmetric re-registration."""
+        with self._lock:
+            if worker in self._last:
+                self._failed.add(worker)
 
     def revive(self, worker: int) -> None:
         with self._lock:
@@ -65,8 +85,16 @@ class StragglerDetector:
         self.times = np.zeros(num_stages)
         self.initialized = False
 
+    def reset(self, num_stages: int) -> None:
+        """Forget the EMAs — required after an elastic resize (the stage
+        set itself changed, old per-stage times are meaningless)."""
+        self.times = np.zeros(num_stages)
+        self.initialized = False
+
     def update(self, stage_times: np.ndarray) -> None:
         stage_times = np.asarray(stage_times, dtype=np.float64)
+        if stage_times.shape != self.times.shape:
+            self.reset(len(stage_times))
         if not self.initialized:
             self.times = stage_times.copy()
             self.initialized = True
@@ -80,6 +108,21 @@ class StragglerDetector:
         if not self.initialized:
             return np.ones_like(expected)
         return np.maximum(1.0, self.times / expected)
+
+    def relative_slowdown(self, expected: np.ndarray) -> np.ndarray:
+        """Scale-free variant of ``slowdown``: rescales ``expected`` to the
+        measured total first, so a uniform calibration error in the cost
+        model (absolute seconds off by a constant factor) does not read as
+        every stage straggling — only *relative* skew between stages
+        survives.  This is the multiplier the controller folds into the
+        balancer's time cost vector."""
+        expected = np.maximum(np.asarray(expected, dtype=np.float64), 1e-12)
+        if not self.initialized:
+            return np.ones_like(expected)
+        scale = self.times.sum() / expected.sum()
+        if scale <= 0:
+            return np.ones_like(expected)
+        return np.maximum(1.0, self.times / (expected * scale))
 
     def stragglers(self, expected: np.ndarray) -> List[int]:
         s = self.slowdown(expected)

@@ -1,0 +1,526 @@
+"""Cluster control plane tests: async decision service (mailbox, epoch
+fencing, inline/async parity), autoscaler policy, and the job-manager RPC
+boundary (in-process + file-backed across a real process boundary)."""
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.cluster.rpc import (FileJobManager, InProcessJobManager,
+                               spawn_file_manager)
+from repro.cluster.service import ControlPlane, StatsSnapshot
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.core.controller import ControllerConfig, DynMoController
+from repro.dynamics.config import DynamicsConfig
+from repro.models import model as M
+from repro.runtime.fault_tolerance import HeartbeatMonitor, WorkerPool
+
+
+# ---------------------------------------------------------------------------
+# decision service
+# ---------------------------------------------------------------------------
+def _setup(stages=4, layers=8, **ccfg_kw):
+    # wide FFN so per-layer cost actually tracks the ff_active stats (at
+    # d_ff=d_model attention would dominate and retention skew vanishes)
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=layers,
+                         d_model=64, d_ff=2048)
+    dcfg = DistConfig(num_stages=stages, slot_slack=3, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig(kind="pruning")
+    ctrl = DynMoController(
+        cfg, dcfg, dyncfg,
+        ControllerConfig(method="partition", rebalance_every=1, **ccfg_kw))
+    return cfg, dcfg, ctrl
+
+
+def _snapshot(cfg, dcfg, iteration, epoch=0, seed=0):
+    """Synthetic per-slot stats with enough skew to force decisions: later
+    stages retain most of their FFN, earlier ones are heavily pruned (plus
+    per-iteration jitter so successive decisions differ)."""
+    tags = np.asarray(M.make_assignment(cfg, dcfg)["tags"])
+    rng = np.random.RandomState(seed + iteration)
+    num_micro = 4
+    live = tags != 0
+    S = tags.shape[0]
+    grad = np.linspace(0.1, 1.0, S)[:, None] * np.ones_like(tags, float)
+    ff = np.where(live, num_micro * np.clip(
+        grad + rng.uniform(-0.05, 0.05, tags.shape), 0.02, 1.0), 0.0)
+    stats = {
+        "ff_active": ff,
+        "attn_density": np.where(live, 0.1 * num_micro, 0.0),
+        "expert_load": np.zeros(tags.shape + (1,)),
+    }
+    return StatsSnapshot(iteration=iteration, epoch=epoch, stats=stats,
+                         tags=tags, num_micro=num_micro, tokens=4096,
+                         seq=64)
+
+
+def _plan_key(plan):
+    if plan is None:
+        return None
+    rz = plan.resize
+    return (plan.iteration, plan.epoch,
+            tuple(plan.new_lps) if plan.new_lps is not None else None,
+            (rz.target_stages, tuple(rz.layers_per_stage),
+             tuple(rz.released_stages), tuple(rz.mem_per_stage))
+            if rz is not None else None,
+            plan.event.imbalance_before, plan.event.imbalance_after,
+            plan.event.moved_layers, plan.event.rebalanced)
+
+
+@pytest.mark.parametrize("repack", [False, True])
+def test_async_decision_equals_inline_on_same_snapshots(repack):
+    """Deterministic-thread parity: the decision computed on the background
+    thread must be bit-identical to the inline one from the same stats
+    snapshot, across an evolving sequence of controller states — both for
+    rebalance plans (repack=False) and resize plans (repack=True)."""
+    kw = (dict(repack=True, repack_mem_cap=1e18, repack_target=2)
+          if repack else {})
+    cfg, dcfg, ctrl_a = _setup(layers=16, **kw)
+    _, _, ctrl_b = _setup(layers=16, **kw)
+    inline = ControlPlane(ctrl_a, async_mode=False)
+    background = ControlPlane(ctrl_b, async_mode=True)
+    try:
+        interesting = 0
+        for it in range(1, 8):
+            snap = _snapshot(cfg, dcfg, it)
+            inline.publish(snap)
+            background.publish(snap)
+            background.drain()
+            p_in = inline.poll(0)
+            p_bg = background.poll(0)
+            assert _plan_key(p_in) == _plan_key(p_bg)
+            if p_in is None:
+                continue
+            if repack:
+                interesting += p_in.resize is not None
+            elif p_in.new_lps is not None:
+                interesting += 1
+                # advance both controller states identically (the trainer
+                # would migrate here) so later decisions see evolving lps
+                new = list(p_in.new_lps)
+                inline.with_ctrl(lambda c: setattr(c, "lps", list(new)))
+                background.with_ctrl(lambda c: setattr(c, "lps", list(new)))
+        assert interesting >= 1     # the skewed stats did force decisions
+        assert background.decided == inline.decided == 7
+    finally:
+        background.close()
+
+
+def test_stale_epoch_plan_rejected_on_poll():
+    """A plan decided against epoch 0 must be fenced off once a concurrent
+    resize moved the world to epoch 1 — never applied."""
+    cfg, dcfg, ctrl = _setup()
+    cp = ControlPlane(ctrl, async_mode=True)
+    try:
+        cp.publish(_snapshot(cfg, dcfg, 1, epoch=0))
+        cp.drain()
+        assert cp.poll(1) is None           # world resized meanwhile
+        assert cp.stale_rejected == 1
+        # same snapshot polled at its own epoch is fine
+        cp.publish(_snapshot(cfg, dcfg, 2, epoch=0))
+        cp.drain()
+        assert cp.poll(0) is not None
+    finally:
+        cp.close()
+
+
+def test_stale_epoch_snapshot_skipped_before_decide():
+    """With a live epoch_fn the worker refuses to even decide on a
+    pre-resize snapshot (no wasted work, no polluted controller events)."""
+    cfg, dcfg, ctrl = _setup()
+    epoch = [1]
+    cp = ControlPlane(ctrl, async_mode=True, epoch_fn=lambda: epoch[0])
+    try:
+        cp.publish(_snapshot(cfg, dcfg, 1, epoch=0))   # decided vs epoch 0
+        cp.drain()
+        assert cp.poll(1) is None
+        assert cp.stale_rejected == 1
+        assert ctrl.events == []            # decide never ran
+        assert cp.decided == 0
+    finally:
+        cp.close()
+
+
+def test_worker_thread_error_surfaces_on_training_thread():
+    """A failure inside the background decide must crash the training
+    thread loudly (like inline would), not silently stop all decisions —
+    and the worker must survive to serve later snapshots."""
+    cfg, dcfg, ctrl = _setup()
+    cp = ControlPlane(ctrl, async_mode=True)
+    try:
+        bad = _snapshot(cfg, dcfg, 1)
+        bad.tags = np.zeros(3)              # wrong rank: profiler raises
+        cp.publish(bad)
+        with pytest.raises(RuntimeError, match="decision worker failed"):
+            cp.drain()
+        cp.publish(_snapshot(cfg, dcfg, 2))  # worker thread still alive
+        cp.drain()
+        assert cp.poll(0) is not None
+    finally:
+        cp.close()
+
+
+def test_mailbox_is_latest_wins():
+    """The training thread never queues behind the worker: an unconsumed
+    snapshot is overwritten, not accumulated."""
+    cfg, dcfg, ctrl = _setup()
+    cp = ControlPlane(ctrl, async_mode=True)
+    cp.close()                              # freeze the worker
+    cp.publish(_snapshot(cfg, dcfg, 1))
+    cp.publish(_snapshot(cfg, dcfg, 2))
+    cp.publish(_snapshot(cfg, dcfg, 3))
+    assert cp.published == 3
+    assert cp.dropped == 2
+    assert cp._inbox.iteration == 3
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+def test_autoscaler_evicts_on_heartbeat_failure():
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=5.0, clock=lambda: t[0])
+    sc = Autoscaler(AutoscalerConfig(min_stages=1, max_stages=4,
+                                     watermark=False), mon)
+    for step in range(10):
+        t[0] = float(step)
+        for w in (0, 1, 2):                 # worker 3 goes silent
+            mon.beat(w)
+        d = sc.observe(step, 1.0, stages=4, active_workers=[0, 1, 2, 3],
+                       tokens=1000)
+        if d.action != "none":
+            assert d.action == "evict" and d.ids == [3]
+            assert step > 5                 # after the timeout, not before
+            break
+    else:
+        pytest.fail("failure never detected")
+    # the failure is reported once, not every step
+    d = sc.observe(step + 1, 1.0, stages=3, active_workers=[0, 1, 2],
+                   tokens=1000)
+    assert d.action == "none"
+
+
+def test_autoscaler_grow_on_recovery_is_remembered():
+    """A revive while growth is impossible (already at max_stages) must not
+    be lost — the grow fires when capacity headroom appears."""
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=5.0, clock=lambda: t[0])
+    sc = Autoscaler(AutoscalerConfig(min_stages=1, max_stages=4,
+                                     watermark=False), mon)
+    mon.expire(3)                           # worker 3 released to the pool
+    d = sc.observe(0, 1.0, stages=3, active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "none"
+    mon.revive(3)
+    # at max_stages there is no headroom: the recovery must be remembered
+    d = sc.observe(1, 1.0, stages=4, active_workers=[0, 1, 2, 9],
+                   tokens=1000)
+    assert d.action == "none"
+    d = sc.observe(2, 1.0, stages=3, active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "grow" and d.ids == [3]
+    # not consumed until the worker turns up active — but retries are
+    # cooldown-spaced, so the very next step stays quiet
+    d = sc.observe(3, 1.0, stages=3, active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "none"
+    # the grant failed (worker still absent): the recovery is retried
+    # after the cooldown instead of being lost
+    d = sc.observe(2 + sc.cfg.cooldown, 1.0, stages=3,
+                   active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "grow" and d.ids == [3]
+    # a successful grant clears it: once active, no more grow attempts
+    d = sc.observe(3 + 2 * sc.cfg.cooldown, 1.0, stages=4,
+                   active_workers=[0, 1, 2, 3], tokens=1000)
+    assert d.action == "none"
+    d = sc.observe(4 + 3 * sc.cfg.cooldown, 1.0, stages=3,
+                   active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "none"
+
+
+def test_autoscaler_recovery_survives_retimeout_before_grant():
+    """A revived worker is not beaten until it is actually granted back, so
+    it may time out into failed again while waiting — the pending recovery
+    must survive that and keep retrying on the cooldown cadence."""
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=3.0, clock=lambda: t[0])
+    cfg = AutoscalerConfig(min_stages=1, max_stages=4, cooldown=4,
+                           watermark=False)
+    sc = Autoscaler(cfg, mon)
+    def beat_active():
+        for w in (0, 1, 2):
+            mon.beat(w)
+
+    mon.expire(3)
+    beat_active()
+    sc.observe(0, 1.0, stages=3, active_workers=[0, 1, 2], tokens=1000)
+    mon.revive(3)
+    t[0] = 1.0
+    beat_active()
+    d = sc.observe(1, 1.0, stages=3, active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "grow" and d.ids == [3]   # first attempt (fails)
+    t[0] = 6.0          # worker 3 unbeaten past the timeout: failed again
+    beat_active()
+    assert mon.failed_workers() == {3}
+    d = sc.observe(6, 1.0, stages=3, active_workers=[0, 1, 2], tokens=1000)
+    assert d.action == "grow" and d.ids == [3]   # retried, not lost
+
+
+def test_autoscaler_capped_eviction_retries_remaining_dead_workers():
+    """When min_stages caps how many dead workers can be evicted at once,
+    the remainder must stay due for eviction — not be silently absorbed
+    into the known-failed set."""
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=2.0, clock=lambda: t[0])
+    sc = Autoscaler(AutoscalerConfig(min_stages=3, max_stages=4,
+                                     watermark=False), mon)
+    t[0] = 5.0
+    mon.beat(0)
+    mon.beat(3)                                  # workers 1 AND 2 die
+    d = sc.observe(5, 1.0, stages=4, active_workers=[0, 1, 2, 3],
+                   tokens=1000)
+    assert d.action == "evict" and d.ids == [1]  # capped at min_stages
+    # worker 2 is still dead and still active: it must be reported again
+    # as soon as capacity allows (here: the pipeline grew back to 4)
+    d = sc.observe(6, 1.0, stages=3, active_workers=[0, 2, 3], tokens=1000)
+    assert d.action == "none"                    # at min_stages: blocked
+    d = sc.observe(7, 1.0, stages=4, active_workers=[0, 2, 3, 9],
+                   tokens=1000)
+    assert d.action == "evict" and d.ids == [2]
+
+
+def test_autoscaler_blocked_evict_does_not_starve_recovery_grow():
+    """At min_stages a dead active worker cannot be evicted — but a
+    pending recovery grow must still fire (it is exactly what creates the
+    capacity to evict the corpse)."""
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=2.0, clock=lambda: t[0])
+    sc = Autoscaler(AutoscalerConfig(min_stages=2, max_stages=4,
+                                     watermark=False), mon)
+    mon.expire(2)                               # 2 and 3 released earlier
+    mon.expire(3)
+    sc.observe(0, 1.0, stages=2, active_workers=[0, 1], tokens=1000)
+    t[0] = 5.0
+    mon.beat(0)                                 # worker 1 dies at min size
+    assert mon.failed_workers() == {1, 2, 3}
+    mon.revive(3)                               # and worker 3 recovers
+    d = sc.observe(5, 1.0, stages=2, active_workers=[0, 1], tokens=1000)
+    assert d.action == "grow" and d.ids == [3]  # not starved by the evict
+    # once grown, the dead worker is evictable
+    mon.beat(0)
+    mon.beat(3)
+    d = sc.observe(6, 1.0, stages=3, active_workers=[0, 1, 3], tokens=1000)
+    assert d.action == "evict" and d.ids == [1]
+
+
+def test_file_job_manager_ignores_previous_runs_leftovers(tmp_path):
+    """A server started over a directory holding a finished run's req/resp
+    files must not replay those ops (including the old shutdown)."""
+    import json
+    root = str(tmp_path)
+    # a previous run: release + shutdown, all answered
+    for seq, op in ((1, {"op": "release", "workers": [2, 3]}),
+                    (2, {"op": "shutdown"})):
+        with open(f"{root}/req-{seq:06d}.json", "w") as f:
+            json.dump(op, f)
+        with open(f"{root}/resp-{seq:06d}.json", "w") as f:
+            json.dump({"op": op["op"], "active": 2, "released": [2, 3]}, f)
+    proc = spawn_file_manager(root, workers=4, idle_timeout_s=60.0)
+    try:
+        jm = FileJobManager(root, timeout_s=30.0)
+        assert jm._seq == 2         # client skipped the stale namespace
+        assert jm.num_active == 4   # old release NOT replayed, resp fresh
+        jm.close()                  # and the old shutdown didn't kill it
+        assert proc.wait(timeout=20) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def test_autoscaler_watermark_does_not_oscillate():
+    """Shrink and grow watermarks oppose each other in compute-bound
+    regimes (a shrink lowers total throughput): after one shrink→grow
+    round trip the shrunk size is remembered as bad and never re-tried."""
+    cfg = AutoscalerConfig(min_stages=2, max_stages=4, window=2,
+                           low_watermark=0.6, high_watermark=0.9,
+                           patience=2, cooldown=2, watermark=True)
+    sc = Autoscaler(cfg, monitor=None)
+    step = 0
+    for _ in range(4):                  # best recorded at 4 stages, 1.0s
+        sc.observe(step, 1.0, 4, [0, 1, 2, 3], 1000)
+        step += 1
+    actions, last_action_step = [], None
+    stages = 4
+    for _ in range(60):                 # compute-bound: 3x slower forever
+        d = sc.observe(step, 3.0, stages, list(range(stages)), 1000)
+        if d.action == "shrink":
+            stages -= d.workers
+            sc.note_resize(step, stages)
+        elif d.action == "grow":
+            stages += d.workers
+            sc.note_resize(step, stages)
+        if d.action != "none":
+            actions.append(d.action)
+            last_action_step = step
+        step += 1
+    # bounded exploration, not a steady resize cycle: each shrunk size is
+    # tried at most once (then remembered as bad), so the total action
+    # count is bounded and the tail of the run is quiet
+    span = cfg.max_stages - cfg.min_stages
+    assert 0 < actions.count("shrink") <= span, actions
+    assert actions.count("grow") <= span, actions
+    assert last_action_step < step - 20, (actions, last_action_step)
+    assert stages == 4                  # settled back at full size
+
+
+def test_autoscaler_watermark_shrink_with_hysteresis():
+    cfg = AutoscalerConfig(min_stages=2, max_stages=4, window=2,
+                           low_watermark=0.6, patience=2, cooldown=5,
+                           watermark=True)
+    sc = Autoscaler(cfg, monitor=None)
+    step = 0
+    for _ in range(4):                      # establish best throughput
+        d = sc.observe(step, 1.0, stages=4, active_workers=[0, 1, 2, 3],
+                       tokens=1000)
+        assert d.action == "none"
+        step += 1
+    shrinks = []
+    for _ in range(12):                     # sustained idleness
+        d = sc.observe(step, 3.0, stages=4, active_workers=[0, 1, 2, 3],
+                       tokens=1000)
+        if d.action == "shrink":
+            shrinks.append(step)
+            sc.note_resize(step, 3)         # what the trainer does
+        step += 1
+    # hysteresis: patience delays the first shrink, cooldown spaces repeats
+    assert shrinks, "watermark shrink never fired"
+    assert shrinks[0] >= 4 + cfg.patience - 1
+    assert all(b - a >= cfg.cooldown for a, b in zip(shrinks, shrinks[1:]))
+
+
+def test_autoscaler_watermark_grow_on_throughput_drop():
+    cfg = AutoscalerConfig(min_stages=2, max_stages=4, window=2,
+                           high_watermark=0.9, patience=2, cooldown=3,
+                           watermark=True)
+    sc = Autoscaler(cfg, monitor=None)
+    step = 0
+    for _ in range(4):
+        assert sc.observe(step, 1.0, 2, [0, 1], 1000).action == "none"
+        step += 1
+    grew = False
+    for _ in range(6):                      # total throughput regressed 3x
+        d = sc.observe(step, 3.0, 2, [0, 1], 1000)
+        if d.action == "grow":
+            grew = True
+            break
+        step += 1
+    assert grew
+
+
+# ---------------------------------------------------------------------------
+# job-manager RPC boundary
+# ---------------------------------------------------------------------------
+def test_in_process_job_manager_wraps_pool():
+    pool = WorkerPool(4)
+    jm = InProcessJobManager(pool)
+    assert jm.release([2, 3]) == [2, 3]
+    assert jm.num_active == 2
+    assert jm.release([3]) == []            # already released
+    assert jm.request(5) == [2, 3]
+    assert jm.num_active == 4
+    jm.fail(0)
+    assert jm.num_active == 3
+    assert jm.log == pool.log
+
+
+def test_file_job_manager_crosses_process_boundary(tmp_path):
+    root = str(tmp_path)
+    proc = spawn_file_manager(root, workers=4, idle_timeout_s=60.0)
+    try:
+        jm = FileJobManager(root, timeout_s=30.0)
+        assert jm.num_active == 4
+        assert jm.release([2, 3]) == [2, 3]
+        assert jm.num_active == 2
+        assert jm.release([3]) == []
+        assert jm.request(1) == [2]
+        jm.fail(1)
+        assert jm.num_active == 2           # 0 and 2 active; 3 released
+        assert jm.request(5) == [3]
+        assert jm.log == ["release:2", "release:3", "grant:2", "fail:1",
+                          "grant:3"]
+        jm.close()
+        assert proc.wait(timeout=20) == 0   # shutdown op ends the server
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def test_file_job_manager_timeout_without_server(tmp_path):
+    jm = FileJobManager(str(tmp_path), timeout_s=0.2, poll_s=0.02)
+    with pytest.raises(TimeoutError):
+        jm.request(1)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (subprocess, multi-device)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_async_controller_loss_parity():
+    """--async-controller on/off must produce the SAME training trajectory
+    (decisions drained deterministically): identical losses, identical
+    resizes — the acceptance parity criterion."""
+    out = run_in_subprocess("""
+from repro.launch.train import run_training
+kw = dict(steps=20, stages=4, layers=8, d_model=128, seq=32, num_micro=4,
+          mb_global=2, dynamism="pruning", repack=True, rebalance_every=5,
+          log_every=1000)
+a = run_training("smollm-360m", async_controller=False, **kw)
+b = run_training("smollm-360m", async_controller=True, async_drain=True,
+                 **kw)
+assert a["losses"] == b["losses"], (a["losses"], b["losses"])
+ra = [(r["kind"], r["step"], r["from_stages"], r["to_stages"])
+      for r in a["resizes"]]
+rb = [(r["kind"], r["step"], r["from_stages"], r["to_stages"])
+      for r in b["resizes"]]
+assert ra == rb and len(ra) == 1 and ra[0][0] == "shrink", (ra, rb)
+assert a["stages_history"] == b["stages_history"]
+assert b["controller"]["mode"] == "async"
+assert b["controller"]["decided"] >= 1
+print("PASS", a["losses"][0], "->", a["losses"][-1], ra)
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_autoscale_with_file_job_manager_end_to_end():
+    """The acceptance demo with NO --grow-back: the controller's repack
+    decision shrinks 4->2 live, the released workers cross the file-RPC
+    job-manager boundary (separate process), and a simulated heartbeat
+    recovery grows back to 4 via the autoscaler."""
+    out = run_in_subprocess("""
+from repro.launch.train import run_training
+out = run_training("smollm-360m", steps=30, stages=4, layers=8, d_model=128,
+                   seq=32, num_micro=4, mb_global=2, dynamism="pruning",
+                   repack=True, rebalance_every=5, log_every=1000,
+                   async_controller=True, autoscale=True,
+                   simulate_recover=18, job_manager="file")
+rz = out["resizes"]
+assert len(rz) == 2, rz
+assert rz[0]["kind"] == "shrink" and rz[0]["from_stages"] == 4 \\
+    and rz[0]["to_stages"] == 2, rz
+assert rz[1]["kind"] == "grow" and rz[1]["to_stages"] == 4, rz
+assert set(rz[0]["workers"]) == set(rz[1]["workers"]) == {2, 3}, rz
+# the pool transitions crossed the RPC boundary (client-side mirror)
+assert out["pool_log"] == ["release:2", "release:3", "grant:2", "grant:3"], \\
+    out["pool_log"]
+assert out["final_stages"] == 4
+ad = out["autoscale_decisions"]
+assert any(d["action"] == "grow" and set(d["ids"]) == {2, 3} for d in ad), ad
+assert out["controller"]["mode"] == "async"
+import math
+assert all(math.isfinite(l) for l in out["losses"])
+pre = out["losses"][:rz[0]["step"]]
+post = out["losses"][rz[0]["step"] + 1:]
+assert sum(post) / len(post) < sum(pre) / len(pre), (pre, post)
+print("PASS", out["losses"][0], "->", out["losses"][-1])
+""", devices=4, timeout=900)
+    assert "PASS" in out

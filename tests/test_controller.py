@@ -96,12 +96,57 @@ def test_profile_from_stats_folds_dynamism():
     assert prof.time_per_layer.sum() < full.time_per_layer.sum()
 
 
+def test_straggler_triggers_ordinary_rebalance():
+    """A persistently slow worker (1.5-2x) must read as load imbalance: the
+    detector's relative slowdown folds into the time cost vector and the
+    ordinary rebalance moves layers off the straggling stage."""
+    from repro.runtime.fault_tolerance import StragglerDetector
+    cfg, dcfg, dyncfg = _setup(layers=16)
+    det = StragglerDetector(4, ema=0.5)
+    ctrl = DynMoController(cfg, dcfg, dyncfg,
+                           ControllerConfig(method="partition",
+                                            rebalance_every=1),
+                           straggler=det)
+    L = cfg.total_blocks()
+    prof = LayerProfile(np.ones(L), np.ones(L), np.zeros(4), [None] * L)
+    # perfectly balanced layers, no straggler data yet: no rebalance
+    new_lps, ev = ctrl.decide(prof, 1)
+    assert new_lps is None and not ev.rebalanced
+    base_lps = list(ctrl.lps)
+    # stage 2's worker measures 2x slower than its modelled share (the
+    # absolute scale is deliberately wrong by 7x — only relative skew
+    # may matter)
+    expected = np.asarray(stage_loads(np.ones(L), ctrl.lps))
+    for _ in range(10):
+        det.update(expected * np.array([1.0, 1.0, 2.0, 1.0]) * 7.0)
+    new_lps, ev = ctrl.decide(prof, 2)
+    assert ev.rebalanced and new_lps is not None
+    assert ev.imbalance_after < ev.imbalance_before
+    # the straggling stage sheds work under the straggler-adjusted costs
+    slow = det.relative_slowdown(expected)
+    adj = np.ones(L) * np.repeat(slow, base_lps)
+    assert stage_loads(adj, new_lps)[2] < stage_loads(adj, base_lps)[2]
+
+
+def test_straggler_detector_resets_on_rebind():
+    from repro.runtime.fault_tolerance import StragglerDetector
+    cfg, dcfg, dyncfg = _setup()
+    det = StragglerDetector(4)
+    ctrl = DynMoController(cfg, dcfg, dyncfg, ControllerConfig(),
+                           straggler=det)
+    det.update(np.ones(4))
+    assert det.initialized
+    import dataclasses as dc
+    ctrl.rebind(dc.replace(dcfg, num_stages=2), [4, 4])
+    assert not det.initialized and len(det.times) == 2
+
+
 def test_controller_repack_path():
     cfg, dcfg, dyncfg = _setup(stages=4, layers=8)
     ctrl = DynMoController(
         cfg, dcfg, dyncfg,
         ControllerConfig(method="partition", rebalance_every=1, repack=True,
-                         repack_max_mem=1e9, repack_target=2))
+                         repack_mem_cap=1e9, repack_target=2))
     L = cfg.total_blocks()
     times = np.linspace(1.0, 2.0, L)
     prof = LayerProfile(times, np.full(L, 1e6), np.zeros(4), [None] * L)

@@ -136,6 +136,49 @@ print("PASS", l4, l2, l2b)
 
 
 @pytest.mark.slow
+def test_engine_evict_failure_path():
+    """A mid-list worker failure: the engine rebuilds without it, the loss
+    is preserved, and the job manager records it dead (not released — it
+    is not grantable until revived on the manager side)."""
+    out = run_in_subprocess("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config, reduced_config, DistConfig
+from repro.dynamics import DynamicsConfig
+from repro.launch.engine import ElasticEngine
+from repro.pipeline.pipeline import PipelineShapes
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=8, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512)
+dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                  param_dtype="float32")
+engine = ElasticEngine(cfg, dcfg, DynamicsConfig(),
+                       PipelineShapes(2, 2, 32), data=1)
+state = engine.init_state(jax.random.PRNGKey(0))
+r = np.random.RandomState(0)
+batch = {"tokens": jnp.asarray(r.randint(0, cfg.vocab_size, (2, 2, 32)),
+                               jnp.int32),
+         "labels": jnp.asarray(r.randint(0, cfg.vocab_size, (2, 2, 32)),
+                               jnp.int32),
+         "label_mask": jnp.ones((2, 2, 32), jnp.float32)}
+l4 = float(engine.eval_loss(state, batch))
+epoch0 = engine.epoch
+state3 = engine.evict(state, [1], step=7)
+assert engine.epoch == epoch0 + 1          # resize fenced the epoch
+assert engine.stage_workers == [0, 2, 3]
+assert engine.pool.dead == {1} and not engine.pool.released
+assert engine.pool.num_active == 3
+assert engine.jm.request(1) == []          # dead workers are not grantable
+l3 = float(engine.eval_loss(state3, batch))
+assert abs(l4 - l3) < 3e-3, (l4, l3)
+rz = engine.resizes[-1]
+assert rz.kind == "evict" and rz.workers == [1] and rz.step == 7
+assert engine.evict(state3, [9]) is state3   # unknown worker: no-op
+print("PASS", l4, l3)
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
 def test_engine_live_shrink_grow_in_training_loop():
     """The acceptance demo: pruning shrinks the model, the controller's
     repack decision triggers a live 4→2 shrink mid-run (released workers

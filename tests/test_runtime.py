@@ -43,6 +43,42 @@ def test_straggler_detector_feeds_balancer():
     assert res.layers_per_stage[2] < 4
 
 
+def test_heartbeat_rejects_unknown_worker():
+    """A typo'd id must not silently grow the watch set (it could never be
+    reported failed for the real worker); ``revive`` is the only way to
+    (re-)register after construction."""
+    t = [0.0]
+    mon = HeartbeatMonitor(2, timeout_s=10.0, clock=lambda: t[0])
+    with pytest.raises(KeyError):
+        mon.beat(5)
+    assert mon.known_workers() == {0, 1}
+    mon.revive(5)                    # explicit registration
+    mon.beat(5)
+    assert mon.known_workers() == {0, 1, 5}
+    # expire: deliberate departure (released worker) fails immediately …
+    mon.expire(1)
+    assert mon.failed_workers() == {1}
+    mon.beat(1)                      # failed workers' beats are ignored
+    assert mon.failed_workers() == {1}
+    # … and revive is the recovery transition
+    mon.revive(1)
+    assert mon.failed_workers() == set()
+
+
+def test_straggler_relative_slowdown_is_scale_free():
+    det = StragglerDetector(4, ema=0.5)
+    expected = np.array([1.0, 1.0, 1.0, 1.0])
+    for _ in range(10):
+        det.update(np.array([3.0, 3.0, 6.0, 3.0]))   # 3x scale error + 2x
+    rel = det.relative_slowdown(expected)
+    np.testing.assert_allclose(rel, [1.0, 1.0, 1.6, 1.0], atol=1e-6)
+    # absolute slowdown would misread the calibration error as everyone
+    # straggling
+    assert det.slowdown(expected).min() >= 3.0
+    det.reset(2)
+    assert not det.initialized and len(det.times) == 2
+
+
 def test_worker_pool_lifecycle():
     pool = WorkerPool(8)
     pool.release([6, 7])          # re-packing freed two workers
