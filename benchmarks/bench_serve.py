@@ -1,0 +1,162 @@
+"""Elastic serving benchmark: a bursty arrival trace served twice — once on
+a fixed mesh, once with the autoscaler shrinking/growing the engine worlds —
+with identical generated tokens (asserted).  Records tok/s and p50/p95
+per-token latency overall, plus the tok/s comparison restricted to the
+LOW-LOAD window (the elastic run's first shrink→grow span): the shrunk
+pipeline pays ``num_micro + S' - 1`` ticks per decode instead of
+``num_micro + S - 1``, so the elastic server clears the drained batch
+faster *while holding fewer workers*.
+
+Subprocess-isolated (XLA's host device count must be fixed pre-import).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import json
+import numpy as np
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.requests import Request
+
+gen_long = %(gen_long)d
+cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                     d_model=%(d_model)d, num_heads=4, num_kv_heads=2,
+                     d_ff=2 * %(d_model)d, vocab_size=512)
+dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                  param_dtype="float32")
+shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8,
+                        cache_len=8 + gen_long)
+rng = np.random.RandomState(0)
+prompt = lambda n: rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+# burst of short early-exit requests + a long tail that keeps decoding
+# through the drained (shrunken) phase, then a second burst -> grow back
+trace = []
+for i in range(6):
+    trace.append(Request(rid=i, arrival=0, prompt=prompt(8),
+                         gen=2 + i %% 3, kind="early_exit"))
+for i in range(2):
+    trace.append(Request(rid=6 + i, arrival=0, prompt=prompt(6),
+                         gen=gen_long))
+t2 = gen_long + 14
+for i in range(6):
+    trace.append(Request(rid=8 + i, arrival=t2 + i // 4, prompt=prompt(8),
+                         gen=4))
+
+def run(autoscale):
+    scaler = Autoscaler(AutoscalerConfig(
+        min_stages=2, max_stages=4, patience=2, cooldown=3, queue_high=2,
+        occupancy_low=0.6)) if autoscale else None
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, scaler=scaler,
+                        min_stages=2, seed=0)
+    import copy
+    rep = srv.serve(copy.deepcopy(trace), autoscale=autoscale)
+    srv.close()
+    return rep
+
+keep = ("completions", "resizes", "tick_wall_s", "tick_tokens",
+        "stages_history", "pool_log", "total_tokens", "wall_s",
+        "tokens_per_s", "latency_p50_s", "latency_p95_s",
+        "autoscale_decisions")
+el = run(True)
+fx = run(False)
+out = {"elastic": {k: el[k] for k in keep},
+       "fixed": {k: fx[k] for k in keep}}
+print("BENCH_JSON " + json.dumps(out))
+"""
+
+
+def _run_child(gen_long: int, d_model: int) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD % {
+            "gen_long": gen_long, "d_model": d_model}],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": SRC, "REPRO_TRAIN_DEVICES": "4"})
+    if proc.returncode != 0:
+        raise RuntimeError(f"serve bench child failed:\n"
+                           f"{proc.stdout}\n{proc.stderr[-3000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            return json.loads(line[len("BENCH_JSON "):])
+    raise RuntimeError(f"no BENCH_JSON in child output:\n{proc.stdout}")
+
+
+def _window_tps(rep: dict, lo: int, hi: int) -> float:
+    toks = sum(rep["tick_tokens"][lo:hi])
+    wall = sum(rep["tick_wall_s"][lo:hi])
+    return toks / max(1e-9, wall)
+
+
+def run(quick: bool = False):
+    out = _run_child(gen_long=20 if quick else 32,
+                     d_model=64 if quick else 128)
+    el, fx = out["elastic"], out["fixed"]
+    # generated tokens must be identical request-for-request
+    for a, b in zip(el["completions"], fx["completions"]):
+        if a["tokens"] != b["tokens"]:
+            raise RuntimeError(f"token mismatch rid {a['rid']}: "
+                               f"{a['tokens']} vs {b['tokens']}")
+    assert el["total_tokens"] == fx["total_tokens"]
+    shrinks = [r for r in el["resizes"] if r["kind"] == "shrink"]
+    grows = [r for r in el["resizes"] if r["kind"] == "grow"]
+    if not shrinks:
+        raise RuntimeError(f"no autoscale shrink fired: {el['resizes']}")
+    # low-load window: after the LAST shrink settles (skip the fresh
+    # world's compile ticks) until just before the grow-back burst (whose
+    # admission prefill compiles too); idle lull ticks inside contribute
+    # ~0 wall and 0 tokens to both runs alike
+    lo = shrinks[-1]["step"] + 3
+    hi = grows[0]["step"] - 2 if grows else len(el["tick_wall_s"])
+    if hi - lo < 3:
+        raise RuntimeError(
+            f"low-load window too short ({lo}..{hi}); resizes "
+            f"{[(r['kind'], r['step']) for r in el['resizes']]}")
+    el_low = _window_tps(el, lo, hi)
+    fx_low = _window_tps(fx, lo, hi)
+    released = sum(1 for e in el["pool_log"] if e.startswith("release:"))
+    rows = [
+        ("serve_total_tokens", 0.0, float(el["total_tokens"])),
+        ("serve_token_identity", 0.0, 1.0),
+        ("serve_shrinks", 0.0, float(len(shrinks))),
+        ("serve_grows", 0.0, float(len(grows))),
+        ("serve_released_workers", 0.0, float(released)),
+        ("serve_tok_s_elastic", 0.0, el["tokens_per_s"]),
+        ("serve_tok_s_fixed", 0.0, fx["tokens_per_s"]),
+        ("serve_tok_s_elastic_low_load", 0.0, el_low),
+        ("serve_tok_s_fixed_low_load", 0.0, fx_low),
+        ("serve_low_load_speedup", 0.0, el_low / max(1e-9, fx_low)),
+        ("serve_p50_latency_ms_elastic", el["latency_p50_s"] * 1e6,
+         el["latency_p50_s"] * 1e3),
+        ("serve_p95_latency_ms_elastic", el["latency_p95_s"] * 1e6,
+         el["latency_p95_s"] * 1e3),
+        ("serve_p50_latency_ms_fixed", fx["latency_p50_s"] * 1e6,
+         fx["latency_p50_s"] * 1e3),
+        ("serve_p95_latency_ms_fixed", fx["latency_p95_s"] * 1e6,
+         fx["latency_p95_s"] * 1e3),
+    ]
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -21,7 +21,7 @@ def main() -> None:
 
     from benchmarks import (bench_elastic, bench_idleness, bench_kernels,
                             bench_overhead, bench_repack, bench_roofline,
-                            bench_throughput)
+                            bench_serve, bench_throughput)
     benches = {
         "idleness": bench_idleness.main,        # Fig. 1
         "throughput": bench_throughput.main,    # Fig. 3 (+ bubble ratios)
@@ -31,6 +31,7 @@ def main() -> None:
         "kernels": bench_kernels.main,          # §4.2.2 / §4.2.4
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
         "elastic": bench_elastic.main,          # §3.4 live shrink (engine)
+        "serve": bench_serve.main,              # elastic continuous batching
     }
     names = (args.only.split(",") if args.only else list(benches))
     for name in names:

@@ -78,7 +78,7 @@ def main():
                     for i in range(L)]
                 t = cost_vector(cfg, mbg * 1, seq + g, states, by="time")
                 prof = LayerProfile(t, cost_vector(
-                    cfg, mbg, seq + g, states, "param") * 2,
+                    cfg, mbg, seq + g, states, "param") * dcfg.bytes_per_param,
                     np.zeros(stages), states)
                 new_lps, ev = ctrl.decide(prof, g)
                 if new_lps:

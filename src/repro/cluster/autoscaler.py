@@ -43,6 +43,15 @@ class AutoscalerConfig:
     watermark: bool = True       # False: heartbeat signals only (wall-clock
     #   throughput is noise on shared CI machines — keep scaling
     #   deterministic there)
+    # ---- serving load signals (``observe_load``) -------------------------
+    queue_high: int = 8          # pending requests → grow pressure
+    occupancy_low: float = 0.35  # live-lane fraction; with an empty queue,
+    #   sustained occupancy below this consolidates the serving pipeline
+    latency_slo_s: float = 0.0   # p95 inter-token latency SLO → grow
+    #   pressure (the server feeds the p95 over its recent token window,
+    #   not a raw tick wall).  0 disables: the latency signal is
+    #   wall-clock and therefore breaks run-to-run determinism — leave
+    #   off when comparing traces
 
 
 @dataclasses.dataclass
@@ -78,6 +87,8 @@ class Autoscaler:
         self._best_total = 0.0
         self._low_streak = 0
         self._slow_streak = 0
+        self._pressure_streak = 0
+        self._drain_streak = 0
         self._last_resize_step: Optional[int] = None
         self._last_grow_attempt: Optional[int] = None
         self.decisions: List[ScaleDecision] = []
@@ -90,6 +101,8 @@ class Autoscaler:
         self._times.clear()
         self._low_streak = 0
         self._slow_streak = 0
+        self._pressure_streak = 0
+        self._drain_streak = 0
         self._last_resize_step = step
 
     def _in_cooldown(self, step: int) -> bool:
@@ -195,6 +208,50 @@ class Autoscaler:
                     f"throughput {total:.0f} tok/s below "
                     f"{self.cfg.high_watermark:.0%} of best "
                     f"{self._best_total:.0f}")
+        if decision.action != _NONE:
+            self.decisions.append(decision)
+        return decision
+
+    # -- serving load signals (one observation per scheduler tick) ---------
+    def observe_load(self, step: int, stages: int, *, queue_depth: int,
+                     occupancy: float, latency_s: float = 0.0
+                     ) -> ScaleDecision:
+        """Queue-depth / latency / occupancy watermarks for the serving
+        tier, sharing the training watermarks' hysteresis (``patience``
+        consecutive signals, ``cooldown`` after any resize).
+
+        *Grow* on sustained admission pressure: the queue backs up past
+        ``queue_high`` (requests wait because every KV lane is taken), or
+        p95 per-token latency breaches the SLO when one is configured.
+        *Shrink* on sustained drain: queue empty and live-lane occupancy
+        below ``occupancy_low`` — early exits / short generations have
+        vacated most lanes, so fewer workers serve the same tokens with a
+        shorter pipeline fill.  Signals are logical (queue/occupancy), so
+        scaling is deterministic per trace unless the latency SLO is on.
+        """
+        decision = ScaleDecision(step, _NONE, 0, "")
+        if self._in_cooldown(step):
+            return decision
+        pressured = queue_depth >= self.cfg.queue_high or (
+            self.cfg.latency_slo_s > 0
+            and latency_s > self.cfg.latency_slo_s)
+        draining = queue_depth == 0 and occupancy <= self.cfg.occupancy_low
+        self._pressure_streak = self._pressure_streak + 1 if pressured else 0
+        self._drain_streak = self._drain_streak + 1 if draining else 0
+        if (self._pressure_streak >= self.cfg.patience
+                and stages < self.cfg.max_stages):
+            self._pressure_streak = 0
+            decision = ScaleDecision(
+                step, "grow", 1,
+                f"load: queue={queue_depth} latency={latency_s * 1e3:.0f}ms "
+                f"at occupancy {occupancy:.0%}")
+        elif (self._drain_streak >= self.cfg.patience
+                and stages > self.cfg.min_stages):
+            self._drain_streak = 0
+            decision = ScaleDecision(
+                step, "shrink", 1,
+                f"drain: queue empty, occupancy {occupancy:.0%} below "
+                f"{self.cfg.occupancy_low:.0%}")
         if decision.action != _NONE:
             self.decisions.append(decision)
         return decision

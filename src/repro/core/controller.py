@@ -174,6 +174,15 @@ class DynMoController:
                 # regression even above the cap)
                 contiguous_mem = bal.stage_loads(mem_layers, compact)
                 limit = max(self.ccfg.repack_mem_cap, max(mem_stage))
+                # repack-aware balancing: the packing only decided WHO
+                # survives; the split the shrunk world actually executes is
+                # re-balanced on the time cost vector (under the same
+                # memory budget and the target world's slot capacity), so
+                # the post-shrink pipeline starts load-balanced instead of
+                # inheriting the merged groups' skew
+                compact = self._balance_resize_split(
+                    costs, mem_layers, compact, plan.num_active, limit)
+                contiguous_mem = bal.stage_loads(mem_layers, compact)
                 if all(m < limit for m in contiguous_mem):
                     self.pending_resize = ResizePlan(
                         iteration=iteration,
@@ -204,6 +213,44 @@ class DynMoController:
             rebalanced=new_lps is not None)
         self.events.append(ev)
         return new_lps, ev
+
+    def _balance_resize_split(self, costs, mem_layers, compact,
+                              target_stages: int, mem_cap: float
+                              ) -> List[int]:
+        """Fold the balancer's time cost vector into a resize's target
+        split (ROADMAP "repack-aware balancing").  ``compact`` — the repack
+        policy's merged per-survivor counts — is the fallback when the
+        balanced split is infeasible (zero-layer stage, over budget) or no
+        better; otherwise the balancer's minimal-bottleneck contiguous
+        partition over the *surviving* worker count wins."""
+        import dataclasses as _dc
+        target_dcfg = _dc.replace(self.dcfg, num_stages=target_stages)
+        try:
+            res = bal.balance(
+                self.ccfg.method, costs, target_stages,
+                max_slots=target_dcfg.slots_for(self.cfg),
+                mem=mem_layers, mem_cap=mem_cap,
+                init=compact if self.ccfg.method == "diffusion" else None)
+        except Exception:
+            return compact
+        balanced = list(res.layers_per_stage)
+        if (len(balanced) != target_stages or min(balanced) < 1
+                or sum(balanced) != sum(compact)):
+            return compact
+        balanced_fits = all(m < mem_cap for m in
+                            bal.stage_loads(mem_layers, balanced))
+        compact_fits = all(m < mem_cap for m in
+                           bal.stage_loads(mem_layers, compact))
+        if balanced_fits and not compact_fits:
+            # the packing's counts regroup over budget when executed
+            # contiguously (first_fit can do this) — a memory-feasible
+            # balanced split rescues the consolidation even if its time
+            # bottleneck is no better
+            return balanced
+        if (max(bal.stage_loads(costs, balanced))
+                > max(bal.stage_loads(costs, compact)) - 1e-12):
+            return compact
+        return balanced
 
     # -- application -------------------------------------------------------
     def apply(self, new_lps: Sequence[int], params: Dict[str, Any],

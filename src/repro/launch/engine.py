@@ -36,7 +36,8 @@ from repro.dynamics.config import DynamicsConfig
 from repro.launch.mesh import make_submesh
 from repro.models import model as M
 from repro.optim.optimizers import OptConfig, make_optimizer
-from repro.pipeline.pipeline import PipelineShapes, build_loss_fn
+from repro.pipeline.pipeline import (PipelineShapes, build_decode_fn,
+                                     build_loss_fn, build_prefill_fn)
 from repro.runtime.fault_tolerance import WorkerPool
 
 
@@ -78,24 +79,34 @@ def fold_stats(stats, num_stages: int):
 
 @dataclasses.dataclass
 class EngineWorld:
-    """Everything tied to one active stage count: compiled once, cached."""
+    """Everything tied to one active stage count: compiled once, cached.
+
+    The serving path shares the cache: ``prefill``/``decode`` are built
+    lazily per world next to the train step, so an elastic server reuses
+    the same submesh/epoch/job-manager machinery as the trainer."""
     stages: int
     dcfg: DistConfig
     mesh: Any
     init_opt: Any
     step: Any                  # jitted, donating (params, opt_state)
     eval_loss: Any = None      # lazily-jitted loss-only fn (no update)
+    prefill: Any = None        # lazily-jitted serving prefill
+    decode: Any = None         # lazily-jitted serving decode (donates cache)
+    stage_probe: Any = None    # lazily-jitted single-stage forward (timers)
 
 
 @dataclasses.dataclass
 class EngineState:
-    """The training state the engine threads through worlds."""
+    """The training/serving state the engine threads through worlds.
+    ``cache`` is the stacked decode KV cache ([S, L_max, ...] leaves) when
+    the engine serves; it re-splits with the rest on every resize."""
     params: Any
     opt_state: Any
     dyn: Any
     assignment: Any
     lps: List[int]
     stages: int
+    cache: Any = None
 
 
 @dataclasses.dataclass
@@ -184,7 +195,8 @@ class ElasticEngine:
         return w
 
     # -- placement ---------------------------------------------------------
-    def _place(self, world: EngineWorld, params, opt_state, dyn, assignment):
+    def _place(self, world: EngineWorld, params, opt_state, dyn, assignment,
+               cache=None):
         """device_put onto the world's submesh with the pipeline's layout:
         stage-keyed leaves sharded over ``model`` (leading stage dim),
         everything else replicated — matches the shard_map in_specs, so the
@@ -206,20 +218,31 @@ class ElasticEngine:
             return jax.device_put(node, repl_sh)
 
         opt_state = walk_opt(opt_state) if opt_state is not None else None
-        return params, opt_state, put_st(dyn), put_st(assignment)
+        cache = put_st(cache) if cache is not None else None
+        return params, opt_state, put_st(dyn), put_st(assignment), cache
 
     # -- lifecycle ---------------------------------------------------------
-    def init_state(self, rng: jax.Array) -> EngineState:
+    def init_state(self, rng: jax.Array, *, with_opt: bool = True,
+                   with_cache: bool = False) -> EngineState:
+        """``with_opt=False`` skips the optimizer (serving: no moments);
+        ``with_cache=True`` allocates the stacked decode KV cache from the
+        engine's shapes (requires ``shapes.cache_len > 0``)."""
         stages = self.base_dcfg.num_stages
         world = self.world(stages)
         params = M.init_params(rng, self.cfg, world.dcfg)
         assignment = M.make_assignment(self.cfg, world.dcfg)
         dyn = M.init_dyn(self.cfg, world.dcfg, self.dyncfg)
-        opt_state = world.init_opt(params)
+        opt_state = world.init_opt(params) if with_opt else None
+        cache = None
+        if with_cache:
+            assert self.shapes.cache_len > 0, "shapes.cache_len required"
+            cache = M.init_cache(self.cfg, world.dcfg, self.shapes.num_micro,
+                                 self.shapes.mb_global, self.shapes.cache_len)
         lps = M.uniform_boundaries(self.cfg.total_blocks(), stages)
-        params, opt_state, dyn, assignment = self._place(
-            world, params, opt_state, dyn, assignment)
-        return EngineState(params, opt_state, dyn, assignment, lps, stages)
+        params, opt_state, dyn, assignment, cache = self._place(
+            world, params, opt_state, dyn, assignment, cache)
+        return EngineState(params, opt_state, dyn, assignment, lps, stages,
+                           cache)
 
     def step(self, state: EngineState, batch, lr):
         """One jitted train step in the state's current world; mutates
@@ -251,14 +274,108 @@ class ElasticEngine:
                                   batch)
         return loss
 
+    # -- serving -----------------------------------------------------------
+    def serve_fns(self, stages: int):
+        """(prefill, decode) for the given stage count, built lazily on the
+        world next to its train step — the elastic server's resize path gets
+        compiled serving fns per world exactly like the trainer does.
+        ``decode`` donates the cache argument (arg 3)."""
+        w = self.world(stages)
+        if w.prefill is None:
+            w.prefill = jax.jit(build_prefill_fn(
+                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes))
+            w.decode = jax.jit(build_decode_fn(
+                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes),
+                donate_argnums=(3,))
+        return w.prefill, w.decode
+
+    def prefill(self, state: EngineState, batch):
+        """Run prefill in the state's world; returns (last_ids, new_cache).
+        The caller owns cache merging (continuous batching overwrites only
+        admitted lanes)."""
+        pf, _ = self.serve_fns(state.stages)
+        with self.world(state.stages).mesh:
+            return pf(state.params, state.assignment, state.dyn, state.cache,
+                      batch)
+
+    def decode(self, state: EngineState, tokens, pos):
+        """One decode step in the state's world; replaces ``state.cache``
+        (the jitted fn donates the old buffer) and returns (ids, logprobs)."""
+        _, dec = self.serve_fns(state.stages)
+        with self.world(state.stages).mesh:
+            ids, lp, cache = dec(state.params, state.assignment, state.dyn,
+                                 state.cache, tokens, pos)
+        state.cache = cache
+        return ids, lp
+
+    # -- measured per-stage timers ----------------------------------------
+    def measure_stage_times(self, state: EngineState, batch):
+        """Measured per-stage forward wall times (seconds, [S]).
+
+        Runs each stage's ``stage_forward`` in isolation over the first
+        microbatch, timing on the host with ``block_until_ready`` — the
+        profiler's "measured" fidelity tier.  The probe executes with
+        ``slot_exec="bounded_loop"`` regardless of the world's executor:
+        it must measure the stage's *live* work (the active slots), which
+        is the quantity the straggler detector compares against the
+        balancer's expected per-stage loads — masked-scan padding cost is
+        uniform across stages and carries no load signal.  One probe fn
+        serves every stage (slot buffers are uniformly [L_max, ...]-
+        shaped), so this compiles once per world; it is still a full host
+        sync per stage, which is why the trainer gates it on controller
+        cadence.
+        """
+        import numpy as np
+
+        w = self.world(state.stages)
+        if w.stage_probe is None:
+            cfg, dyncfg = self.cfg, self.dyncfg
+            dcfg = dataclasses.replace(w.dcfg, slot_exec="bounded_loop")
+
+            def probe(stage_params, shared, tags, dyn_s, carry, depth_base):
+                pos = jnp.arange(carry["x"].shape[1])
+                out, _, _, _ = M.stage_forward(
+                    cfg, dcfg, dyncfg, "train", stage_params, shared, tags,
+                    dyn_s, carry, None, pos, depth_base)
+                return out
+
+            w.stage_probe = jax.jit(probe)
+        dt = jnp.bfloat16 if w.dcfg.param_dtype == "bfloat16" \
+            else jnp.float32
+        carry = M.embed(state.params, self.cfg, batch["tokens"][0])
+        carry["x"] = carry["x"].astype(dt)
+        if "enc" in carry:
+            carry["enc"] = carry["enc"].astype(dt)
+        if self.dyncfg.uses_early_exit:
+            carry["exited"] = jnp.zeros(carry["x"].shape[:2], jnp.float32)
+        starts = np.concatenate([[0], np.cumsum(state.lps)[:-1]])
+        times = np.zeros(state.stages)
+        shared = state.params["shared"]
+        for warm in (True, False):      # first pass compiles + warms caches
+            for s in range(state.stages):
+                sp = jax.tree.map(lambda a: a[s], state.params["stages"])
+                dyn_s = jax.tree.map(lambda a: a[s], state.dyn)
+                tags_s = state.assignment["tags"][s]
+                t0 = time.perf_counter()
+                out = w.stage_probe(sp, shared, tags_s, dyn_s, carry,
+                                    jnp.int32(starts[s]))
+                jax.block_until_ready(out)
+                if not warm:
+                    times[s] = time.perf_counter() - t0
+                    carry = out      # flow the carry stage-to-stage
+        return times
+
     # -- live resize -------------------------------------------------------
     def resize(self, state: EngineState, new_stages: int,
                new_lps: Optional[Sequence[int]] = None) -> EngineState:
         """Reshape all stage-keyed state to ``new_stages`` and place it onto
         that world's submesh — no checkpoint, no restart, no host round-trip.
-        Falls back to a uniform split when ``new_lps`` violates the target
-        world's slot capacity."""
-        from repro.checkpoint.elastic import elastic_restore
+        A serving cache rides the same re-split plan (its [S, L_max] leading
+        dims are gathered exactly like params), so in-flight KV state
+        survives the resize bit-identically.  Falls back to a uniform split
+        when ``new_lps`` violates the target world's slot capacity."""
+        from repro.checkpoint.elastic import (_resplit_stage_tree,
+                                              elastic_restore)
         world = self.world(new_stages)
         if new_lps is not None and (
                 len(new_lps) != new_stages
@@ -267,11 +384,15 @@ class ElasticEngine:
         params, opt_state, dyn, assignment, lps = elastic_restore(
             self.cfg, self.dcfg_for(state.stages), world.dcfg,
             state.params, state.opt_state, state.dyn, state.lps, new_lps)
-        params, opt_state, dyn, assignment = self._place(
-            world, params, opt_state, dyn, assignment)
+        cache = state.cache
+        if cache is not None:
+            cache = _resplit_stage_tree(cache, state.lps, lps,
+                                        world.dcfg.slots_for(self.cfg))
+        params, opt_state, dyn, assignment, cache = self._place(
+            world, params, opt_state, dyn, assignment, cache)
         self.epoch += 1
         return EngineState(params, opt_state, dyn, assignment, lps,
-                           new_stages)
+                           new_stages, cache)
 
     def shrink(self, state: EngineState, target_stages: int,
                new_lps: Optional[Sequence[int]] = None,

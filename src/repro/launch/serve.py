@@ -1,9 +1,19 @@
-"""Serving driver: batched-request generation through the pipelined
-prefill + decode path, with optional DynMo rebalancing between rounds.
+"""Serving CLI — a thin front-end over two paths:
+
+  * ``run_serving`` — the legacy one-shot generator (one fixed batch,
+    prefill + gen decode rounds, optional DynMo rebalance between rounds);
+    kept as the parity oracle for the continuous scheduler;
+  * ``run_elastic_serving`` (``--elastic``) — the ``repro.serve``
+    subsystem: a bursty request trace through the continuous-batching
+    scheduler on ``ElasticEngine`` worlds, with the autoscaler shrinking /
+    growing the pipeline on queue-depth/occupancy watermarks and workers
+    released/re-granted through the job-manager client.
 
 CPU-scale usage:
   REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch smollm-360m --layers 8 --stages 4 --gen 16 --dynamism early_exit
+  REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
+      --elastic --autoscale --requests 24 --burst-period 16 --burst-len 4
 """
 from __future__ import annotations
 
@@ -85,7 +95,7 @@ def run_serving(arch: str, *, stages: int = 4, micro: int = 2,
                                 by="time")
                 prof = LayerProfile(
                     t, cost_vector(cfg, mb_global, prompt_len + g, states,
-                                   by="param") * 2,
+                                   by="param") * dcfg.bytes_per_param,
                     np.zeros(stages), states)
                 new_lps, ev = ctrl.decide(prof, g)
                 if new_lps is not None:
@@ -96,6 +106,83 @@ def run_serving(arch: str, *, stages: int = 4, micro: int = 2,
     tps = micro * mb_global * gen / wall
     return {"tokens": gen_tokens, "wall_s": wall, "tokens_per_s": tps,
             "final_lps": ctrl.lps}
+
+
+def run_elastic_serving(arch: str, *, stages: int = 4, micro: int = 2,
+                        mb_global: int = 4, prompt_len: int = 32,
+                        gen: int = 8, layers: Optional[int] = 8,
+                        d_model: int = 128, dynamism: str = "none",
+                        requests: int = 16, min_prompt: Optional[int] = None,
+                        burst_period: int = 0, burst_len: int = 0,
+                        burst_rate: int = 4, lull_rate: int = 1,
+                        early_exit_frac: float = 0.0, seed: int = 0,
+                        autoscale: bool = False, min_stages: int = 1,
+                        queue_high: int = 8, occupancy_low: float = 0.35,
+                        patience: int = 2, cooldown: int = 4,
+                        defrag_every: int = 0, job_manager: str = "inproc",
+                        job_manager_dir: Optional[str] = None,
+                        resize_at=None, max_ticks: int = 100000):
+    """Continuous-batching serving on engine worlds; returns the server's
+    report dict (completions, resizes, autoscale decisions, latency)."""
+    import tempfile
+
+    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+    from repro.cluster.rpc import FileJobManager, spawn_file_manager
+    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.dynamics.config import DynamicsConfig
+    from repro.pipeline.pipeline import PipelineShapes
+    from repro.serve import ElasticServer, make_trace
+
+    cfg = get_config(arch)
+    if layers is not None:
+        cfg = reduced_config(cfg, num_layers=layers, d_model=d_model,
+                             num_heads=4, num_kv_heads=2, d_ff=2 * d_model,
+                             vocab_size=512)
+    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
+                      param_dtype="float32")
+    dyncfg = DynamicsConfig(kind=dynamism)
+    shapes = PipelineShapes(micro, mb_global, prompt_len,
+                            cache_len=prompt_len + gen)
+    trace = make_trace(requests, prompt_len=prompt_len, max_gen=gen,
+                       vocab_size=cfg.vocab_size, seed=seed,
+                       min_prompt=min_prompt or max(1, prompt_len // 2),
+                       burst_period=burst_period, burst_len=burst_len,
+                       burst_rate=burst_rate, lull_rate=lull_rate,
+                       early_exit_frac=early_exit_frac)
+    scaler = None
+    if autoscale:
+        scaler = Autoscaler(AutoscalerConfig(
+            min_stages=max(1, min_stages), max_stages=stages,
+            patience=patience, cooldown=cooldown, queue_high=queue_high,
+            occupancy_low=occupancy_low))
+    jm = jm_proc = None
+    if job_manager == "file":
+        if job_manager_dir:
+            import os as _os
+            _os.makedirs(job_manager_dir, exist_ok=True)
+            jm_dir = tempfile.mkdtemp(prefix="run_", dir=job_manager_dir)
+        else:
+            jm_dir = tempfile.mkdtemp(prefix="dynmo_serve_jm_")
+        jm_proc = spawn_file_manager(jm_dir, stages)
+        jm = FileJobManager(jm_dir, timeout_s=60.0)
+    elif job_manager != "inproc":
+        raise ValueError(f"unknown job manager {job_manager!r}")
+    srv = ElasticServer(cfg, dcfg, dyncfg, shapes, job_manager=jm,
+                        scaler=scaler, min_stages=min_stages, seed=seed,
+                        defrag_every=defrag_every)
+    try:
+        report = srv.serve(trace, autoscale=autoscale, resize_at=resize_at,
+                           max_ticks=max_ticks)
+    finally:
+        srv.close()
+        if jm is not None:
+            jm.close()
+        if jm_proc is not None:
+            try:
+                jm_proc.wait(timeout=10)
+            except Exception:
+                jm_proc.kill()
+    return report
 
 
 def main():
@@ -110,7 +197,59 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--dynamism", default="none")
     ap.add_argument("--rebalance-every", type=int, default=0)
+    # ---- elastic continuous-batching path
+    ap.add_argument("--elastic", action="store_true",
+                    help="serve a request trace through the continuous-"
+                         "batching scheduler on elastic engine worlds")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--min-prompt", type=int, default=None)
+    ap.add_argument("--burst-period", type=int, default=0)
+    ap.add_argument("--burst-len", type=int, default=0)
+    ap.add_argument("--burst-rate", type=int, default=4)
+    ap.add_argument("--lull-rate", type=int, default=1)
+    ap.add_argument("--early-exit-frac", type=float, default=0.0)
+    ap.add_argument("--defrag-every", type=int, default=0)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="queue-depth/occupancy watermark scaling")
+    ap.add_argument("--min-stages", type=int, default=1)
+    ap.add_argument("--queue-high", type=int, default=8)
+    ap.add_argument("--occupancy-low", type=float, default=0.35)
+    ap.add_argument("--patience", type=int, default=2)
+    ap.add_argument("--cooldown", type=int, default=4)
+    ap.add_argument("--job-manager", default="inproc",
+                    choices=["inproc", "file"])
+    ap.add_argument("--job-manager-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.elastic:
+        rep = run_elastic_serving(
+            args.arch, stages=args.stages, micro=args.micro,
+            mb_global=args.mb_global, prompt_len=args.prompt_len,
+            gen=args.gen, layers=args.layers, d_model=args.d_model,
+            dynamism=args.dynamism, requests=args.requests,
+            min_prompt=args.min_prompt, burst_period=args.burst_period,
+            burst_len=args.burst_len, burst_rate=args.burst_rate,
+            lull_rate=args.lull_rate, early_exit_frac=args.early_exit_frac,
+            seed=args.seed, autoscale=args.autoscale,
+            min_stages=args.min_stages, queue_high=args.queue_high,
+            occupancy_low=args.occupancy_low, patience=args.patience,
+            cooldown=args.cooldown, defrag_every=args.defrag_every,
+            job_manager=args.job_manager,
+            job_manager_dir=args.job_manager_dir)
+        kinds = [r["kind"] for r in rep["resizes"]]
+        print(f"served {len(rep['completions'])} requests / "
+              f"{rep['total_tokens']} tokens in {rep['wall_s']:.1f}s "
+              f"({rep['tokens_per_s']:.1f} tok/s); "
+              f"p50/p95 token latency "
+              f"{rep['latency_p50_s'] * 1e3:.0f}/"
+              f"{rep['latency_p95_s'] * 1e3:.0f}ms; "
+              f"resizes={kinds}; "
+              f"stages {rep['stages_history'][0]}->"
+              f"{rep['stages_history'][-1]}")
+        for d in rep["autoscale_decisions"]:
+            print(f"  autoscale @tick {d['step']}: {d['action']} "
+                  f"({d['reason']})")
+        return
     out = run_serving(
         args.arch, stages=args.stages, micro=args.micro,
         mb_global=args.mb_global, prompt_len=args.prompt_len, gen=args.gen,

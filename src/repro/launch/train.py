@@ -86,7 +86,8 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
                  simulate_recover: Optional[int] = None,
                  job_manager: str = "inproc",
                  job_manager_dir: Optional[str] = None,
-                 straggler: Optional[Dict[int, float]] = None
+                 straggler: Optional[Dict[int, float]] = None,
+                 measure_stage_times: bool = False
                  ) -> Dict[str, Any]:
     from repro.data.loader import DataConfig, make_loader
     cfg = get_config(arch)
@@ -133,7 +134,8 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
         ccfg.repack_mem_cap = stage_memory_budget(
             cfg, tokens_per_step, seq, dcfg.bytes_per_param, stages,
             cap_factor=repack_mem_cap)
-    det = StragglerDetector(stages) if straggler else None
+    det = StragglerDetector(stages) \
+        if (straggler or measure_stage_times) else None
     ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg, straggler=det)
     cp = ControlPlane(ctrl, async_mode=async_controller,
                       epoch_fn=lambda: engine.epoch)
@@ -181,6 +183,7 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
               f"{rz.ticks_before}->{rz.ticks_after} ticks")
 
     losses, events, step_times, stages_hist = [], [], [], []
+    last_measured = None
     t0 = time.perf_counter()
     try:
         for step, batch in enumerate(loader):
@@ -239,15 +242,23 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
             # device→host stats sync; in async mode this is a pointer swap)
             if ctrl.cadence(step + 1):
                 measured = None
+                if measure_stage_times:
+                    # real per-stage wall times from the engine's stage
+                    # probe — cadence-gated here so the hot path stays
+                    # sync-free (the probe is a per-stage host sync)
+                    measured = engine.measure_stage_times(state, batch)
+                    last_measured = measured
                 if straggler:
                     # simulation knob: a straggling WORKER multiplies its
                     # stage's wall time; feed the detector the same shape a
-                    # real per-worker timer would report.  Keyed by WORKER
+                    # real per-worker timer would report (or skew the
+                    # measured times when both are on).  Keyed by WORKER
                     # id — after an evict/resize the slow machine keeps its
                     # id but sits at a different stage index
-                    share = np.asarray(state.lps, np.float64)
-                    share = share / share.sum() * step_times[-1]
-                    measured = share * np.array(
+                    if measured is None:
+                        share = np.asarray(state.lps, np.float64)
+                        measured = share / share.sum() * step_times[-1]
+                    measured = measured * np.array(
                         [straggler.get(engine.stage_workers[s], 1.0)
                          for s in range(state.stages)])
                 cp.publish(StatsSnapshot(
@@ -337,6 +348,8 @@ def run_training(arch: str, *, steps: int = 50, stages: int = 4,
             "resizes": [dataclasses.asdict(e) for e in engine.resizes],
             "pool_log": list(engine.jm.log),
             "final_stages": state.stages,
+            "measured_stage_times": (list(map(float, last_measured))
+                                     if last_measured is not None else None),
             "controller": {
                 "mode": "async" if async_controller else "inline",
                 "published": cp.published, "decided": cp.decided,
@@ -404,6 +417,11 @@ def main():
                     help="simulate slow workers, e.g. '2:1.5' (stage 2 "
                          "runs 1.5x slow); the detector feeds the "
                          "balancer")
+    ap.add_argument("--measure-stage-times", action="store_true",
+                    help="feed MEASURED per-stage wall times (engine stage "
+                         "probe, controller cadence only) into the "
+                         "straggler detector instead of the --straggler "
+                         "simulation")
     args = ap.parse_args()
     out = run_training(
         args.arch, steps=args.steps, stages=args.stages, layers=args.layers,
@@ -421,7 +439,8 @@ def main():
         simulate_recover=args.simulate_recover,
         job_manager=args.job_manager,
         job_manager_dir=args.job_manager_dir,
-        straggler=_parse_straggler(args.straggler))
+        straggler=_parse_straggler(args.straggler),
+        measure_stage_times=args.measure_stage_times)
     ctl = out["controller"]
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
           f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}; "

@@ -330,19 +330,33 @@ def _attn_fwd(x, wq, wk, wv, wo, *, cfg, mode, cache, pos,
 
     new_cache = cache
     if mode == "decode":
-        # pos is a scalar: current absolute position
-        if rope:
-            q = apply_rope(q, jnp.full((b, 1), pos), cfg.rope_theta)
-            k = apply_rope(k, jnp.full((b, 1), pos), cfg.rope_theta)
         kc, vc = cache[cache_keys[0]], cache[cache_keys[1]]
         cap = kc.shape[1]
-        widx = jnp.mod(pos, cap) if cfg.sliding_window else jnp.minimum(
-            pos, cap - 1)
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
-                                          (0, widx, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
-                                          (0, widx, 0, 0))
-        clen = jnp.minimum(pos + 1, cap)
+        if jnp.ndim(pos) == 0:
+            # pos is a scalar: every lane at the same absolute position
+            if rope:
+                q = apply_rope(q, jnp.full((b, 1), pos), cfg.rope_theta)
+                k = apply_rope(k, jnp.full((b, 1), pos), cfg.rope_theta)
+            widx = jnp.mod(pos, cap) if cfg.sliding_window else jnp.minimum(
+                pos, cap - 1)
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, widx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, widx, 0, 0))
+            clen = jnp.minimum(pos + 1, cap)
+        else:
+            # pos is a [b] vector: continuous batching — each request
+            # writes its cache line and masks attention at its OWN position
+            pvec = jnp.reshape(pos, (b,))
+            if rope:
+                q = apply_rope(q, pvec[:, None], cfg.rope_theta)
+                k = apply_rope(k, pvec[:, None], cfg.rope_theta)
+            widx = (jnp.mod(pvec, cap) if cfg.sliding_window
+                    else jnp.minimum(pvec, cap - 1))
+            lanes = jnp.arange(b)
+            kc = kc.at[lanes, widx].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[lanes, widx].set(v[:, 0].astype(vc.dtype))
+            clen = jnp.minimum(pvec + 1, cap)
         out = decode_attention(q, kc, vc, clen)
         new_cache = dict(cache)
         new_cache[cache_keys[0]] = kc

@@ -420,9 +420,11 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, sliding_window: int = 0,
                      window_offset: int = 0) -> jax.Array:
     """Single-token decode attention over a (possibly ring-buffer) cache.
 
-    q: [b, 1, h, d]; k_cache/v_cache: [b, S, kv, d]; cache_len: scalar count of
-    valid entries.  For sliding-window archs the cache IS the ring buffer
-    (S == window) and window_offset gives the rotation; masking handles both.
+    q: [b, 1, h, d]; k_cache/v_cache: [b, S, kv, d]; cache_len: count of
+    valid entries — a scalar (all lanes at the same position) or a [b]
+    vector (continuous batching: each request at its own position).  For
+    sliding-window archs the cache IS the ring buffer (S == window) and
+    window_offset gives the rotation; masking handles both.
     """
     b, s, kv, d = k_cache.shape
     h = q.shape[2]
@@ -431,11 +433,19 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, sliding_window: int = 0,
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
     scores = scores / jnp.sqrt(d).astype(jnp.float32)
     idx = jnp.arange(s)
-    valid = idx < cache_len
-    if sliding_window:
-        # non-ring cache with windowed attention: only the last `window` live
-        valid &= idx >= cache_len - sliding_window
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 0:
+        valid = idx < cl                                   # [s]
+        if sliding_window:
+            # non-ring cache with windowed attention: last `window` live
+            valid &= idx >= cl - sliding_window
+        vmask = valid[None, None, None, :]
+    else:
+        valid = idx[None, :] < cl[:, None]                 # [b, s]
+        if sliding_window:
+            valid &= idx[None, :] >= cl[:, None] - sliding_window
+        vmask = valid[:, None, None, :]
+    scores = jnp.where(vmask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
 

@@ -309,7 +309,10 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
     """Returns decode_fn(params, assignment, dyn, cache, tokens, pos)
     -> (next_ids [m, B] i32, logprobs [m, B] f32, new_cache).
 
-    tokens: [m, B] current token per request; pos: scalar position.
+    tokens: [m, B] current token per request; pos: scalar position (every
+    lane at the same point, the one-shot serving path) or [m, B] per-lane
+    absolute positions (continuous batching: each request decodes at its
+    own position; cache writes and attention masks are per-lane).
     cache: stacked {field: [S, L_max, m, B, ...]}.
     """
     S = dcfg.num_stages
@@ -327,6 +330,11 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
         n = mesh.shape["model"]      # static axis extent (version-portable)
         m = shapes.num_micro
         T = m + S - 1
+        per_lane = jnp.ndim(pos) == 2           # [m, B] positions
+        if per_lane and cfg.is_encdec:
+            raise NotImplementedError(
+                "per-lane decode positions need a per-lane dec_pos gather; "
+                "encoder-decoder serving uses the scalar-pos path")
 
         buf = _init_carry(cfg, dyncfg, shapes, dt, decode=True)
         ids_out = jnp.zeros((m, shapes.mb_global), jnp.int32)
@@ -353,9 +361,11 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
             carry = jax.tree.map(
                 lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
             cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
+            pos_mb = (jax.lax.dynamic_index_in_dim(pos, mi, 0, False)
+                      if per_lane else pos)
             carry, new_cache_mb, _, _ = M.stage_forward(
                 cfg, dcfg, dyncfg, "decode", stages, shared, tags, dyn_s,
-                carry, cache_mb, pos, idx * tags.shape[0])
+                carry, cache_mb, pos_mb, idx * tags.shape[0])
             cache_s = jax.tree.map(
                 lambda full, nc, old: jax.lax.dynamic_update_index_in_dim(
                     full, jnp.where(mvalid, nc, old), mi, 1),

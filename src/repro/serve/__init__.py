@@ -1,0 +1,25 @@
+"""Elastic serving subsystem (ROADMAP "Elastic serving").
+
+Layering (queue → scheduler → engine worlds):
+
+  requests   — ``Request`` + ``RequestQueue`` admission layer and the bursty
+               arrival-trace generator (prompt/gen-length distributions,
+               per-request dynamism kind);
+  slots      — KV-cache lane manager for the fixed-shape pipeline batch
+               (alloc/free/defrag; early-exited sequences vacate lanes
+               mid-flight);
+  scheduler  — continuous batching: packs prefill admissions and per-lane
+               decode into the pipeline's fixed [num_micro, mb_global]
+               shapes, each request at its own position;
+  server     — ``ElasticServer`` binds the scheduler to ``ElasticEngine``
+               execution worlds so the cluster control machinery (job
+               manager RPC + autoscaler) can shrink/grow the serving
+               pipeline under load, preserving in-flight KV caches.
+"""
+from repro.serve.requests import Request, RequestQueue, make_trace
+from repro.serve.scheduler import Scheduler
+from repro.serve.server import ElasticServer
+from repro.serve.slots import SlotManager
+
+__all__ = ["Request", "RequestQueue", "make_trace", "Scheduler",
+           "SlotManager", "ElasticServer"]

@@ -1,0 +1,193 @@
+"""Continuous-batching scheduler over the fixed-shape pipeline batch.
+
+One scheduler *tick* = (admit new requests → prefill their lanes) then
+(one pipelined decode step for every live lane).  The pipeline fns keep
+their fixed ``[num_micro, mb_global]`` shapes — the scheduler fills lanes
+and masks, it never reshapes:
+
+  * **Admission/prefill.**  Freed lanes are bound to queued requests; one
+    prefill call writes the admitted lanes' KV lines (right-padded to the
+    cell's ``prompt_len``), and the server merges only those lanes into
+    the live cache.  A full-length prompt's first token comes straight
+    from the prefill's last-position argmax (exactly the one-shot path);
+    a shorter prompt bootstraps by re-feeding its last prompt token at
+    position ``plen-1`` — the decode re-writes that position's KV with
+    identical values and its output is the first generated token.  The
+    pad garbage prefill wrote beyond ``plen`` is invisible: decode masks
+    the cache at each lane's OWN length and overwrites the pad positions
+    as the lane advances through them.
+  * **Decode.**  Every live lane decodes at its own position (the
+    pipeline's per-lane ``pos`` path).  Free lanes carry garbage whose
+    outputs are ignored and whose stale cache writes are overwritten at
+    re-admission.
+  * **Early exit.**  A finished (gen budget or EOS) sequence vacates its
+    lane the same tick; ``defrag_every`` compacts survivors into the lane
+    prefix (``SlotManager.defrag``), moving KV lines without touching
+    tokens.
+
+All decisions are functions of the trace and tick number only — a serving
+run is bit-deterministic and independent of the execution world's stage
+count, which is what the elastic-vs-fixed token-identity guarantee rests
+on (see DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.requests import Request, RequestQueue
+from repro.serve.slots import SlotManager
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """Lanes admitted this tick; ``prefill_tokens`` is the full-shape token
+    batch (admitted lanes hold their right-padded prompts, the rest zeros)
+    and ``admit_mask`` selects the lanes whose KV lines the merge takes."""
+    lanes: List[Tuple[int, Request]]
+    prefill_tokens: np.ndarray          # [m, B, prompt_len] int32
+    admit_mask: np.ndarray              # [m, B] bool
+    full_len_lanes: List[int]           # lanes taking token 1 from prefill
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    tokens: np.ndarray                  # [m, B] int32 (free lanes: 0)
+    pos: np.ndarray                     # [m, B] int32 per-lane positions
+    active: np.ndarray                  # [m, B] bool
+    lanes: List[int]                    # flat indices of live lanes
+
+
+class Scheduler:
+    def __init__(self, num_micro: int, mb: int, prompt_len: int,
+                 cache_len: int, queue: RequestQueue, *,
+                 eos_id: Optional[int] = None, defrag_every: int = 0):
+        assert cache_len >= prompt_len
+        self.prompt_len = prompt_len
+        self.cache_len = cache_len
+        self.queue = queue
+        self.eos_id = eos_id
+        self.defrag_every = defrag_every
+        self.slots = SlotManager(num_micro, mb)
+        n = self.slots.n_lanes
+        self.cur_tok = np.zeros(n, np.int32)
+        self.pos = np.zeros(n, np.int32)
+        self.gen_done = np.zeros(n, np.int64)
+        self.gen_budget = np.zeros(n, np.int64)
+        self.live: Dict[int, Request] = {}
+        self.completions: List[Request] = []
+
+    # -- signals (autoscaler food) ----------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return self.queue.depth
+
+    @property
+    def occupancy(self) -> float:
+        return self.slots.num_active / self.slots.n_lanes
+
+    @property
+    def done(self) -> bool:
+        return self.queue.exhausted and self.slots.num_active == 0
+
+    # -- tick phases -------------------------------------------------------
+    def plan_admissions(self, tick: int) -> Optional[AdmissionPlan]:
+        self.queue.poll(tick)
+        if not self.queue.pending or self.slots.num_free == 0:
+            return None
+        m, B = self.slots.num_micro, self.slots.mb
+        toks = np.zeros((m, B, self.prompt_len), np.int32)
+        mask = np.zeros((m, B), bool)
+        lanes: List[Tuple[int, Request]] = []
+        full: List[int] = []
+        while self.queue.pending and self.slots.num_free > 0:
+            r = self.queue.pop()
+            lane = self.slots.alloc(r.rid)
+            # admission owns the runtime fields: serving the same Request
+            # objects through a second run must not append onto the first
+            # run's token stream
+            r.admitted = tick
+            r.finished = -1
+            r.tokens = []
+            mi, bi = self.slots.unravel(lane)
+            toks[mi, bi, :r.plen] = r.prompt
+            mask[mi, bi] = True
+            self.live[lane] = r
+            # the cache line bounds how far the lane can decode: token g
+            # is written at plen - 2 + g, which must stay < cache_len
+            self.gen_budget[lane] = min(r.gen,
+                                        self.cache_len - r.plen + 1)
+            self.gen_done[lane] = 0
+            # next-decode position is plen-1 either way: full-length lanes
+            # take token 1 from the prefill argmax (``_record`` advances
+            # them to plen), shorter prompts bootstrap by re-feeding their
+            # last prompt token there (the decode re-writes that position's
+            # KV with identical values and emits token 1)
+            self.pos[lane] = r.plen - 1
+            if r.plen == self.prompt_len:
+                full.append(lane)
+            else:
+                self.cur_tok[lane] = int(r.prompt[-1])
+            lanes.append((lane, r))
+        return AdmissionPlan(lanes, toks, mask, full)
+
+    def note_prefill(self, plan: AdmissionPlan, prefill_ids: np.ndarray,
+                     tick: int) -> List[Request]:
+        """Record first tokens for full-length admissions (may finish
+        one-token requests immediately); returns the finished ones."""
+        finished: List[Request] = []
+        for lane in plan.full_len_lanes:
+            mi, bi = self.slots.unravel(lane)
+            tok = int(prefill_ids[mi, bi])
+            self._record(lane, tok, tick, finished)
+        return finished
+
+    def plan_decode(self) -> Optional[DecodePlan]:
+        lanes = [ln for ln in self.slots.active_lanes()]
+        if not lanes:
+            return None
+        m, B = self.slots.num_micro, self.slots.mb
+        active = (self.slots.owner >= 0).reshape(m, B)
+        return DecodePlan(self.cur_tok.reshape(m, B).copy(),
+                          self.pos.reshape(m, B).copy(), active, lanes)
+
+    def note_decode(self, plan: DecodePlan, ids: np.ndarray,
+                    tick: int) -> List[Request]:
+        finished: List[Request] = []
+        for lane in plan.lanes:
+            mi, bi = self.slots.unravel(lane)
+            self._record(lane, int(ids[mi, bi]), tick, finished)
+        return finished
+
+    def _record(self, lane: int, tok: int, tick: int,
+                finished: List[Request]) -> None:
+        r = self.live[lane]
+        r.tokens.append(tok)
+        self.gen_done[lane] += 1
+        self.cur_tok[lane] = tok
+        self.pos[lane] = self.pos[lane] + 1
+        if (self.gen_done[lane] >= self.gen_budget[lane]
+                or (self.eos_id is not None and tok == self.eos_id)):
+            r.finished = tick
+            self.slots.free(lane)
+            del self.live[lane]
+            self.completions.append(r)
+
+    def maybe_defrag(self, tick: int) -> Optional[np.ndarray]:
+        """On cadence, compact live lanes into the prefix.  Returns the
+        ``src_of_dst`` lane permutation the server must apply to the KV
+        cache, or None.  Scheduler-side per-lane state moves here."""
+        if not self.defrag_every or (tick + 1) % self.defrag_every:
+            return None
+        perm = self.slots.defrag()
+        if perm is None:
+            return None
+        self.cur_tok = self.cur_tok[perm]
+        self.pos = self.pos[perm]
+        self.gen_done = self.gen_done[perm]
+        self.gen_budget = self.gen_budget[perm]
+        self.live = {int(np.nonzero(perm == old)[0][0]): r
+                     for old, r in self.live.items()}
+        return perm

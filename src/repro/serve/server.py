@@ -1,0 +1,207 @@
+"""Elastic continuous-batching server on ``ElasticEngine`` worlds.
+
+The server owns one ``EngineState`` whose ``cache`` field is the live KV
+state; prefill/decode run on the engine's per-stage-count worlds (compiled
+once per world, exactly like the trainer's step), and resizes happen at
+the *safe point between decode ticks* — no microbatch is in flight, so the
+re-split gathers every lane's KV line onto the new world bit-identically.
+
+Scaling is signal-driven through ``cluster.autoscaler.Autoscaler``'s load
+path: queue depth / p95-latency pressure grows the pipeline (workers
+re-granted by the job manager), sustained low occupancy with an empty
+queue shrinks it (workers released through the ``JobManagerClient``
+boundary — same RPC the trainer uses, so ``--job-manager file`` puts a
+real process on the other side of a serving resize too).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.rpc import JobManagerClient
+from repro.configs.base import DistConfig, ModelConfig
+from repro.dynamics.config import DynamicsConfig
+from repro.launch.engine import ElasticEngine
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve.requests import Request, RequestQueue
+from repro.serve.scheduler import Scheduler
+
+
+def _merge_lanes(old, new, mask: np.ndarray):
+    """Take admitted lanes' KV lines from ``new``; keep the rest.  Leaves
+    are [S, L_max, m, B, ...]; ``mask`` is [m, B]."""
+    mj = jnp.asarray(mask)
+
+    def merge(o, n):
+        mm = mj.reshape((1, 1) + mj.shape + (1,) * (o.ndim - 4))
+        return jnp.where(mm, n, o)
+
+    return jax.tree.map(merge, old, new)
+
+
+def _permute_lanes(cache, src_of_dst: np.ndarray, m: int, B: int):
+    """Apply a defrag lane permutation to every cache leaf."""
+    perm = jnp.asarray(src_of_dst)
+
+    def p(a):
+        flat = a.reshape(a.shape[:2] + (m * B,) + a.shape[4:])
+        return jnp.take(flat, perm, axis=2).reshape(a.shape)
+
+    return jax.tree.map(p, cache)
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+class ElasticServer:
+    """Continuous-batching inference with live worker elasticity."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DistConfig,
+                 dyncfg: DynamicsConfig, shapes: PipelineShapes, *,
+                 data: int = 1, job_manager: Optional[JobManagerClient] = None,
+                 scaler: Optional[Autoscaler] = None, min_stages: int = 1,
+                 eos_id: Optional[int] = None, defrag_every: int = 0,
+                 seed: int = 0):
+        assert shapes.cache_len >= shapes.seq, "cache must hold the prompt"
+        self.engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=data,
+                                    job_manager=job_manager)
+        self.state = self.engine.init_state(
+            jax.random.PRNGKey(seed), with_opt=False, with_cache=True)
+        self.shapes = shapes
+        self.scaler = scaler
+        self.min_stages = max(1, min_stages)
+        self.max_stages = dcfg.num_stages
+        self.eos_id = eos_id
+        self.defrag_every = defrag_every
+
+    def close(self) -> None:
+        self.engine.close()
+
+    # -- safe-point resize -------------------------------------------------
+    def resize(self, target_stages: int, tick: int, reason: str) -> bool:
+        """Shrink/grow between decode ticks.  Returns True if the world
+        changed (grow may be denied by the job manager)."""
+        st = self.state
+        prev = st.stages
+        if target_stages < prev:
+            self.state = self.engine.shrink(st, target_stages, step=tick)
+        elif target_stages > prev:
+            self.state = self.engine.grow(st, target_stages - prev,
+                                          step=tick)
+        changed = self.state.stages != prev
+        if changed:
+            rz = self.engine.resizes[-1]
+            print(f"tick {tick:4d} {rz.kind.upper()} {rz.from_stages}->"
+                  f"{rz.to_stages} stages ({reason}); workers {rz.workers}; "
+                  f"pool active={self.engine.jm.num_active}")
+            if self.scaler is not None:
+                self.scaler.note_resize(tick, self.state.stages)
+        return changed
+
+    # -- main loop ----------------------------------------------------------
+    def serve(self, requests: List[Request], *, max_ticks: int = 100000,
+              resize_at: Optional[Dict[int, int]] = None,
+              autoscale: bool = False) -> Dict[str, Any]:
+        """Drive the request trace to completion.  ``resize_at`` scripts
+        {tick: target_stages} safe-point resizes (tests/demos);
+        ``autoscale`` lets the attached scaler drive them from load."""
+        sched = Scheduler(self.shapes.num_micro, self.shapes.mb_global,
+                          self.shapes.seq, self.shapes.cache_len,
+                          RequestQueue(requests), eos_id=self.eos_id,
+                          defrag_every=self.defrag_every)
+        m, B = self.shapes.num_micro, self.shapes.mb_global
+        resizes_before = len(self.engine.resizes)
+        tick = 0
+        tick_wall: List[float] = []
+        tick_tokens: List[int] = []
+        token_lat: List[float] = []
+        stages_hist: List[int] = []
+        depth_hist: List[int] = []
+        occ_hist: List[float] = []
+        t_run = time.perf_counter()
+        while tick < max_ticks and not sched.done:
+            t0 = time.perf_counter()
+            emitted = 0
+            adm = sched.plan_admissions(tick)
+            if adm is not None:
+                ids, new_cache = self.engine.prefill(
+                    self.state, {"tokens": jnp.asarray(adm.prefill_tokens)})
+                self.state.cache = _merge_lanes(self.state.cache, new_cache,
+                                                adm.admit_mask)
+                sched.note_prefill(adm, np.asarray(ids), tick)
+                emitted += len(adm.full_len_lanes)
+            dec = sched.plan_decode()
+            if dec is not None:
+                ids, _lp = self.engine.decode(self.state,
+                                              jnp.asarray(dec.tokens),
+                                              jnp.asarray(dec.pos))
+                sched.note_decode(dec, np.asarray(ids), tick)
+                emitted += len(dec.lanes)
+            perm = sched.maybe_defrag(tick)
+            if perm is not None:
+                self.state.cache = _permute_lanes(self.state.cache, perm,
+                                                  m, B)
+            wall = time.perf_counter() - t0
+            tick_wall.append(wall)
+            tick_tokens.append(emitted)
+            token_lat.extend([wall] * emitted)
+            stages_hist.append(self.state.stages)
+            depth_hist.append(sched.queue_depth)
+            occ_hist.append(sched.occupancy)
+            # ---- safe point: the tick's flight is fully retired
+            if resize_at and tick in resize_at:
+                self.resize(resize_at[tick], tick, "scripted")
+            elif autoscale and self.scaler is not None:
+                # latency signal = p95 per-token over the recent window
+                # (what AutoscalerConfig.latency_slo_s is specified
+                # against) — never the raw tick wall, which spikes on
+                # every fresh-world compile and covers many tokens
+                recent = token_lat[-64:]
+                d = self.scaler.observe_load(
+                    tick, self.state.stages, queue_depth=sched.queue_depth,
+                    occupancy=sched.occupancy,
+                    latency_s=_pct(recent, 95) if recent else 0.0)
+                if d.action == "shrink":
+                    self.resize(max(self.min_stages,
+                                    self.state.stages - d.workers),
+                                tick, d.reason)
+                elif d.action == "grow":
+                    self.resize(min(self.max_stages,
+                                    self.state.stages + d.workers),
+                                tick, d.reason)
+            tick += 1
+        wall_s = time.perf_counter() - t_run
+        total_tokens = sum(len(r.tokens) for r in sched.completions)
+        report = {
+            "completions": [
+                {"rid": r.rid, "kind": r.kind, "arrival": r.arrival,
+                 "admitted": r.admitted, "finished": r.finished,
+                 "plen": r.plen, "tokens": list(map(int, r.tokens))}
+                for r in sorted(sched.completions, key=lambda r: r.rid)],
+            "ticks": tick,
+            "tick_wall_s": tick_wall,
+            "tick_tokens": tick_tokens,
+            "stages_history": stages_hist,
+            "queue_depth_history": depth_hist,
+            "occupancy_history": occ_hist,
+            "resizes": [dataclasses.asdict(e)
+                        for e in self.engine.resizes[resizes_before:]],
+            "pool_log": list(self.engine.jm.log)
+            if hasattr(self.engine.jm, "log") else [],
+            "autoscale_decisions": (
+                [dataclasses.asdict(d) for d in self.scaler.decisions]
+                if self.scaler is not None else []),
+            "total_tokens": total_tokens,
+            "wall_s": wall_s,
+            "tokens_per_s": total_tokens / max(1e-9, wall_s),
+            "latency_p50_s": _pct(token_lat, 50),
+            "latency_p95_s": _pct(token_lat, 95),
+        }
+        return report

@@ -110,3 +110,75 @@ def test_policy_respects_max_layers(policy):
 def test_unknown_policy_rejected():
     with pytest.raises(ValueError):
         repack("best_fit", [1.0], [1], max_mem=1.0)
+
+
+def test_repack_aware_resize_split_balances_time():
+    """ROADMAP "repack-aware balancing": a ResizePlan's target split folds
+    the balancer's time cost vector instead of shipping the merged counts
+    verbatim — and falls back to the counts when balancing cannot help."""
+    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.core.controller import ControllerConfig, DynMoController
+    from repro.core.cost_model import LayerDynState
+    from repro.core.profiler import LayerProfile
+    from repro.dynamics.config import DynamicsConfig
+
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                         d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                         vocab_size=128)
+    dcfg = DistConfig(num_stages=4, slot_slack=4, remat="none",
+                      param_dtype="float32")
+    ccfg = ControllerConfig(method="partition", cost_by="time",
+                            rebalance_every=1, imbalance_threshold=100.0,
+                            repack=True, repack_policy="adjacent",
+                            repack_mem_cap=1e9, repack_target=2)
+    ctrl = DynMoController(cfg, dcfg, DynamicsConfig(), ccfg)
+    states = [LayerDynState() for _ in range(8)]
+    params = np.full(8, 1e6)
+
+    # skewed times: adjacent merging of [2,2,2,2] gives [4,4] (bottleneck
+    # 11), the balanced 2-split is [1,7] (bottleneck 8)
+    times = np.array([8, 1, 1, 1, 1, 1, 1, 1], float)
+    ctrl.decide(LayerProfile(times, params, np.zeros(4), states), 1)
+    plan = ctrl.take_resize()
+    assert plan is not None and plan.target_stages == 2
+    assert plan.layers_per_stage == [1, 7], plan.layers_per_stage
+
+    # uniform times: the merged counts are already optimal -> unchanged
+    ctrl.rebind(dcfg, [2, 2, 2, 2])
+    times = np.ones(8)
+    ctrl.decide(LayerProfile(times, params, np.zeros(4), states), 2)
+    plan = ctrl.take_resize()
+    assert plan is not None and plan.layers_per_stage == [4, 4]
+
+    # a tight per-worker memory cap must still bind the balanced split
+    ccfg.repack_mem_cap = 6.5e6 * 5.0   # 6.5 layers' state per worker
+    ctrl.rebind(dcfg, [2, 2, 2, 2])
+    times = np.array([8, 1, 1, 1, 1, 1, 1, 1], float)
+    ctrl.decide(LayerProfile(times, params, np.zeros(4), states), 3)
+    plan = ctrl.take_resize()
+    assert plan is not None
+    assert max(plan.layers_per_stage) <= 6, plan.layers_per_stage
+
+
+def test_repack_aware_split_rescues_over_budget_counts():
+    """When the packing's counts regroup over the memory budget as a
+    contiguous split, a memory-feasible balanced split must win even if
+    its time bottleneck is no better — otherwise the consolidation would
+    be dropped with a feasible split in hand."""
+    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.core.controller import ControllerConfig, DynMoController
+    from repro.dynamics.config import DynamicsConfig
+
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                         d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                         vocab_size=128)
+    dcfg = DistConfig(num_stages=4, slot_slack=4, remat="none",
+                      param_dtype="float32")
+    ctrl = DynMoController(cfg, dcfg, DynamicsConfig(),
+                           ControllerConfig(method="partition"))
+    costs = np.ones(8)
+    mem = np.array([5, 1, 1, 1, 1, 1, 1, 1], float)
+    # compact [4,4] groups 8|4 against a cap of 7.5 -> infeasible; the
+    # balanced [3,5] (mem 7|5) is feasible despite a worse bottleneck
+    out = ctrl._balance_resize_split(costs, mem, [4, 4], 2, 7.5)
+    assert out == [3, 5], out

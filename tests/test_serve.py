@@ -1,0 +1,423 @@
+"""Elastic serving subsystem tests.
+
+Fast tests exercise the host-side logic (slot invariants, scheduler
+bookkeeping, trace generation, autoscaler load signals).  Slow tests run
+the real pipeline in subprocesses (multi-device): continuous batching vs
+the one-shot serving path, staggered-vs-batched admission equivalence, and
+the elastic shrink/grow cycle with bit-identical KV-cache preservation.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+
+# ---------------------------------------------------------------------------
+# Slot manager
+# ---------------------------------------------------------------------------
+def test_slot_manager_invariants_random_walk():
+    from repro.serve.slots import SlotManager
+
+    rng = np.random.RandomState(0)
+    sm = SlotManager(3, 4)
+    live = {}
+    next_rid = 0
+    for step in range(500):
+        op = rng.rand()
+        if op < 0.45 and sm.num_free:
+            lane = sm.alloc(next_rid)
+            assert lane not in live
+            live[lane] = next_rid
+            next_rid += 1
+        elif op < 0.8 and live:
+            lane = list(live)[rng.randint(len(live))]
+            rid = sm.free(lane)
+            assert rid == live.pop(lane)
+        else:
+            perm = sm.defrag()
+            if perm is not None:
+                assert sorted(perm.tolist()) == list(range(sm.n_lanes))
+                live = {i: live[int(src)] for i, src in enumerate(perm)
+                        if int(src) in live}
+                # compacted: live lanes form a prefix
+                assert sorted(live) == list(range(len(live)))
+        sm.check()
+        assert sm.num_active == len(live)
+        for lane, rid in live.items():
+            assert sm.lane_of(rid) == lane
+    # drain: every lane freed exactly once, none leaked
+    for lane in list(live):
+        sm.free(lane)
+    assert sm.num_active == 0 and sm.num_free == sm.n_lanes
+
+
+def test_slot_alloc_guards():
+    from repro.serve.slots import SlotManager
+
+    sm = SlotManager(1, 2)
+    sm.alloc(7)
+    with pytest.raises(ValueError):
+        sm.alloc(7)                     # double-admission of one request
+    sm.alloc(8)
+    with pytest.raises(RuntimeError):
+        sm.alloc(9)                     # no free lane
+    with pytest.raises(ValueError):
+        sm.free(5)                      # out-of-range / free lane
+
+
+# ---------------------------------------------------------------------------
+# Trace + queue
+# ---------------------------------------------------------------------------
+def test_trace_generator_deterministic_and_bounded():
+    from repro.serve.requests import RequestQueue, make_trace
+
+    kw = dict(prompt_len=16, max_gen=12, vocab_size=99, seed=5,
+              min_prompt=4, burst_period=8, burst_len=2, burst_rate=3,
+              lull_rate=1, early_exit_frac=0.5)
+    a = make_trace(40, **kw)
+    b = make_trace(40, **kw)
+    assert [(r.arrival, r.plen, r.gen, r.kind) for r in a] \
+        == [(r.arrival, r.plen, r.gen, r.kind) for r in b]
+    assert all(4 <= r.plen <= 16 for r in a)
+    assert all(1 <= r.gen <= 12 for r in a)
+    ee = [r for r in a if r.kind == "early_exit"]
+    assert ee and all(r.gen <= max(2, 12 // 4) for r in ee)
+    assert any(r.arrival > 0 for r in a)          # actually bursty
+    q = RequestQueue(a)
+    q.poll(0)
+    assert q.depth == sum(1 for r in a if r.arrival == 0)
+    q.poll(10 ** 9)
+    assert q.depth == len(a) and not q.exhausted
+    while q.pop() is not None:
+        pass
+    assert q.exhausted
+
+
+# ---------------------------------------------------------------------------
+# Scheduler bookkeeping (fake model: ids fed back from a seeded rng)
+# ---------------------------------------------------------------------------
+def _drive(sched, vocab=50, seed=0, max_ticks=500):
+    rng = np.random.RandomState(seed)
+    m, B = sched.slots.num_micro, sched.slots.mb
+    tick = 0
+    while not sched.done and tick < max_ticks:
+        adm = sched.plan_admissions(tick)
+        if adm is not None:
+            sched.note_prefill(adm, rng.randint(0, vocab, (m, B)), tick)
+        dec = sched.plan_decode()
+        if dec is not None:
+            assert dec.pos[dec.active].min() >= 0
+            assert dec.pos[dec.active].max() < sched.cache_len
+            sched.note_decode(dec, rng.randint(0, vocab, (m, B)), tick)
+        sched.maybe_defrag(tick)
+        sched.slots.check()
+        tick += 1
+    return tick
+
+
+def test_scheduler_completes_all_requests_and_respects_budgets():
+    from repro.serve.requests import RequestQueue, make_trace
+    from repro.serve.scheduler import Scheduler
+
+    reqs = make_trace(23, prompt_len=8, max_gen=6, vocab_size=50, seed=2,
+                      min_prompt=2, burst_period=5, burst_len=2,
+                      burst_rate=4, lull_rate=0, early_exit_frac=0.3)
+    sched = Scheduler(2, 3, 8, 12, RequestQueue(reqs), defrag_every=2)
+    _drive(sched, seed=1)
+    assert sched.done and len(sched.completions) == 23
+    for r in sched.completions:
+        assert 0 <= r.admitted <= r.finished
+        assert len(r.tokens) == min(r.gen, 12 - r.plen + 1)
+    # no lane left owned, nothing double-counted
+    assert sched.slots.num_active == 0
+    assert sorted(r.rid for r in sched.completions) == list(range(23))
+
+
+def test_trace_zero_arrival_rate_rejected():
+    from repro.serve.requests import make_trace
+
+    with pytest.raises(ValueError):
+        make_trace(4, prompt_len=8, max_gen=4, vocab_size=10,
+                   burst_period=25, burst_len=0, lull_rate=0)
+
+
+def test_scheduler_reuse_of_request_objects_is_clean():
+    """Admission owns the runtime fields: driving the same Request objects
+    through a second scheduler must not append onto the first run's
+    tokens."""
+    from repro.serve.requests import RequestQueue, make_trace
+    from repro.serve.scheduler import Scheduler
+
+    reqs = make_trace(5, prompt_len=6, max_gen=4, vocab_size=50, seed=3,
+                      min_prompt=2)
+    runs = []
+    for _ in range(2):
+        sched = Scheduler(1, 2, 6, 10, RequestQueue(reqs))
+        _drive(sched, seed=9)
+        runs.append({r.rid: list(r.tokens) for r in sched.completions})
+    assert runs[0] == runs[1]
+
+
+def test_scheduler_eos_vacates_lane_early():
+    from repro.serve.requests import Request, RequestQueue
+    from repro.serve.scheduler import Scheduler
+
+    r = Request(rid=0, arrival=0, prompt=np.arange(4, dtype=np.int32),
+                gen=50)
+    sched = Scheduler(1, 1, 8, 64, RequestQueue([r]), eos_id=3)
+    rng = np.random.RandomState(0)
+    tick = 0
+    while not sched.done and tick < 100:
+        adm = sched.plan_admissions(tick)
+        if adm is not None:
+            sched.note_prefill(adm, np.zeros((1, 1), np.int64), tick)
+        dec = sched.plan_decode()
+        if dec is not None:
+            ids = np.full((1, 1), 3 if tick == 5 else 9)
+            sched.note_decode(dec, ids, tick)
+        tick += 1
+    assert sched.done
+    assert sched.completions[0].tokens[-1] == 3
+    assert len(sched.completions[0].tokens) == 6     # ticks 0..5, eos last
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler load signals
+# ---------------------------------------------------------------------------
+def test_autoscaler_load_signals_hysteresis():
+    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+
+    sc = Autoscaler(AutoscalerConfig(min_stages=2, max_stages=4, patience=3,
+                                     cooldown=5, queue_high=4,
+                                     occupancy_low=0.3))
+    # pressure below patience -> nothing
+    for t in range(2):
+        d = sc.observe_load(t, 4, queue_depth=9, occupancy=1.0)
+        assert d.action == "none"
+    d = sc.observe_load(2, 4, queue_depth=9, occupancy=1.0)
+    assert d.action == "none"          # at max_stages: no grow possible
+    # same pressure at 3 stages: grows on the 3rd consecutive signal
+    sc2 = Autoscaler(AutoscalerConfig(min_stages=2, max_stages=4, patience=3,
+                                      cooldown=5, queue_high=4,
+                                      occupancy_low=0.3))
+    acts = [sc2.observe_load(t, 3, queue_depth=9, occupancy=1.0).action
+            for t in range(3)]
+    assert acts == ["none", "none", "grow"]
+    sc2.note_resize(2, 4)
+    # cooldown: drain signals inside it are ignored entirely
+    for t in range(3, 7):
+        assert sc2.observe_load(t, 4, queue_depth=0,
+                                occupancy=0.0).action == "none"
+    # after cooldown, sustained drain shrinks
+    acts = [sc2.observe_load(t, 4, queue_depth=0, occupancy=0.0).action
+            for t in range(7, 10)]
+    assert acts == ["none", "none", "shrink"]
+    # at min_stages a drain never shrinks further
+    sc3 = Autoscaler(AutoscalerConfig(min_stages=2, max_stages=4, patience=1,
+                                      cooldown=0, queue_high=4,
+                                      occupancy_low=0.3))
+    assert sc3.observe_load(0, 2, queue_depth=0,
+                            occupancy=0.0).action == "none"
+
+
+def test_autoscaler_latency_slo_signal():
+    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+
+    sc = Autoscaler(AutoscalerConfig(min_stages=1, max_stages=4, patience=2,
+                                     cooldown=0, queue_high=10 ** 9,
+                                     latency_slo_s=0.1))
+    acts = [sc.observe_load(t, 2, queue_depth=0, occupancy=1.0,
+                            latency_s=0.5).action for t in range(2)]
+    assert acts == ["none", "grow"]
+    assert "latency" in sc.decisions[-1].reason
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-level (slow, subprocess-isolated)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_continuous_batching_equals_one_shot_serving():
+    """A full batch arriving at once through the continuous scheduler must
+    reproduce run_serving's tokens exactly (same seed/prompts)."""
+    out = run_in_subprocess("""
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.requests import Request
+from repro.launch.serve import run_serving
+
+micro, mbg, plen, gen = 2, 2, 8, 5
+out = run_serving("smollm-360m", stages=4, micro=micro, mb_global=mbg,
+                  prompt_len=plen, gen=gen, layers=8, d_model=64, seed=0)
+ref = out["tokens"]
+cfg = reduced_config(get_config("smollm-360m"), num_layers=8, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512)
+dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                  param_dtype="float32")
+shapes = PipelineShapes(num_micro=micro, mb_global=mbg, seq=plen,
+                        cache_len=plen + gen)
+rng = np.random.RandomState(0)
+prompts = rng.randint(0, cfg.vocab_size, (micro, mbg, plen))
+reqs = [Request(rid=i, arrival=0,
+                prompt=prompts[i // mbg, i % mbg].astype(np.int32), gen=gen)
+        for i in range(micro * mbg)]
+srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, seed=0)
+rep = srv.serve(reqs)
+for i, c in enumerate(rep["completions"]):
+    want = ref[i // mbg, i % mbg].tolist()
+    assert want == c["tokens"], (i, want, c["tokens"])
+srv.close()
+print("PASS")
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_staggered_admission_and_defrag_keep_tokens():
+    """The same requests produce identical tokens whether they arrive all
+    at once or staggered into a smaller batch (bootstrap decode for short
+    prompts, lanes reused across completions), with and without defrag —
+    continuous batching must be invisible to each request."""
+    out = run_in_subprocess("""
+import copy
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.requests import Request
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=6, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+dcfg = DistConfig(num_stages=2, slot_slack=2, remat="none",
+                  param_dtype="float32")
+rng = np.random.RandomState(7)
+plens = [8, 5, 3, 8, 6, 4]
+gens  = [4, 3, 5, 2, 4, 3]
+base = [Request(rid=i, arrival=0,
+                prompt=rng.randint(0, 256, plens[i]).astype(np.int32),
+                gen=gens[i]) for i in range(6)]
+
+def serve(mb, arrivals, defrag):
+    shapes = PipelineShapes(num_micro=1, mb_global=mb, seq=8, cache_len=16)
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, seed=0,
+                        defrag_every=defrag)
+    reqs = copy.deepcopy(base)
+    for r, a in zip(reqs, arrivals):
+        r.arrival = a
+    rep = srv.serve(reqs)
+    srv.close()
+    return {c["rid"]: c["tokens"] for c in rep["completions"]}
+
+wide = serve(6, [0] * 6, 0)                  # everyone fits at once
+narrow = serve(2, [0, 0, 1, 2, 4, 5], 0)     # staggered through 2 lanes
+defrag = serve(2, [0, 0, 1, 2, 4, 5], 1)     # + compaction every tick
+assert wide == narrow, (wide, narrow)
+assert wide == defrag, (wide, defrag)
+print("PASS")
+""", devices=2, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_elastic_serving_autoscale_cycle_token_identity():
+    """The acceptance demo as a gate: a bursty trace drives at least one
+    autoscale shrink (workers released via the JobManagerClient) and one
+    grow-back; tokens are identical to the fixed-mesh run; and a live
+    4->2->4 cache round-trip is bit-exact."""
+    out = run_in_subprocess("""
+import copy
+import jax
+import numpy as np
+from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.requests import Request
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=8, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                  param_dtype="float32")
+shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8, cache_len=24)
+rng = np.random.RandomState(0)
+prompt = lambda n: rng.randint(0, 256, n).astype(np.int32)
+trace = [Request(rid=i, arrival=0, prompt=prompt(8), gen=2 + i % 3,
+                 kind="early_exit") for i in range(6)]
+trace += [Request(rid=6 + i, arrival=0, prompt=prompt(6), gen=16)
+          for i in range(2)]
+trace += [Request(rid=8 + i, arrival=30, prompt=prompt(8), gen=3)
+          for i in range(6)]
+
+def serve(autoscale):
+    scaler = Autoscaler(AutoscalerConfig(
+        min_stages=2, max_stages=4, patience=2, cooldown=3, queue_high=2,
+        occupancy_low=0.6)) if autoscale else None
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, scaler=scaler,
+                        min_stages=2, seed=0)
+    rep = srv.serve(copy.deepcopy(trace), autoscale=autoscale)
+    state, engine = srv.state, srv.engine
+    return rep, state, engine, srv
+
+el, state, engine, srv = serve(True)
+fx, _, _, srv2 = serve(False)
+kinds = [r["kind"] for r in el["resizes"]]
+assert "shrink" in kinds and "grow" in kinds, kinds
+assert any(e.startswith("release:") for e in el["pool_log"]), el["pool_log"]
+assert any(e.startswith("grant:") for e in el["pool_log"]), el["pool_log"]
+for a, b in zip(el["completions"], fx["completions"]):
+    assert a["tokens"] == b["tokens"], (a, b)
+
+# live cache round-trip: shrink to 2 and back must be bit-exact
+lps0 = list(state.lps)
+before = jax.tree.map(lambda a: np.asarray(a), state.cache)
+s2 = engine.resize(state, 2)
+s4 = engine.resize(s2, len(lps0), lps0)
+after = jax.tree.map(lambda a: np.asarray(a), s4.cache)
+for k in before:
+    assert (before[k] == after[k]).all(), k
+srv.close(); srv2.close()
+print("PASS", kinds)
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_measured_stage_times_reflect_load():
+    """The engine's stage probe measures real per-stage wall times: a 7:1
+    layer split must time the loaded stage slower, and the trainer path
+    returns the measured vector."""
+    out = run_in_subprocess("""
+import jax
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.launch.engine import ElasticEngine
+from repro.pipeline.pipeline import PipelineShapes
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=8, d_model=128,
+                     num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256)
+dcfg = DistConfig(num_stages=2, slot_slack=6, remat="none",
+                  param_dtype="float32")
+shapes = PipelineShapes(num_micro=2, mb_global=2, seq=64)
+engine = ElasticEngine(cfg, dcfg, DynamicsConfig(), shapes)
+state = engine.init_state(jax.random.PRNGKey(0))
+batch = {"tokens": np.zeros((2, 2, 64), np.int32)}
+t_even = engine.measure_stage_times(state, batch)
+assert t_even.shape == (2,) and (t_even > 0).all()
+skew = engine.resize(state, 2, [7, 1])
+t_skew = engine.measure_stage_times(skew, batch)
+assert t_skew[0] > t_skew[1], t_skew
+
+from repro.launch.train import run_training
+out = run_training("smollm-360m", steps=6, stages=2, layers=4, d_model=64,
+                   seq=32, num_micro=2, mb_global=2, rebalance_every=3,
+                   log_every=100, measure_stage_times=True)
+mt = out["measured_stage_times"]
+assert mt is not None and len(mt) == 2 and all(t > 0 for t in mt)
+print("PASS", t_skew)
+""", devices=2, timeout=900)
+    assert "PASS" in out
