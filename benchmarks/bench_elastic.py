@@ -18,11 +18,14 @@ SRC = os.path.join(REPO, "src")
 
 _CHILD = """
 import json
-from repro.launch.train import run_training
-out = run_training(
+from repro.api import Session
+from repro.launch.train import train_spec
+spec = train_spec(
     "smollm-360m", steps=%(steps)d, stages=4, layers=8, d_model=128,
     seq=32, num_micro=%(micro)d, mb_global=2, dynamism="pruning",
     repack=True, rebalance_every=5, log_every=1000)
+with Session(spec) as s:
+    out = s.train()
 print("BENCH_JSON " + json.dumps({
     "losses": out["losses"],
     "step_times": out["step_times"],
@@ -31,6 +34,7 @@ print("BENCH_JSON " + json.dumps({
     "pool_log": out["pool_log"],
     "tokens_per_step": out["tokens_per_step"],
     "final_stages": out["final_stages"],
+    "spec": spec.to_dict(),
 }))
 """
 
@@ -87,15 +91,17 @@ def run(quick: bool = False):
         ("elastic_loss_drop_across_shrink", 0.0,
          out["losses"][max(0, cut - 2)] - out["losses"][-1]),
     ]
-    return rows
+    return rows, out["spec"]
 
 
 def main(quick: bool = False):
-    rows = run(quick)
+    rows, spec = run(quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.3f}")
-    return rows
+    # (rows, spec): run.py snapshots BENCH_elastic.json with the exact
+    # RunSpec that produced these numbers
+    return rows, spec
 
 
 if __name__ == "__main__":

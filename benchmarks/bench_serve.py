@@ -23,27 +23,28 @@ _CHILD = """
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=4")
+import copy
+import dataclasses
 import json
 import numpy as np
-from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
-from repro.configs import DistConfig, get_config, reduced_config
-from repro.dynamics.config import DynamicsConfig
-from repro.pipeline.pipeline import PipelineShapes
-from repro.serve import ElasticServer
+from repro.api import Session
+from repro.launch.serve import serve_spec
 from repro.serve.requests import Request
 
 gen_long = %(gen_long)d
-cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
-                     d_model=%(d_model)d, num_heads=4, num_kv_heads=2,
-                     d_ff=2 * %(d_model)d, vocab_size=512)
-dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
-                  param_dtype="float32")
-shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8,
-                        cache_len=8 + gen_long)
+# the elastic run's spec; the fixed baseline is the same spec with
+# autoscaling off (recorded in BENCH_serve.json)
+spec = serve_spec("smollm-360m", stages=4, micro=2, mb_global=2,
+                  prompt_len=8, gen=gen_long, layers=8,
+                  d_model=%(d_model)d, autoscale=True, min_stages=2,
+                  patience=2, cooldown=3, queue_high=2,
+                  occupancy_low=0.6, seed=0)
+vocab = 512
 rng = np.random.RandomState(0)
-prompt = lambda n: rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+prompt = lambda n: rng.randint(0, vocab, n).astype(np.int32)
 # burst of short early-exit requests + a long tail that keeps decoding
 # through the drained (shrunken) phase, then a second burst -> grow back
+# (hand-built long-tail arrivals; not expressible as a make_trace spec)
 trace = []
 for i in range(6):
     trace.append(Request(rid=i, arrival=0, prompt=prompt(8),
@@ -57,15 +58,10 @@ for i in range(6):
                          gen=4))
 
 def run(autoscale):
-    scaler = Autoscaler(AutoscalerConfig(
-        min_stages=2, max_stages=4, patience=2, cooldown=3, queue_high=2,
-        occupancy_low=0.6)) if autoscale else None
-    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, scaler=scaler,
-                        min_stages=2, seed=0)
-    import copy
-    rep = srv.serve(copy.deepcopy(trace), autoscale=autoscale)
-    srv.close()
-    return rep
+    sp = dataclasses.replace(spec, cluster=dataclasses.replace(
+        spec.cluster, autoscale=autoscale))
+    with Session(sp) as s:
+        return s.serve(trace=copy.deepcopy(trace))
 
 keep = ("completions", "resizes", "tick_wall_s", "tick_tokens",
         "stages_history", "pool_log", "total_tokens", "wall_s",
@@ -74,7 +70,8 @@ keep = ("completions", "resizes", "tick_wall_s", "tick_tokens",
 el = run(True)
 fx = run(False)
 out = {"elastic": {k: el[k] for k in keep},
-       "fixed": {k: fx[k] for k in keep}}
+       "fixed": {k: fx[k] for k in keep},
+       "spec": spec.to_dict()}
 print("BENCH_JSON " + json.dumps(out))
 """
 
@@ -147,15 +144,17 @@ def run(quick: bool = False):
         ("serve_p95_latency_ms_fixed", fx["latency_p95_s"] * 1e6,
          fx["latency_p95_s"] * 1e3),
     ]
-    return rows
+    return rows, out["spec"]
 
 
 def main(quick: bool = False):
-    rows = run(quick)
+    rows, spec = run(quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.3f}")
-    return rows
+    # (rows, spec): run.py snapshots BENCH_serve.json with the exact
+    # RunSpec that produced these numbers
+    return rows, spec
 
 
 if __name__ == "__main__":

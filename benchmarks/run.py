@@ -38,14 +38,23 @@ def main() -> None:
         t0 = time.perf_counter()
         print(f"### bench:{name}")
         rows = benches[name](quick=args.quick)
+        # spec-registered benches return (rows, RunSpec-dict): the snapshot
+        # records the exact spec that produced each number
+        spec = None
+        if isinstance(rows, tuple) and len(rows) == 2:
+            rows, spec = rows
         # snapshot benches that return uniform (name, us, derived) rows
         if (isinstance(rows, list) and rows
                 and all(isinstance(r, tuple) and len(r) == 3
                         and isinstance(r[0], str) for r in rows)):
             path = f"BENCH_{name}.json"
+            entries = [{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in rows]
             with open(path, "w") as f:
-                json.dump([{"name": n, "us_per_call": us, "derived": d}
-                           for n, us, d in rows], f, indent=1)
+                if spec is not None:
+                    json.dump({"spec": spec, "rows": entries}, f, indent=1)
+                else:
+                    json.dump(entries, f, indent=1)
             print(f"### bench:{name} wrote {path}", file=sys.stderr)
         print(f"### bench:{name} done in {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)

@@ -12,6 +12,9 @@ Runs the full §3.3.1/§3.4.2 story on CPU with forced host devices:
     recovery) and the autoscaler grows the pipeline to 4 again — no
     `--grow-back` step counting anywhere.
 
+The whole story is one ``RunSpec`` — serialize it with ``spec.to_json()``
+and the identical run is `python -m repro.launch.train --config ...`.
+
 Run:
   REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python examples/autoscale_cluster.py
 """
@@ -31,13 +34,22 @@ def main():
                     choices=["inproc", "file"])
     args = ap.parse_args()
 
-    from repro.launch.train import run_training
-    out = run_training(
-        "smollm-360m", steps=args.steps, stages=4, layers=8, d_model=128,
-        seq=32, num_micro=4, mb_global=2, dynamism="pruning",
-        repack=True, rebalance_every=5, log_every=5,
-        async_controller=True, autoscale=True,
-        simulate_recover=args.recover_at, job_manager=args.job_manager)
+    from repro.api import (ClusterSpec, ControllerSpec, DynamicsSpec,
+                           ModelSpec, ParallelSpec, RepackSpec, RunSpec,
+                           Session)
+    spec = RunSpec(
+        model=ModelSpec(arch="smollm-360m", layers=8, d_model=128),
+        parallel=ParallelSpec(stages=4, num_micro=4, mb_global=2, seq=32),
+        dynamics=DynamicsSpec(kind="pruning"),
+        controller=ControllerSpec(rebalance_every=5,
+                                  repack=RepackSpec(enabled=True),
+                                  async_decide=True),
+        cluster=ClusterSpec(job_manager=args.job_manager, autoscale=True,
+                            simulate_recover=args.recover_at),
+        steps=args.steps, log_every=5)
+
+    with Session(spec) as s:
+        out = s.train()
 
     ctl = out["controller"]
     print(f"\nloss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}; "
@@ -45,13 +57,16 @@ def main():
           f"dropped={ctl['dropped']} stale-rejected={ctl['stale_rejected']}")
     print(f"pool transitions over the {args.job_manager} boundary: "
           f"{out['pool_log']}")
-    for rz in out["resizes"]:
-        print(f"  {rz['kind']} @step {rz['step']}: {rz['from_stages']}->"
-              f"{rz['to_stages']} stages, workers {rz['workers']}, "
-              f"schedule {rz['ticks_before']}->{rz['ticks_after']} ticks")
-    for d in out["autoscale_decisions"]:
-        print(f"  autoscale @step {d['step']}: {d['action']} x{d['workers']}"
-              f" ({d['reason']})")
+    for ev in s.events:
+        if ev.kind == "resize":
+            print(f"  {ev.data['resize_kind']} @step {ev.step}: "
+                  f"{ev.data['from_stages']}->{ev.data['to_stages']} "
+                  f"stages, workers {ev.data['workers']}, schedule "
+                  f"{ev.data['ticks_before']}->{ev.data['ticks_after']} "
+                  f"ticks")
+        elif ev.kind == "autoscale":
+            print(f"  autoscale @step {ev.step}: {ev.data['action']} "
+                  f"x{ev.data['workers']} ({ev.data['reason']})")
     assert out["final_stages"] == 4, "expected the recovery grow to land"
 
 

@@ -7,6 +7,10 @@ What you see: a tiny GPT training over the pipeline; every 10 steps the DynMo
 controller profiles the per-slot stats, and when dynamism (here: gradual
 block pruning) skews per-layer cost it migrates layers between stages —
 without recompiling the training step.
+
+Everything is described by one typed ``RunSpec`` (the same object
+``--config run.json`` files deserialize to) and executed by a ``Session``;
+``session.events`` is the structured telemetry stream.
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -28,19 +32,29 @@ def main():
                     choices=["diffusion", "partition"])
     args = ap.parse_args()
 
-    from repro.launch.train import run_training
-    out = run_training(
-        "smollm-360m", steps=args.steps, stages=4, layers=8, d_model=128,
-        seq=64, num_micro=4, mb_global=4, dynamism=args.dynamism,
-        balancer=args.balancer, rebalance_every=10, log_every=5)
+    from repro.api import (ControllerSpec, DynamicsSpec, ModelSpec,
+                           ParallelSpec, RunSpec, Session)
+    spec = RunSpec(
+        model=ModelSpec(arch="smollm-360m", layers=8, d_model=128),
+        parallel=ParallelSpec(stages=4, num_micro=4, mb_global=4, seq=64),
+        dynamics=DynamicsSpec(kind=args.dynamism),
+        controller=ControllerSpec(balancer=args.balancer,
+                                  rebalance_every=10),
+        steps=args.steps, log_every=5)
+
+    with Session(spec) as s:
+        out = s.train()
+
     print(f"\nloss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
           f"({args.steps} steps, {out['wall_s']:.1f}s)")
     print(f"final layers-per-stage: {out['final_lps']}")
-    print(f"rebalance events: {len(out['events'])}")
-    for ev in out["events"]:
-        print(f"  iter {ev.iteration}: imbalance "
-              f"{ev.imbalance_before:.3f} -> {ev.imbalance_after:.3f}, "
-              f"moved {ev.moved_layers} layers in {ev.decision_s*1e3:.1f}ms")
+    rebalances = [ev for ev in s.events if ev.kind == "rebalance"]
+    print(f"rebalance events: {len(rebalances)}")
+    for ev in rebalances:
+        print(f"  iter {ev.data['iteration']}: imbalance "
+              f"{ev.data['imbalance_before']:.3f} -> "
+              f"{ev.data['imbalance_after']:.3f}, "
+              f"moved {ev.data['moved_layers']} layers")
 
 
 if __name__ == "__main__":

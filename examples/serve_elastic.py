@@ -1,13 +1,13 @@
 """Elastic serving demo: continuous batching + load-driven autoscaling.
 
 A bursty request trace (short early-exit requests around a long-generation
-tail) is served twice through `repro.serve.ElasticServer`:
+tail) is served twice through the ``Session`` API:
 
   * **elastic** — the autoscaler watches queue depth and KV-lane occupancy;
     when the burst drains it consolidates the serving pipeline (workers are
     released through the JobManagerClient boundary), and when the second
     burst backs the queue up it grows back;
-  * **fixed** — same trace, no scaling.
+  * **fixed** — the same spec with ``cluster.autoscale`` off.
 
 The generated tokens are asserted identical request-for-request: a resize
 re-splits the in-flight KV caches across the new world bit-exactly, so
@@ -19,6 +19,7 @@ Run:
 """
 import argparse
 import copy
+import dataclasses
 import os
 
 os.environ.setdefault("REPRO_TRAIN_DEVICES", "4")
@@ -41,23 +42,24 @@ def main():
                     choices=["inproc", "file"])
     args = ap.parse_args()
 
-    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
-    from repro.cluster.rpc import FileJobManager, spawn_file_manager
-    from repro.configs import DistConfig, get_config, reduced_config
-    from repro.dynamics.config import DynamicsConfig
-    from repro.pipeline.pipeline import PipelineShapes
-    from repro.serve import ElasticServer
+    from repro.api import (ClusterSpec, ModelSpec, ParallelSpec, RunSpec,
+                           ServeSpec, Session)
     from repro.serve.requests import Request
 
-    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
-                         d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
-                         vocab_size=512)
-    dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
-                      param_dtype="float32")
-    shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8,
-                            cache_len=8 + args.gen_long)
+    spec = RunSpec(
+        model=ModelSpec(arch="smollm-360m", layers=8, d_model=128,
+                        d_ff=256),
+        parallel=ParallelSpec(stages=4, num_micro=2, mb_global=2),
+        cluster=ClusterSpec(job_manager=args.job_manager, autoscale=True),
+        serve=ServeSpec(prompt_len=8, gen=args.gen_long, min_stages=2,
+                        patience=2, cooldown=3, queue_high=2,
+                        occupancy_low=0.6, defrag_every=4))
+
+    # hand-built long-tail trace (Session.serve accepts an explicit trace
+    # when the spec's make_trace distribution isn't enough)
     rng = np.random.RandomState(0)
-    prompt = lambda n: rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+    vocab = spec.model.vocab_size
+    prompt = lambda n: rng.randint(0, vocab, n).astype(np.int32)
     trace = [Request(rid=i, arrival=0, prompt=prompt(8), gen=2 + i % 3,
                      kind="early_exit") for i in range(6)]
     trace += [Request(rid=6 + i, arrival=0, prompt=prompt(6),
@@ -67,29 +69,15 @@ def main():
                       gen=4) for i in range(6)]
 
     def serve(autoscale):
-        jm = jm_proc = None
-        if autoscale and args.job_manager == "file":
-            import tempfile
-            jm_dir = tempfile.mkdtemp(prefix="dynmo_serve_demo_")
-            jm_proc = spawn_file_manager(jm_dir, 4)
-            jm = FileJobManager(jm_dir, timeout_s=60.0)
-        scaler = Autoscaler(AutoscalerConfig(
-            min_stages=2, max_stages=4, patience=2, cooldown=3,
-            queue_high=2, occupancy_low=0.6)) if autoscale else None
-        srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes,
-                            job_manager=jm, scaler=scaler, min_stages=2,
-                            seed=0, defrag_every=4)
-        try:
-            return srv.serve(copy.deepcopy(trace), autoscale=autoscale)
-        finally:
-            srv.close()
-            if jm is not None:
-                jm.close()
-            if jm_proc is not None:
-                try:
-                    jm_proc.wait(timeout=10)
-                except Exception:
-                    jm_proc.kill()
+        sp = dataclasses.replace(
+            spec, cluster=dataclasses.replace(
+                spec.cluster,
+                # the file job manager only matters when scaling releases
+                # workers; keep the fixed baseline in-process
+                job_manager=(args.job_manager if autoscale else "inproc"),
+                autoscale=autoscale))
+        with Session(sp) as s:
+            return s.serve(trace=copy.deepcopy(trace))
 
     print("=== elastic (autoscaled) ===")
     el = serve(True)

@@ -1,13 +1,18 @@
-"""End-to-end driver: train a ~100M-param GPT for a few hundred steps with
-gradual global block pruning (paper §3.2.1, Eq. 3) + DynMo rebalancing +
-re-packing + checkpointing.
+"""End-to-end driver: train a ~30M..100M-param GPT for a few hundred steps
+with gradual global block pruning (paper §3.2.1, Eq. 3) + DynMo rebalancing
++ live re-packing + checkpointing.
 
     PYTHONPATH=src python examples/train_dynamic_pruning.py          # ~30M
     PYTHONPATH=src python examples/train_dynamic_pruning.py --big    # ~100M
 
 The pruning schedule compresses the paper's 3000..7000-iteration window into
-this run's horizon; watch ff_mask density fall and the balancer shift layers
-toward the stages holding less-pruned layers.
+this run's horizon; watch ff_mask density fall, the balancer shift layers
+toward the stages holding less-pruned layers, and — once pruning frees
+enough memory under the 1.1× per-worker budget — the controller's repack
+decision consolidate the pipeline onto 2 workers *live* (Alg. 2).
+
+The run is one ``RunSpec`` executed by a ``Session`` (the identical run is
+reachable as `python -m repro.launch.train --config <this spec as json>`).
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -19,8 +24,6 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
 
 def main():
     ap = argparse.ArgumentParser()
@@ -29,112 +32,55 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
-    from repro.configs import DistConfig, get_config, reduced_config
-    from repro.core.controller import ControllerConfig, DynMoController
-    from repro.checkpoint.checkpoint import CheckpointManager
-    from repro.data.loader import DataConfig, make_loader
-    from repro.dynamics import pruning as prn
-    from repro.dynamics.config import DynamicsConfig
-    from repro.dynamics.trajectories import zhu_gupta_sparsity
-    from repro.launch.mesh import make_host_mesh
-    from repro.launch.train import make_train_step
-    from repro.models import model as M
-    from repro.optim.schedule import cosine_schedule
-    from repro.pipeline.pipeline import PipelineShapes
+    from repro.api import (ControllerSpec, DynamicsSpec, ModelSpec,
+                           ParallelSpec, RepackSpec, RunSpec, Session)
+    from repro.configs import get_config, reduced_config
 
     if args.big:
-        cfg = reduced_config(get_config("smollm-360m"), num_layers=12,
-                             d_model=512, num_heads=8, num_kv_heads=4,
-                             d_ff=2048, vocab_size=4096)
+        model = ModelSpec(arch="smollm-360m", layers=12, d_model=512,
+                          num_heads=8, num_kv_heads=4, d_ff=2048,
+                          vocab_size=4096)
     else:
-        cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
-                             d_model=256, num_heads=8, num_kv_heads=4,
-                             d_ff=1024, vocab_size=2048)
+        model = ModelSpec(arch="smollm-360m", layers=8, d_model=256,
+                          num_heads=8, num_kv_heads=4, d_ff=1024,
+                          vocab_size=2048)
+    cfg = reduced_config(get_config(model.arch), num_layers=model.layers,
+                         d_model=model.d_model, num_heads=model.num_heads,
+                         num_kv_heads=model.num_kv_heads, d_ff=model.d_ff,
+                         vocab_size=model.vocab_size)
     print(f"model: {cfg.param_count()/1e6:.1f}M params, "
           f"{cfg.total_blocks()} blocks")
 
-    stages, micro, mbg, seq = 4, 4, 4, 128
-    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
-                      param_dtype="float32")
-    dyncfg = DynamicsConfig(kind="pruning", prune_start_iter=0,
-                            prune_end_iter=args.steps * 10,
-                            prune_frequency=1)
-    mesh = make_host_mesh(data=1, model=stages)
-    shapes = PipelineShapes(micro, mbg, seq)
-
-    params = M.init_params(jax.random.PRNGKey(0), cfg, dcfg)
-    assignment = M.make_assignment(cfg, dcfg)
-    dyn = M.init_dyn(cfg, dcfg, dyncfg)
-    init_opt, train_step = make_train_step(cfg, dcfg, dyncfg, mesh, shapes)
-    opt = init_opt(params)
-    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
-
-    # finite per-worker budget (1.1× the unpruned per-stage footprint):
-    # consolidation plans fire only once pruning actually shrinks memory
-    from repro.core.cost_model import stage_memory_budget
-    ctrl = DynMoController(
-        cfg, dcfg, dyncfg,
-        ControllerConfig(method="diffusion", cost_by="time",
-                         rebalance_every=20, repack=True,
-                         repack_mem_cap=stage_memory_budget(
-                             cfg, micro * mbg * seq, seq,
-                             dcfg.bytes_per_param, stages, cap_factor=1.1),
-                         repack_target=2))
     ckdir = tempfile.mkdtemp(prefix="dynmo_ck_")
-    ckpt = CheckpointManager(ckdir, every=max(20, args.steps // 4))
-    loader = make_loader(cfg, DataConfig(micro, mbg, seq))
-    tokens_step = micro * mbg * seq
+    spec = RunSpec(
+        model=model,
+        parallel=ParallelSpec(stages=4, num_micro=4, mb_global=4, seq=128),
+        dynamics=DynamicsSpec(kind="pruning"),
+        # finite per-worker budget (1.1× the unpruned per-stage footprint):
+        # consolidation plans fire only once pruning actually shrinks memory
+        controller=ControllerSpec(
+            rebalance_every=20,
+            repack=RepackSpec(enabled=True, mem_cap=1.1, target=2)),
+        steps=args.steps, log_every=20, ckpt_dir=ckdir)
 
-    with mesh:
-        for step, batch in enumerate(loader):
-            if step >= args.steps:
-                break
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            lr = cosine_schedule(jnp.float32(step), args.steps, 3e-4, 20)
-            params, opt, loss, stats, gnorm = step_jit(
-                params, opt, assignment, dyn, batch, lr)
+    with Session(spec) as s:
+        out = s.train()
 
-            # gradual pruning every 20 steps (Zhu–Gupta, Eq. 3)
-            if step and step % 20 == 0:
-                sp = zhu_gupta_sparsity(step * 10, dyncfg)
-                keep = prn.target_keep_blocks(cfg, cfg.total_blocks(), sp)
-                dyn = dict(dyn)
-                dyn["ff_mask"] = prn.global_block_prune(
-                    cfg, params["stages"], assignment["tags"], keep)
-                dens = float(jnp.mean(dyn["ff_mask"]))
-                print(f"  [prune] target sparsity {sp:.2f}; "
-                      f"kept blocks density {dens:.2f}")
-
-            if ctrl.cadence(step + 1):
-                # stats sync only on controller cadence (§3.3.1)
-                from repro.launch.engine import fold_stats
-                stats_np = fold_stats(stats, stages)
-                params, opt, dyn, new_assignment, _, ev = ctrl.step(
-                    step + 1, stats_np, np.asarray(assignment["tags"]),
-                    micro, tokens_step, seq, params, opt, dyn)
-                if new_assignment is not None:
-                    assignment = new_assignment
-                    print(f"  [dynmo] rebalanced -> {ctrl.lps} "
-                          f"(imb {ev.imbalance_before:.2f} -> "
-                          f"{ev.imbalance_after:.2f}, active workers "
-                          f"{ev.active_workers})")
-                plan = ctrl.take_resize()
-                if plan is not None:
-                    print(f"  [repack] plan: consolidate onto "
-                          f"{plan.target_stages} workers "
-                          f"({plan.policy}); the live path "
-                          f"(repro.launch.train --repack) executes this "
-                          f"in-process via the ElasticEngine")
-                    # advisory-only demo: report once, then keep ordinary
-                    # rebalancing running (a standing plan supersedes it)
-                    ctrl.ccfg.repack = False
-            ckpt.maybe_save(step, params, opt, dyn, ctrl.lps)
-            if step % 20 == 0:
-                print(f"step {step:4d} loss {float(loss):.4f} "
-                      f"gnorm {float(gnorm):.2f}")
-    print(f"done. checkpoints at {ckdir}")
+    print(f"\nloss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+          f"({args.steps} steps, {out['wall_s']:.1f}s)")
+    for ev in s.events:
+        if ev.kind == "rebalance":
+            print(f"  [dynmo] iter {ev.data['iteration']}: imbalance "
+                  f"{ev.data['imbalance_before']:.2f} -> "
+                  f"{ev.data['imbalance_after']:.2f}, moved "
+                  f"{ev.data['moved_layers']} layers")
+        elif ev.kind == "resize":
+            print(f"  [repack] {ev.data['resize_kind']} @step {ev.step}: "
+                  f"{ev.data['from_stages']}->{ev.data['to_stages']} "
+                  f"workers, schedule {ev.data['ticks_before']}->"
+                  f"{ev.data['ticks_after']} ticks")
+    print(f"final stages={out['final_stages']} lps={out['final_lps']}; "
+          f"checkpoints at {ckdir}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""Regenerate configs/scenarios/*.json from the preset registry.
+
+    PYTHONPATH=src python scripts/gen_scenarios.py
+
+The checked-in files must always equal ``repro.api.scenarios.SCENARIOS``
+serialized (tests/test_api.py asserts it), so edits go in scenarios.py
+and this script refreshes the JSON — never the other way around.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api.scenarios import SCENARIOS  # noqa: E402
+
+
+def main() -> None:
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "configs",
+                           "scenarios")
+    os.makedirs(out_dir, exist_ok=True)
+    for name, spec in sorted(SCENARIOS.items()):
+        path = os.path.join(out_dir, f"{name}.json")
+        spec.save(path)
+        print(f"wrote {os.path.relpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""The typed front door: ``RunSpec`` describes a run, ``Session`` runs it.
+
+    from repro.api import RunSpec, Session, scenario
+
+    with Session(scenario("early_exit")) as s:
+        report = s.train()
+
+See DESIGN.md §11 for the layering and the deprecation policy covering the
+legacy ``run_training``/``run_elastic_serving`` kwarg shims.
+"""
+from repro.api.scenarios import SCENARIOS, scenario, scenario_names
+from repro.api.session import Session, SessionEvent
+from repro.api.specs import (SCHEMA_VERSION, ClusterSpec, ControllerSpec,
+                             DynamicsSpec, ModelSpec, ParallelSpec,
+                             RepackSpec, RunSpec, ServeSpec, SpecError)
+
+__all__ = [
+    "SCHEMA_VERSION", "ClusterSpec", "ControllerSpec", "DynamicsSpec",
+    "ModelSpec", "ParallelSpec", "RepackSpec", "RunSpec", "ServeSpec",
+    "SpecError", "Session", "SessionEvent", "SCENARIOS", "scenario",
+    "scenario_names",
+]

@@ -1,0 +1,523 @@
+"""``Session`` — executes a ``RunSpec``; the runtime half of the API.
+
+The trainer and the server used to each hand-assemble the same lifecycle:
+build mesh/engine -> attach ControlPlane -> attach Autoscaler -> connect a
+JobManagerClient -> tear everything down in the right order.  ``Session``
+owns that lifecycle once:
+
+    spec = RunSpec.load("configs/scenarios/early_exit.json")
+    with Session(spec) as s:
+        report = s.train()          # or s.serve()
+    for ev in s.events:             # structured telemetry stream
+        print(ev.kind, ev.step, ev.data)
+
+``train``/``serve`` return the same report dicts the legacy entry points
+did (every existing test/bench reads them); ``session.events`` is the
+structured stream — one ``SessionEvent`` per resize / rebalance /
+autoscale decision / log line — that new tooling should consume instead.
+
+Teardown order matters and is centralized in ``close()``: control plane
+first (its worker thread must stop deciding against a dying engine), then
+the engine/server (detach pool hooks), then the job-manager client (tells
+a file-RPC server process to exit), then the server process wait.
+"""
+from __future__ import annotations
+
+import os
+
+# honor the forced-host-device knob at the front door too (the launch CLIs
+# set it in their own preambles; a program importing repro.api directly —
+# examples, notebooks — must get it before the lazy jax import below)
+if (os.environ.get("REPRO_TRAIN_DEVICES")
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["REPRO_TRAIN_DEVICES"])
+
+import dataclasses
+import tempfile
+import time
+import warnings
+from typing import Any, Dict, List, Optional
+
+from repro.api.specs import RunSpec
+
+
+@dataclasses.dataclass
+class SessionEvent:
+    """One telemetry record: ``kind`` in {"log", "rebalance", "resize",
+    "autoscale", "serve_summary", "train_summary"}."""
+    kind: str
+    step: int
+    data: Dict[str, Any]
+
+
+class Session:
+    """Context manager that executes one ``RunSpec``."""
+
+    def __init__(self, spec: RunSpec):
+        self.spec = spec
+        self.events: List[SessionEvent] = []
+        self._cp = None          # cluster.service.ControlPlane
+        self._engine = None      # launch.engine.ElasticEngine
+        self._server = None      # serve.server.ElasticServer
+        self._jm = None          # cluster.rpc.JobManagerClient
+        self._jm_proc = None
+        self._closed = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._cp is not None:
+            self._cp.close()
+        if self._server is not None:
+            self._server.close()
+        elif self._engine is not None:
+            self._engine.close()
+        if self._jm is not None:
+            self._jm.close()             # tells a file-RPC server to exit
+        if self._jm_proc is not None:
+            try:
+                self._jm_proc.wait(timeout=10)
+            except Exception:
+                self._jm_proc.kill()
+
+    def _emit(self, kind: str, step: int, **data) -> None:
+        self.events.append(SessionEvent(kind, step, data))
+
+    # -- shared assembly ---------------------------------------------------
+    def _model_config(self):
+        from repro.configs.base import get_config, reduced_config
+        m = self.spec.model
+        cfg = get_config(m.arch)
+        if m.layers is not None:
+            cfg = reduced_config(cfg, num_layers=m.layers, d_model=m.d_model,
+                                 num_heads=m.num_heads,
+                                 num_kv_heads=m.num_kv_heads,
+                                 d_ff=m.d_ff or 2 * m.d_model,
+                                 vocab_size=m.vocab_size)
+        return cfg
+
+    def _dist_config(self):
+        from repro.configs.base import DistConfig
+        p = self.spec.parallel
+        return DistConfig(num_stages=p.stages, slot_slack=p.slot_slack,
+                          remat=p.remat, param_dtype=p.param_dtype,
+                          kernel_impl=p.kernel_impl)
+
+    def _connect_job_manager(self):
+        """'file' spawns the WorkerPool server in a separate process and
+        returns a client speaking atomic req/resp JSON files to it; 'inproc'
+        returns None (the engine wraps its own pool)."""
+        from repro.cluster.rpc import FileJobManager, spawn_file_manager
+        c = self.spec.cluster
+        if c.job_manager == "inproc":
+            return None
+        # always a FRESH directory (a unique subdir when the caller names a
+        # location): leftover req/resp files from a previous run would be
+        # replayed by the new server and misread by the new client
+        if c.job_manager_dir:
+            os.makedirs(c.job_manager_dir, exist_ok=True)
+            jm_dir = tempfile.mkdtemp(prefix="run_", dir=c.job_manager_dir)
+        else:
+            jm_dir = tempfile.mkdtemp(prefix="dynmo_jm_")
+        self._jm_proc = spawn_file_manager(jm_dir, self.spec.parallel.stages)
+        self._jm = FileJobManager(jm_dir, timeout_s=60.0)
+        return self._jm
+
+    # =======================================================================
+    # Training
+    # =======================================================================
+    def train(self, steps: Optional[int] = None) -> Dict[str, Any]:
+        """Run the DynMo training loop for ``steps`` (default: spec.steps).
+        Returns the report dict (losses, events, resizes, telemetry)."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+        from repro.cluster.service import ControlPlane, StatsSnapshot
+        from repro.core.controller import ControllerConfig, DynMoController
+        from repro.data.loader import DataConfig, make_loader
+        from repro.dynamics import pruning as prn
+        from repro.dynamics.trajectories import zhu_gupta_sparsity
+        from repro.launch.engine import ElasticEngine
+        from repro.optim.schedule import cosine_schedule
+        from repro.pipeline.pipeline import PipelineShapes
+        from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                                   StragglerDetector)
+
+        spec = self.spec
+        steps = steps if steps is not None else spec.steps
+        stages = spec.parallel.stages
+        seq = spec.parallel.seq
+        dynamism = spec.dynamics.kind
+        straggler = spec.controller.straggler
+        measure_stage_times = spec.controller.measure_stage_times
+        repack_target = spec.controller.repack.target
+        grow_back = spec.cluster.grow_back
+        if grow_back is not None:
+            warnings.warn(
+                "cluster.grow_back / --grow-back is deprecated: fixed-step "
+                "re-expansion is superseded by signal-driven scaling "
+                "(cluster.autoscale / --autoscale)", DeprecationWarning,
+                stacklevel=2)
+
+        cfg = self._model_config()
+        dcfg = self._dist_config()
+        dyncfg = spec.dynamics.to_config()
+        shapes = PipelineShapes(num_micro=spec.parallel.num_micro,
+                                mb_global=spec.parallel.mb_global, seq=seq)
+        tokens_per_step = (spec.parallel.num_micro
+                           * spec.parallel.mb_global * seq)
+
+        jm = self._connect_job_manager()
+        engine = ElasticEngine(cfg, dcfg, dyncfg, shapes,
+                               data=spec.parallel.data, job_manager=jm)
+        self._engine = engine
+        state = engine.init_state(jax.random.PRNGKey(spec.seed))
+
+        ccfg = ControllerConfig(method=spec.controller.balancer,
+                                rebalance_every=spec.controller
+                                .rebalance_every,
+                                repack=spec.controller.repack.enabled,
+                                repack_policy=spec.controller.repack.policy,
+                                repack_target=max(1, repack_target))
+        if spec.controller.repack.enabled:
+            # per-worker memory budget: capacity factor × the dtype-correct
+            # per-stage footprint of the UNPRUNED model under a uniform
+            # split — consolidation becomes feasible once dynamism shrinks
+            # the model
+            from repro.core.cost_model import stage_memory_budget
+            ccfg.repack_mem_cap = stage_memory_budget(
+                cfg, tokens_per_step, seq, dcfg.bytes_per_param, stages,
+                cap_factor=spec.controller.repack.mem_cap)
+        det = StragglerDetector(stages) \
+            if (straggler or measure_stage_times) else None
+        ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg, straggler=det)
+        cp = ControlPlane(ctrl, async_mode=spec.controller.async_decide,
+                          epoch_fn=lambda: engine.epoch)
+        self._cp = cp
+
+        # ---- autoscaler: heartbeats + throughput watermark; the monitor
+        # runs on a step-granular simulated clock so CI is deterministic
+        monitor = scaler = None
+        sim_clock = [0.0]
+        if spec.cluster.autoscale:
+            monitor = HeartbeatMonitor(
+                stages, timeout_s=spec.cluster.heartbeat_timeout,
+                clock=lambda: sim_clock[0])
+            scaler = Autoscaler(
+                AutoscalerConfig(min_stages=max(1, repack_target),
+                                 max_stages=stages,
+                                 watermark=spec.cluster.autoscale_watermark),
+                monitor)
+
+        loader = make_loader(cfg, DataConfig(spec.parallel.num_micro,
+                                             spec.parallel.mb_global, seq,
+                                             seed=spec.seed))
+        ckpt = None
+        if spec.ckpt_dir:
+            from repro.checkpoint.checkpoint import CheckpointManager
+            ckpt = CheckpointManager(spec.ckpt_dir,
+                                     every=max(10, steps // 5))
+
+        def after_resize(step: int, kind: str) -> None:
+            cp.rebind(engine.dcfg_for(state.stages), state.lps)
+            if scaler is not None:
+                scaler.note_resize(step, state.stages)
+            rz = engine.resizes[-1]
+            if monitor is not None and rz.kind == "shrink":
+                # released workers leave the heartbeat set deliberately; a
+                # later revive is the recovery signal the autoscaler grows
+                # on
+                for w in rz.workers:
+                    monitor.expire(w)
+            if monitor is not None and rz.kind == "grow":
+                # regranted workers (any grow path) must beat again —
+                # without the revive they would stay marked failed and a
+                # later real death of the same worker could never be
+                # detected
+                for w in rz.workers:
+                    monitor.revive(w)
+            self._emit("resize", step, resize_kind=kind,
+                       from_stages=rz.from_stages, to_stages=rz.to_stages,
+                       workers=list(rz.workers),
+                       ticks_before=rz.ticks_before,
+                       ticks_after=rz.ticks_after)
+            print(f"step {step:4d} {kind.upper()} {rz.from_stages}->"
+                  f"{rz.to_stages} stages; workers {rz.workers}; "
+                  f"pool active={engine.jm.num_active}; schedule "
+                  f"{rz.ticks_before}->{rz.ticks_after} ticks")
+
+        losses, events, step_times, stages_hist = [], [], [], []
+        last_measured = None
+        t0 = time.perf_counter()
+        for step, batch in enumerate(loader):
+            if step >= steps:
+                break
+            t_step = time.perf_counter()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
+            loss, stats, gnorm = engine.step(state, batch, lr)
+            # one scalar sync for the loss curve; the full per-slot stats
+            # tree stays on device until controller cadence (§3.3.1)
+            losses.append(float(loss))
+            step_times.append(time.perf_counter() - t_step)
+            stages_hist.append(state.stages)
+
+            # ---- dynamism events (black-box to the controller)
+            if dynamism == "pruning" and step and step % 10 == 0:
+                sp = zhu_gupta_sparsity(
+                    step * 100, dataclasses.replace(
+                        dyncfg, prune_start_iter=0,
+                        prune_end_iter=steps * 100, prune_frequency=1))
+                keep = prn.target_keep_blocks(
+                    cfg, cfg.total_blocks(), sp)
+                dyn = dict(state.dyn)
+                dyn["ff_mask"] = prn.global_block_prune(
+                    cfg, state.params["stages"], state.assignment["tags"],
+                    keep)
+                state.dyn = dyn
+            if dynamism == "freezing" and step and step % 10 == 0:
+                front = int(cfg.total_blocks() * min(0.6, step / steps))
+                fr = np.zeros_like(np.asarray(state.dyn["frozen"]))
+                g = 0
+                tags_np = np.asarray(state.assignment["tags"])
+                for s in range(tags_np.shape[0]):
+                    for l in range(tags_np.shape[1]):
+                        if tags_np[s, l] != 0:
+                            if g < front:
+                                fr[s, l] = 1.0
+                            g += 1
+                dyn = dict(state.dyn)
+                dyn["frozen"] = jnp.asarray(fr)
+                state.dyn = dyn
+
+            # ---- heartbeats (simulated per-step liveness: active workers
+            # beat; released/dead ones go silent and time out)
+            if monitor is not None:
+                sim_clock[0] = float(step)
+                for w in engine.stage_workers:
+                    monitor.beat(w)
+                if (spec.cluster.simulate_recover is not None
+                        and step == spec.cluster.simulate_recover):
+                    for w in range(stages):
+                        if w not in engine.stage_workers:
+                            monitor.revive(w)
+
+            # ---- publish stats to the control plane on cadence (the only
+            # device→host stats sync; in async mode this is a pointer swap)
+            if ctrl.cadence(step + 1):
+                measured = None
+                if measure_stage_times:
+                    # real per-stage wall times from the engine's stage
+                    # probe — cadence-gated here so the hot path stays
+                    # sync-free (the probe is a per-stage host sync)
+                    measured = engine.measure_stage_times(state, batch)
+                    last_measured = measured
+                if straggler:
+                    # simulation knob: a straggling WORKER multiplies its
+                    # stage's wall time; feed the detector the same shape a
+                    # real per-worker timer would report (or skew the
+                    # measured times when both are on).  Keyed by WORKER
+                    # id — after an evict/resize the slow machine keeps its
+                    # id but sits at a different stage index
+                    if measured is None:
+                        share = np.asarray(state.lps, np.float64)
+                        measured = share / share.sum() * step_times[-1]
+                    measured = measured * np.array(
+                        [straggler.get(engine.stage_workers[s], 1.0)
+                         for s in range(state.stages)])
+                cp.publish(StatsSnapshot(
+                    iteration=step + 1, epoch=engine.epoch,
+                    stats=engine.stats_to_host(state, stats),
+                    tags=np.asarray(state.assignment["tags"]),
+                    num_micro=shapes.num_micro, tokens=tokens_per_step,
+                    seq=seq, frozen=np.asarray(state.dyn["frozen"]),
+                    stage_times=measured))
+                if spec.controller.async_drain:
+                    cp.drain()
+
+            # ---- safe point: apply the newest finished plan (epoch-
+            # fenced; a plan decided against a pre-resize world is
+            # rejected)
+            plan = cp.poll(engine.epoch)
+            if plan is not None:
+                if plan.event is not None and plan.event.rebalanced:
+                    events.append(plan.event)
+                    self._emit("rebalance", step,
+                               iteration=plan.event.iteration,
+                               imbalance_before=plan.event.imbalance_before,
+                               imbalance_after=plan.event.imbalance_after,
+                               moved_layers=plan.event.moved_layers)
+                if (plan.resize is not None
+                        and plan.resize.target_stages < state.stages):
+                    state = engine.shrink(state, plan.resize.target_stages,
+                                          plan.resize.layers_per_stage,
+                                          step=step)
+                    after_resize(step, f"shrink[{plan.resize.policy}]")
+                elif plan.new_lps is not None:
+                    p, o, d, new_assignment, _ = cp.apply(
+                        plan, state.params, state.opt_state, state.dyn)
+                    state.params, state.opt_state, state.dyn = p, o, d
+                    state.assignment = new_assignment
+                    state.lps = list(cp.ctrl.lps)
+
+            # ---- autoscaler: heartbeat + watermark signals
+            if scaler is not None:
+                d = scaler.observe(step, step_times[-1], state.stages,
+                                   engine.stage_workers, tokens_per_step)
+                if d.action != "none":
+                    self._emit("autoscale", step, action=d.action,
+                               workers=d.workers, reason=d.reason,
+                               ids=list(d.ids))
+                if d.action == "evict":
+                    state = engine.evict(state, d.ids, step=step)
+                    after_resize(step, "evict")
+                elif d.action == "grow" and state.stages < stages:
+                    prev = state.stages
+                    state = engine.grow(state, d.workers, step=step)
+                    if state.stages > prev:   # pool may grant nothing
+                        # granted workers stay for this job: stop planning
+                        # resizes so ordinary rebalancing keeps running
+                        cp.with_ctrl(
+                            lambda c: setattr(c.ccfg, "repack", False))
+                        after_resize(step, "grow")
+                elif (d.action == "shrink"
+                        and state.stages > max(1, repack_target)):
+                    state = engine.shrink(
+                        state, max(max(1, repack_target),
+                                   state.stages - d.workers), step=step)
+                    after_resize(step, "shrink[watermark]")
+
+            # ---- legacy fixed-step growth (deprecated; superseded by
+            # cluster.autoscale)
+            if (grow_back and engine.last_shrink_step is not None
+                    and state.stages < stages
+                    and step >= engine.last_shrink_step + grow_back):
+                prev_stages = state.stages
+                state = engine.grow(state, stages - state.stages, step=step)
+                if state.stages > prev_stages:
+                    cp.with_ctrl(lambda c: setattr(c.ccfg, "repack", False))
+                    after_resize(step, "grow")
+            if ckpt:
+                ckpt.maybe_save(step, state.params, state.opt_state,
+                                state.dyn, state.lps)
+            if step % spec.log_every == 0:
+                self._emit("log", step, loss=float(loss),
+                           gnorm=float(gnorm), stages=state.stages,
+                           lps=list(state.lps))
+                print(f"step {step:4d} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.3f} S={state.stages} "
+                      f"lps={state.lps}")
+        wall = time.perf_counter() - t0
+        report = {
+            "losses": losses, "events": events, "wall_s": wall,
+            "final_lps": list(state.lps), "params": state.params,
+            "assignment": state.assignment,
+            "tokens_per_step": tokens_per_step,
+            "step_times": step_times, "stages_history": stages_hist,
+            "resizes": [dataclasses.asdict(e) for e in engine.resizes],
+            "pool_log": list(engine.jm.log),
+            "final_stages": state.stages,
+            "measured_stage_times": (list(map(float, last_measured))
+                                     if last_measured is not None else None),
+            "controller": {
+                "mode": ("async" if spec.controller.async_decide
+                         else "inline"),
+                "published": cp.published, "decided": cp.decided,
+                "dropped": cp.dropped,
+                "stale_rejected": cp.stale_rejected},
+            "autoscale_decisions": ([dataclasses.asdict(d)
+                                     for d in scaler.decisions]
+                                    if scaler is not None else []),
+            "spec": self.spec.to_dict(),
+        }
+        self._emit("train_summary", steps - 1,
+                   loss_first=losses[0] if losses else None,
+                   loss_last=losses[-1] if losses else None,
+                   wall_s=wall, resizes=len(engine.resizes),
+                   final_stages=state.stages)
+        return report
+
+    # =======================================================================
+    # Serving
+    # =======================================================================
+    def make_trace(self):
+        """The request trace described by ``spec.serve`` (bursty square-wave
+        arrivals, mixed prompt/gen lengths, optional early-exit fraction)."""
+        from repro.serve import make_trace
+        s = self.spec.serve
+        cfg = self._model_config()
+        return make_trace(s.requests, prompt_len=s.prompt_len,
+                          max_gen=s.gen, vocab_size=cfg.vocab_size,
+                          seed=self.spec.seed,
+                          min_prompt=s.min_prompt or max(1,
+                                                         s.prompt_len // 2),
+                          burst_period=s.burst_period, burst_len=s.burst_len,
+                          burst_rate=s.burst_rate, lull_rate=s.lull_rate,
+                          early_exit_frac=s.early_exit_frac)
+
+    def serve(self, trace=None, *, resize_at: Optional[Dict[int, int]] = None
+              ) -> Dict[str, Any]:
+        """Serve ``trace`` (default: the spec's generated trace) through the
+        continuous-batching scheduler on elastic engine worlds.  Returns the
+        server's report dict."""
+        from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
+        from repro.pipeline.pipeline import PipelineShapes
+        from repro.serve import ElasticServer
+
+        spec = self.spec
+        s = spec.serve
+        cfg = self._model_config()
+        dcfg = self._dist_config()
+        dyncfg = spec.dynamics.to_config()
+        shapes = PipelineShapes(spec.parallel.num_micro,
+                                spec.parallel.mb_global, s.prompt_len,
+                                cache_len=s.prompt_len + s.gen)
+        if trace is None:
+            trace = self.make_trace()
+        scaler = None
+        if spec.cluster.autoscale:
+            scaler = Autoscaler(AutoscalerConfig(
+                min_stages=max(1, s.min_stages),
+                max_stages=spec.parallel.stages,
+                patience=s.patience, cooldown=s.cooldown,
+                queue_high=s.queue_high, occupancy_low=s.occupancy_low,
+                latency_slo_s=s.latency_slo_s))
+        jm = self._connect_job_manager()
+        srv = ElasticServer(cfg, dcfg, dyncfg, shapes, job_manager=jm,
+                            scaler=scaler, min_stages=s.min_stages,
+                            seed=spec.seed, defrag_every=s.defrag_every,
+                            measure_stage_times=spec.controller
+                            .measure_stage_times)
+        self._server = srv
+        report = srv.serve(trace, autoscale=spec.cluster.autoscale,
+                           resize_at=resize_at, max_ticks=s.max_ticks)
+        report["spec"] = spec.to_dict()
+        for rz in report["resizes"]:
+            self._emit("resize", rz["step"], resize_kind=rz["kind"],
+                       from_stages=rz["from_stages"],
+                       to_stages=rz["to_stages"],
+                       workers=list(rz["workers"]))
+        for d in report["autoscale_decisions"]:
+            self._emit("autoscale", d["step"], action=d["action"],
+                       workers=d["workers"], reason=d["reason"],
+                       ids=list(d["ids"]))
+        self._emit("serve_summary", report["ticks"],
+                   completions=len(report["completions"]),
+                   total_tokens=report["total_tokens"],
+                   tokens_per_s=report["tokens_per_s"],
+                   latency_p95_s=report["latency_p95_s"])
+        return report

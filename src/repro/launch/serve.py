@@ -1,19 +1,22 @@
-"""Serving CLI — a thin front-end over two paths:
+"""Serving CLI — a thin adapter over ``repro.api`` plus the legacy oracle:
 
+  * ``run_elastic_serving`` / ``--elastic`` — the ``repro.serve`` subsystem
+    (continuous batching on ``ElasticEngine`` worlds with load-driven
+    autoscaling).  The lifecycle lives in ``Session.serve``; the kwarg
+    entry point is a deprecation shim that builds the equivalent
+    ``RunSpec`` (``serve_spec``), so flag path, config path, and Python
+    API produce identical runs.
   * ``run_serving`` — the legacy one-shot generator (one fixed batch,
     prefill + gen decode rounds, optional DynMo rebalance between rounds);
-    kept as the parity oracle for the continuous scheduler;
-  * ``run_elastic_serving`` (``--elastic``) — the ``repro.serve``
-    subsystem: a bursty request trace through the continuous-batching
-    scheduler on ``ElasticEngine`` worlds, with the autoscaler shrinking /
-    growing the pipeline on queue-depth/occupancy watermarks and workers
-    released/re-granted through the job-manager client.
+    kept as the parity oracle for the continuous scheduler.
 
 CPU-scale usage:
   REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch smollm-360m --layers 8 --stages 4 --gen 16 --dynamism early_exit
   REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --elastic --autoscale --requests 24 --burst-period 16 --burst-len 4
+  REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
+      --elastic --config my_serve.json --set serve.queue_high=4
 """
 from __future__ import annotations
 
@@ -26,9 +29,16 @@ if os.environ.get("REPRO_TRAIN_DEVICES"):       # must precede jax import
 
 import argparse
 import time
-from typing import Optional
+from typing import Any, Dict, Optional
 
 import numpy as np
+
+from repro.api.cli import (SERVE_ALIASES, SERVE_CLI_DEFAULTS,
+                           add_alias_flags, add_config_args, add_spec_flags,
+                           build_spec, maybe_dump)
+from repro.api.session import Session
+from repro.api.specs import (ClusterSpec, ControllerSpec, DynamicsSpec,
+                             ModelSpec, ParallelSpec, RunSpec, ServeSpec)
 
 
 def run_serving(arch: str, *, stages: int = 4, micro: int = 2,
@@ -108,134 +118,82 @@ def run_serving(arch: str, *, stages: int = 4, micro: int = 2,
             "final_lps": ctrl.lps}
 
 
-def run_elastic_serving(arch: str, *, stages: int = 4, micro: int = 2,
-                        mb_global: int = 4, prompt_len: int = 32,
-                        gen: int = 8, layers: Optional[int] = 8,
-                        d_model: int = 128, dynamism: str = "none",
-                        requests: int = 16, min_prompt: Optional[int] = None,
-                        burst_period: int = 0, burst_len: int = 0,
-                        burst_rate: int = 4, lull_rate: int = 1,
-                        early_exit_frac: float = 0.0, seed: int = 0,
-                        autoscale: bool = False, min_stages: int = 1,
-                        queue_high: int = 8, occupancy_low: float = 0.35,
-                        patience: int = 2, cooldown: int = 4,
-                        defrag_every: int = 0, job_manager: str = "inproc",
-                        job_manager_dir: Optional[str] = None,
-                        resize_at=None, max_ticks: int = 100000):
-    """Continuous-batching serving on engine worlds; returns the server's
-    report dict (completions, resizes, autoscale decisions, latency)."""
-    import tempfile
-
-    from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
-    from repro.cluster.rpc import FileJobManager, spawn_file_manager
-    from repro.configs import DistConfig, get_config, reduced_config
-    from repro.dynamics.config import DynamicsConfig
-    from repro.pipeline.pipeline import PipelineShapes
-    from repro.serve import ElasticServer, make_trace
-
-    cfg = get_config(arch)
-    if layers is not None:
-        cfg = reduced_config(cfg, num_layers=layers, d_model=d_model,
-                             num_heads=4, num_kv_heads=2, d_ff=2 * d_model,
-                             vocab_size=512)
-    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
-                      param_dtype="float32")
-    dyncfg = DynamicsConfig(kind=dynamism)
-    shapes = PipelineShapes(micro, mb_global, prompt_len,
-                            cache_len=prompt_len + gen)
-    trace = make_trace(requests, prompt_len=prompt_len, max_gen=gen,
-                       vocab_size=cfg.vocab_size, seed=seed,
-                       min_prompt=min_prompt or max(1, prompt_len // 2),
-                       burst_period=burst_period, burst_len=burst_len,
-                       burst_rate=burst_rate, lull_rate=lull_rate,
-                       early_exit_frac=early_exit_frac)
-    scaler = None
-    if autoscale:
-        scaler = Autoscaler(AutoscalerConfig(
-            min_stages=max(1, min_stages), max_stages=stages,
-            patience=patience, cooldown=cooldown, queue_high=queue_high,
-            occupancy_low=occupancy_low))
-    jm = jm_proc = None
-    if job_manager == "file":
-        if job_manager_dir:
-            import os as _os
-            _os.makedirs(job_manager_dir, exist_ok=True)
-            jm_dir = tempfile.mkdtemp(prefix="run_", dir=job_manager_dir)
-        else:
-            jm_dir = tempfile.mkdtemp(prefix="dynmo_serve_jm_")
-        jm_proc = spawn_file_manager(jm_dir, stages)
-        jm = FileJobManager(jm_dir, timeout_s=60.0)
-    elif job_manager != "inproc":
-        raise ValueError(f"unknown job manager {job_manager!r}")
-    srv = ElasticServer(cfg, dcfg, dyncfg, shapes, job_manager=jm,
-                        scaler=scaler, min_stages=min_stages, seed=seed,
-                        defrag_every=defrag_every)
-    try:
-        report = srv.serve(trace, autoscale=autoscale, resize_at=resize_at,
-                           max_ticks=max_ticks)
-    finally:
-        srv.close()
-        if jm is not None:
-            jm.close()
-        if jm_proc is not None:
-            try:
-                jm_proc.wait(timeout=10)
-            except Exception:
-                jm_proc.kill()
-    return report
+def serve_spec(arch: str, *, stages: int = 4, micro: int = 2,
+               mb_global: int = 4, prompt_len: int = 32,
+               gen: int = 8, layers: Optional[int] = 8,
+               d_model: int = 128, dynamism: str = "none",
+               requests: int = 16, min_prompt: Optional[int] = None,
+               burst_period: int = 0, burst_len: int = 0,
+               burst_rate: int = 4, lull_rate: int = 1,
+               early_exit_frac: float = 0.0, seed: int = 0,
+               autoscale: bool = False, min_stages: int = 1,
+               queue_high: int = 8, occupancy_low: float = 0.35,
+               patience: int = 2, cooldown: int = 4,
+               defrag_every: int = 0, job_manager: str = "inproc",
+               job_manager_dir: Optional[str] = None,
+               kernel_impl: str = "scan",
+               measure_stage_times: bool = False,
+               max_ticks: int = 100000) -> RunSpec:
+    """The ``RunSpec`` equivalent of the legacy ``run_elastic_serving``
+    kwargs — the single place the old vocabulary maps onto the schema."""
+    return RunSpec(
+        model=ModelSpec(arch=arch, layers=layers, d_model=d_model),
+        parallel=ParallelSpec(stages=stages, num_micro=micro,
+                              mb_global=mb_global,
+                              kernel_impl=kernel_impl),
+        dynamics=DynamicsSpec(kind=dynamism),
+        controller=ControllerSpec(measure_stage_times=measure_stage_times),
+        cluster=ClusterSpec(job_manager=job_manager,
+                            job_manager_dir=job_manager_dir,
+                            autoscale=autoscale),
+        serve=ServeSpec(requests=requests, prompt_len=prompt_len, gen=gen,
+                        min_prompt=min_prompt, burst_period=burst_period,
+                        burst_len=burst_len, burst_rate=burst_rate,
+                        lull_rate=lull_rate,
+                        early_exit_frac=early_exit_frac,
+                        defrag_every=defrag_every,
+                        min_stages=max(1, min_stages),
+                        queue_high=queue_high,
+                        occupancy_low=occupancy_low, patience=patience,
+                        cooldown=cooldown, max_ticks=max_ticks),
+        seed=seed)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--stages", type=int, default=4)
-    ap.add_argument("--layers", type=int, default=8)
-    ap.add_argument("--d-model", type=int, default=128)
-    ap.add_argument("--micro", type=int, default=2)
-    ap.add_argument("--mb-global", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=8)
-    ap.add_argument("--dynamism", default="none")
-    ap.add_argument("--rebalance-every", type=int, default=0)
-    # ---- elastic continuous-batching path
+def run_elastic_serving(arch: str, *, resize_at=None,
+                        **kwargs) -> Dict[str, Any]:
+    """Legacy kwarg entry point (deprecation shim).
+
+    Builds the equivalent ``RunSpec`` and serves it through a ``Session``
+    — new code should do that directly:
+
+        with Session(serve_spec(arch, ...)) as s:
+            report = s.serve()
+    """
+    spec = serve_spec(arch, **kwargs)
+    with Session(spec) as s:
+        return s.serve(resize_at=resize_at)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="DynMo serving (config-first: --config RUN.JSON; "
+                    "flags below override spec fields)")
     ap.add_argument("--elastic", action="store_true",
                     help="serve a request trace through the continuous-"
                          "batching scheduler on elastic engine worlds")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--min-prompt", type=int, default=None)
-    ap.add_argument("--burst-period", type=int, default=0)
-    ap.add_argument("--burst-len", type=int, default=0)
-    ap.add_argument("--burst-rate", type=int, default=4)
-    ap.add_argument("--lull-rate", type=int, default=1)
-    ap.add_argument("--early-exit-frac", type=float, default=0.0)
-    ap.add_argument("--defrag-every", type=int, default=0)
-    ap.add_argument("--autoscale", action="store_true",
-                    help="queue-depth/occupancy watermark scaling")
-    ap.add_argument("--min-stages", type=int, default=1)
-    ap.add_argument("--queue-high", type=int, default=8)
-    ap.add_argument("--occupancy-low", type=float, default=0.35)
-    ap.add_argument("--patience", type=int, default=2)
-    ap.add_argument("--cooldown", type=int, default=4)
-    ap.add_argument("--job-manager", default="inproc",
-                    choices=["inproc", "file"])
-    ap.add_argument("--job-manager-dir", default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    if args.elastic:
-        rep = run_elastic_serving(
-            args.arch, stages=args.stages, micro=args.micro,
-            mb_global=args.mb_global, prompt_len=args.prompt_len,
-            gen=args.gen, layers=args.layers, d_model=args.d_model,
-            dynamism=args.dynamism, requests=args.requests,
-            min_prompt=args.min_prompt, burst_period=args.burst_period,
-            burst_len=args.burst_len, burst_rate=args.burst_rate,
-            lull_rate=args.lull_rate, early_exit_frac=args.early_exit_frac,
-            seed=args.seed, autoscale=args.autoscale,
-            min_stages=args.min_stages, queue_high=args.queue_high,
-            occupancy_low=args.occupancy_low, patience=args.patience,
-            cooldown=args.cooldown, defrag_every=args.defrag_every,
-            job_manager=args.job_manager,
-            job_manager_dir=args.job_manager_dir)
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="legacy one-shot path only: DynMo rebalance "
+                         "between decode rounds")
+    add_config_args(ap)
+    add_alias_flags(ap, SERVE_ALIASES)
+    add_spec_flags(ap)
+    args = ap.parse_args(argv)
+    spec = build_spec(args, SERVE_ALIASES, cli_defaults=SERVE_CLI_DEFAULTS)
+    if maybe_dump(args, spec):
+        return
+    if args.elastic or args.config:
+        with Session(spec) as s:
+            rep = s.serve()
         kinds = [r["kind"] for r in rep["resizes"]]
         print(f"served {len(rep['completions'])} requests / "
               f"{rep['total_tokens']} tokens in {rep['wall_s']:.1f}s "
@@ -246,15 +204,20 @@ def main():
               f"resizes={kinds}; "
               f"stages {rep['stages_history'][0]}->"
               f"{rep['stages_history'][-1]}")
+        if rep.get("measured_stage_times") is not None:
+            print(f"  measured stage times "
+                  f"{[f'{t*1e3:.1f}ms' for t in rep['measured_stage_times']]}")
         for d in rep["autoscale_decisions"]:
             print(f"  autoscale @tick {d['step']}: {d['action']} "
                   f"({d['reason']})")
         return
     out = run_serving(
-        args.arch, stages=args.stages, micro=args.micro,
-        mb_global=args.mb_global, prompt_len=args.prompt_len, gen=args.gen,
-        layers=args.layers, d_model=args.d_model, dynamism=args.dynamism,
-        rebalance_every=args.rebalance_every)
+        spec.model.arch, stages=spec.parallel.stages,
+        micro=spec.parallel.num_micro, mb_global=spec.parallel.mb_global,
+        prompt_len=spec.serve.prompt_len, gen=spec.serve.gen,
+        layers=spec.model.layers, d_model=spec.model.d_model,
+        dynamism=spec.dynamics.kind, rebalance_every=args.rebalance_every,
+        seed=spec.seed)
     print(f"generated {out['tokens'].shape} in {out['wall_s']:.1f}s "
           f"({out['tokens_per_s']:.1f} tok/s); final lps={out['final_lps']}")
 

@@ -1,22 +1,21 @@
-"""CLI trainer on top of the elastic engine and the cluster control plane.
+"""CLI trainer — a thin adapter over ``repro.api`` (RunSpec + Session).
 
-``run_training`` drives the DynMo loop end-to-end: dynamism events mutate
-the dyn state, the ``ControlPlane`` folds the step's stats through
-profile→decide — inline or on a background thread (``--async-controller``,
-paper §3.3.1: zero decision latency on the training thread) — rebalances
-migrate layers live at safe points, and a repack decision triggers an
-in-process shrink onto fewer workers via ``repro.launch.engine.ElasticEngine``.
-
-Released workers cross the job-manager boundary (``--job-manager file``
-puts a real process on the other side); re-expansion is signal-driven with
-``--autoscale`` (heartbeat recoveries + throughput watermark, replacing the
-legacy fixed-step ``--grow-back N``, which remains for back-compat).
+The training loop itself lives in ``repro.api.session.Session.train``; this
+module only (1) resolves a ``RunSpec`` from the CLI (``--config run.json``,
+auto-generated dotted spec flags, the historical flag surface as aliases,
+and ``--set path=value`` overrides — see ``repro.api.cli``) and (2) keeps
+``run_training(...)`` as a **deprecation-shim** kwarg API: it builds the
+equivalent ``RunSpec`` internally, so every pre-existing caller produces
+bit-identical runs to the spec path.
 
 Usage (CPU integration scale, 4 forced host devices):
   REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.train \
+      --config configs/scenarios/early_exit.json
+  REPRO_TRAIN_DEVICES=4 PYTHONPATH=src python -m repro.launch.train \
       --arch smollm-360m --layers 8 --d-model 128 --stages 4 --steps 30 \
       --dynamism pruning --repack --async-controller --autoscale \
-      --job-manager file --simulate-recover 18
+      --job-manager file --simulate-recover 18 \
+      --set controller.repack.policy=first_fit
 """
 from __future__ import annotations
 
@@ -28,419 +27,92 @@ if os.environ.get("REPRO_TRAIN_DEVICES"):       # must precede jax import
         + os.environ["REPRO_TRAIN_DEVICES"])
 
 import argparse
-import dataclasses
-import tempfile
-import time
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.cluster.autoscaler import Autoscaler, AutoscalerConfig
-from repro.cluster.rpc import FileJobManager, spawn_file_manager
-from repro.cluster.service import ControlPlane, StatsSnapshot
-from repro.configs.base import DistConfig, ModelConfig, get_config, \
-    reduced_config
-from repro.core.controller import ControllerConfig, DynMoController
-from repro.dynamics.config import DynamicsConfig
-from repro.dynamics import pruning as prn
-from repro.dynamics.trajectories import zhu_gupta_sparsity
+from repro.api.cli import (TRAIN_ALIASES, TRAIN_CLI_DEFAULTS,
+                           add_alias_flags, add_config_args, add_spec_flags,
+                           build_spec, maybe_dump)
+from repro.api.session import Session
+from repro.api.specs import (ClusterSpec, ControllerSpec, DynamicsSpec,
+                             ModelSpec, ParallelSpec, RepackSpec, RunSpec)
 from repro.launch.engine import ElasticEngine, make_train_step  # noqa: F401
-# make_train_step is re-exported for back-compat (tests/examples import it
-# from here); it moved to engine.py, which owns step assembly now.
-from repro.optim.schedule import cosine_schedule
-from repro.pipeline.pipeline import PipelineShapes
-from repro.runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
+# make_train_step / ElasticEngine are re-exported for back-compat
+# (tests/examples import them from here); engine.py owns step assembly.
 
 
-def _parse_straggler(spec: Optional[str]) -> Optional[Dict[int, float]]:
-    """"2:1.5,3:1.2" → {2: 1.5, 3: 1.2}."""
-    if not spec:
-        return None
-    out: Dict[int, float] = {}
-    for part in spec.split(","):
-        s, m = part.split(":")
-        out[int(s)] = float(m)
-    return out
+def train_spec(arch: str, *, steps: int = 50, stages: int = 4,
+               num_micro: int = 4, mb_global: int = 4, seq: int = 64,
+               layers: Optional[int] = None, d_model: int = 128,
+               dynamism: str = "none", rebalance_every: int = 10,
+               balancer: str = "diffusion", ckpt_dir: Optional[str] = None,
+               log_every: int = 10, seed: int = 0,
+               kernel_impl: str = "scan",
+               dyn_overrides: Optional[Dict[str, Any]] = None,
+               repack: bool = False, repack_policy: str = "adjacent",
+               repack_mem_cap: float = 1.1, repack_target: int = 1,
+               grow_back: Optional[int] = None,
+               async_controller: bool = False, async_drain: bool = False,
+               autoscale: bool = False,
+               autoscale_watermark: bool = False,
+               heartbeat_timeout: float = 3.0,
+               simulate_recover: Optional[int] = None,
+               job_manager: str = "inproc",
+               job_manager_dir: Optional[str] = None,
+               straggler: Optional[Dict[int, float]] = None,
+               measure_stage_times: bool = False) -> RunSpec:
+    """The ``RunSpec`` equivalent of the legacy ``run_training`` kwargs —
+    the single place the old vocabulary maps onto the spec schema."""
+    return RunSpec(
+        model=ModelSpec(arch=arch, layers=layers, d_model=d_model),
+        parallel=ParallelSpec(stages=stages, num_micro=num_micro,
+                              mb_global=mb_global, seq=seq,
+                              kernel_impl=kernel_impl),
+        dynamics=DynamicsSpec(kind=dynamism, **(dyn_overrides or {})),
+        controller=ControllerSpec(
+            balancer=balancer, rebalance_every=rebalance_every,
+            repack=RepackSpec(enabled=repack, policy=repack_policy,
+                              mem_cap=repack_mem_cap,
+                              target=max(1, repack_target)),
+            async_decide=async_controller, async_drain=async_drain,
+            straggler=straggler,
+            measure_stage_times=measure_stage_times),
+        cluster=ClusterSpec(job_manager=job_manager,
+                            job_manager_dir=job_manager_dir,
+                            autoscale=autoscale,
+                            autoscale_watermark=autoscale_watermark,
+                            heartbeat_timeout=heartbeat_timeout,
+                            simulate_recover=simulate_recover,
+                            grow_back=grow_back),
+        steps=steps, seed=seed, log_every=log_every, ckpt_dir=ckpt_dir)
 
 
-# ---------------------------------------------------------------------------
-# CLI integration trainer (CPU scale, real rebalancing + live elasticity)
-# ---------------------------------------------------------------------------
-def run_training(arch: str, *, steps: int = 50, stages: int = 4,
-                 num_micro: int = 4, mb_global: int = 4, seq: int = 64,
-                 layers: Optional[int] = None, d_model: int = 128,
-                 dynamism: str = "none", rebalance_every: int = 10,
-                 balancer: str = "diffusion", ckpt_dir: Optional[str] = None,
-                 log_every: int = 10, seed: int = 0,
-                 kernel_impl: str = "scan",
-                 dyn_overrides: Optional[Dict[str, Any]] = None,
-                 repack: bool = False, repack_policy: str = "adjacent",
-                 repack_mem_cap: float = 1.1, repack_target: int = 1,
-                 grow_back: Optional[int] = None,
-                 async_controller: bool = False, async_drain: bool = False,
-                 autoscale: bool = False,
-                 autoscale_watermark: bool = False,
-                 heartbeat_timeout: float = 3.0,
-                 simulate_recover: Optional[int] = None,
-                 job_manager: str = "inproc",
-                 job_manager_dir: Optional[str] = None,
-                 straggler: Optional[Dict[int, float]] = None,
-                 measure_stage_times: bool = False
-                 ) -> Dict[str, Any]:
-    from repro.data.loader import DataConfig, make_loader
-    cfg = get_config(arch)
-    if layers is not None:
-        cfg = reduced_config(cfg, num_layers=layers, d_model=d_model,
-                             num_heads=4, num_kv_heads=2, d_ff=2 * d_model,
-                             vocab_size=512)
-    dcfg = DistConfig(num_stages=stages, slot_slack=2, remat="none",
-                      param_dtype="float32", kernel_impl=kernel_impl)
-    dyncfg = DynamicsConfig(kind=dynamism, **(dyn_overrides or {}))
-    shapes = PipelineShapes(num_micro=num_micro, mb_global=mb_global,
-                            seq=seq)
-    tokens_per_step = num_micro * mb_global * seq
+def run_training(arch: str, **kwargs) -> Dict[str, Any]:
+    """Legacy kwarg entry point (deprecation shim).
 
-    # ---- job-manager boundary (in-process pool or file RPC to a server
-    # process — release/grant actually leave this process in file mode)
-    jm = jm_proc = None
-    if job_manager == "file":
-        # always a FRESH directory (a unique subdir when the caller names a
-        # location): leftover req/resp files from a previous run would be
-        # replayed by the new server and misread by the new client
-        if job_manager_dir:
-            os.makedirs(job_manager_dir, exist_ok=True)
-            jm_dir = tempfile.mkdtemp(prefix="run_", dir=job_manager_dir)
-        else:
-            jm_dir = tempfile.mkdtemp(prefix="dynmo_jm_")
-        jm_proc = spawn_file_manager(jm_dir, stages)
-        jm = FileJobManager(jm_dir, timeout_s=60.0)
-    elif job_manager != "inproc":
-        raise ValueError(f"unknown job manager {job_manager!r}")
+    Builds the equivalent ``RunSpec`` and runs it through a ``Session`` —
+    new code should do that directly:
 
-    engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=1,
-                           job_manager=jm)
-    state = engine.init_state(jax.random.PRNGKey(seed))
-
-    ccfg = ControllerConfig(method=balancer, rebalance_every=rebalance_every,
-                            repack=repack, repack_policy=repack_policy,
-                            repack_target=max(1, repack_target))
-    if repack:
-        # per-worker memory budget: capacity factor × the dtype-correct
-        # per-stage footprint of the UNPRUNED model under a uniform split —
-        # consolidation becomes feasible once dynamism shrinks the model
-        from repro.core.cost_model import stage_memory_budget
-        ccfg.repack_mem_cap = stage_memory_budget(
-            cfg, tokens_per_step, seq, dcfg.bytes_per_param, stages,
-            cap_factor=repack_mem_cap)
-    det = StragglerDetector(stages) \
-        if (straggler or measure_stage_times) else None
-    ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg, straggler=det)
-    cp = ControlPlane(ctrl, async_mode=async_controller,
-                      epoch_fn=lambda: engine.epoch)
-
-    # ---- autoscaler: heartbeats + throughput watermark (replaces
-    # --grow-back); the monitor runs on a step-granular simulated clock so
-    # CI runs are deterministic
-    monitor = scaler = None
-    sim_clock = [0.0]
-    if autoscale:
-        monitor = HeartbeatMonitor(stages, timeout_s=heartbeat_timeout,
-                                   clock=lambda: sim_clock[0])
-        scaler = Autoscaler(
-            AutoscalerConfig(min_stages=max(1, repack_target),
-                             max_stages=stages,
-                             watermark=autoscale_watermark), monitor)
-
-    loader = make_loader(cfg, DataConfig(num_micro, mb_global, seq,
-                                         seed=seed))
-    ckpt = None
-    if ckpt_dir:
-        from repro.checkpoint.checkpoint import CheckpointManager
-        ckpt = CheckpointManager(ckpt_dir, every=max(10, steps // 5))
-
-    def after_resize(step: int, kind: str) -> None:
-        cp.rebind(engine.dcfg_for(state.stages), state.lps)
-        if scaler is not None:
-            scaler.note_resize(step, state.stages)
-        rz = engine.resizes[-1]
-        if monitor is not None and rz.kind == "shrink":
-            # released workers leave the heartbeat set deliberately; a
-            # later revive is the recovery signal the autoscaler grows on
-            for w in rz.workers:
-                monitor.expire(w)
-        if monitor is not None and rz.kind == "grow":
-            # regranted workers (any grow path: recovery, watermark,
-            # legacy --grow-back) must beat again — without the revive
-            # they would stay marked failed and a later real death of the
-            # same worker could never be detected
-            for w in rz.workers:
-                monitor.revive(w)
-        print(f"step {step:4d} {kind.upper()} {rz.from_stages}->"
-              f"{rz.to_stages} stages; workers {rz.workers}; "
-              f"pool active={engine.jm.num_active}; schedule "
-              f"{rz.ticks_before}->{rz.ticks_after} ticks")
-
-    losses, events, step_times, stages_hist = [], [], [], []
-    last_measured = None
-    t0 = time.perf_counter()
-    try:
-        for step, batch in enumerate(loader):
-            if step >= steps:
-                break
-            t_step = time.perf_counter()
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
-            loss, stats, gnorm = engine.step(state, batch, lr)
-            # one scalar sync for the loss curve; the full per-slot stats
-            # tree stays on device until controller cadence (§3.3.1)
-            losses.append(float(loss))
-            step_times.append(time.perf_counter() - t_step)
-            stages_hist.append(state.stages)
-
-            # ---- dynamism events (black-box to the controller)
-            if dynamism == "pruning" and step and step % 10 == 0:
-                sp = zhu_gupta_sparsity(
-                    step * 100, dataclasses.replace(
-                        dyncfg, prune_start_iter=0,
-                        prune_end_iter=steps * 100, prune_frequency=1))
-                keep = prn.target_keep_blocks(
-                    cfg, cfg.total_blocks(), sp)
-                dyn = dict(state.dyn)
-                dyn["ff_mask"] = prn.global_block_prune(
-                    cfg, state.params["stages"], state.assignment["tags"],
-                    keep)
-                state.dyn = dyn
-            if dynamism == "freezing" and step and step % 10 == 0:
-                front = int(cfg.total_blocks() * min(0.6, step / steps))
-                fr = np.zeros_like(np.asarray(state.dyn["frozen"]))
-                g = 0
-                tags_np = np.asarray(state.assignment["tags"])
-                for s in range(tags_np.shape[0]):
-                    for l in range(tags_np.shape[1]):
-                        if tags_np[s, l] != 0:
-                            if g < front:
-                                fr[s, l] = 1.0
-                            g += 1
-                dyn = dict(state.dyn)
-                dyn["frozen"] = jnp.asarray(fr)
-                state.dyn = dyn
-
-            # ---- heartbeats (simulated per-step liveness: active workers
-            # beat; released/dead ones go silent and time out)
-            if monitor is not None:
-                sim_clock[0] = float(step)
-                for w in engine.stage_workers:
-                    monitor.beat(w)
-                if simulate_recover is not None and step == simulate_recover:
-                    for w in range(stages):
-                        if w not in engine.stage_workers:
-                            monitor.revive(w)
-
-            # ---- publish stats to the control plane on cadence (the only
-            # device→host stats sync; in async mode this is a pointer swap)
-            if ctrl.cadence(step + 1):
-                measured = None
-                if measure_stage_times:
-                    # real per-stage wall times from the engine's stage
-                    # probe — cadence-gated here so the hot path stays
-                    # sync-free (the probe is a per-stage host sync)
-                    measured = engine.measure_stage_times(state, batch)
-                    last_measured = measured
-                if straggler:
-                    # simulation knob: a straggling WORKER multiplies its
-                    # stage's wall time; feed the detector the same shape a
-                    # real per-worker timer would report (or skew the
-                    # measured times when both are on).  Keyed by WORKER
-                    # id — after an evict/resize the slow machine keeps its
-                    # id but sits at a different stage index
-                    if measured is None:
-                        share = np.asarray(state.lps, np.float64)
-                        measured = share / share.sum() * step_times[-1]
-                    measured = measured * np.array(
-                        [straggler.get(engine.stage_workers[s], 1.0)
-                         for s in range(state.stages)])
-                cp.publish(StatsSnapshot(
-                    iteration=step + 1, epoch=engine.epoch,
-                    stats=engine.stats_to_host(state, stats),
-                    tags=np.asarray(state.assignment["tags"]),
-                    num_micro=shapes.num_micro, tokens=tokens_per_step,
-                    seq=seq, frozen=np.asarray(state.dyn["frozen"]),
-                    stage_times=measured))
-                if async_drain:
-                    cp.drain()
-
-            # ---- safe point: apply the newest finished plan (epoch-fenced;
-            # a plan decided against a pre-resize world is rejected)
-            plan = cp.poll(engine.epoch)
-            if plan is not None:
-                if plan.event is not None and plan.event.rebalanced:
-                    events.append(plan.event)
-                if (plan.resize is not None
-                        and plan.resize.target_stages < state.stages):
-                    state = engine.shrink(state, plan.resize.target_stages,
-                                          plan.resize.layers_per_stage,
-                                          step=step)
-                    after_resize(step, f"shrink[{plan.resize.policy}]")
-                elif plan.new_lps is not None:
-                    p, o, d, new_assignment, _ = cp.apply(
-                        plan, state.params, state.opt_state, state.dyn)
-                    state.params, state.opt_state, state.dyn = p, o, d
-                    state.assignment = new_assignment
-                    state.lps = list(cp.ctrl.lps)
-
-            # ---- autoscaler: heartbeat + watermark signals
-            if scaler is not None:
-                d = scaler.observe(step, step_times[-1], state.stages,
-                                   engine.stage_workers, tokens_per_step)
-                if d.action == "evict":
-                    state = engine.evict(state, d.ids, step=step)
-                    after_resize(step, "evict")
-                elif d.action == "grow" and state.stages < stages:
-                    prev = state.stages
-                    state = engine.grow(state, d.workers, step=step)
-                    if state.stages > prev:   # pool may grant nothing
-                        # granted workers stay for this job: stop planning
-                        # resizes so ordinary rebalancing keeps running
-                        cp.with_ctrl(
-                            lambda c: setattr(c.ccfg, "repack", False))
-                        after_resize(step, "grow")
-                elif (d.action == "shrink"
-                        and state.stages > max(1, repack_target)):
-                    state = engine.shrink(
-                        state, max(max(1, repack_target),
-                                   state.stages - d.workers), step=step)
-                    after_resize(step, "shrink[watermark]")
-
-            # ---- legacy fixed-step growth (back-compat; superseded by
-            # --autoscale)
-            if (grow_back and engine.last_shrink_step is not None
-                    and state.stages < stages
-                    and step >= engine.last_shrink_step + grow_back):
-                prev_stages = state.stages
-                state = engine.grow(state, stages - state.stages, step=step)
-                if state.stages > prev_stages:
-                    cp.with_ctrl(lambda c: setattr(c.ccfg, "repack", False))
-                    after_resize(step, "grow")
-            if ckpt:
-                ckpt.maybe_save(step, state.params, state.opt_state,
-                                state.dyn, state.lps)
-            if step % log_every == 0:
-                print(f"step {step:4d} loss {float(loss):.4f} "
-                      f"gnorm {float(gnorm):.3f} S={state.stages} "
-                      f"lps={state.lps}")
-    finally:
-        cp.close()
-        if jm is not None:
-            jm.close()                      # tells the server to exit
-        if jm_proc is not None:
-            try:
-                jm_proc.wait(timeout=10)
-            except Exception:
-                jm_proc.kill()
-    wall = time.perf_counter() - t0
-    return {"losses": losses, "events": events, "wall_s": wall,
-            "final_lps": list(state.lps), "params": state.params,
-            "assignment": state.assignment,
-            "tokens_per_step": tokens_per_step,
-            "step_times": step_times, "stages_history": stages_hist,
-            "resizes": [dataclasses.asdict(e) for e in engine.resizes],
-            "pool_log": list(engine.jm.log),
-            "final_stages": state.stages,
-            "measured_stage_times": (list(map(float, last_measured))
-                                     if last_measured is not None else None),
-            "controller": {
-                "mode": "async" if async_controller else "inline",
-                "published": cp.published, "decided": cp.decided,
-                "dropped": cp.dropped,
-                "stale_rejected": cp.stale_rejected},
-            "autoscale_decisions": ([dataclasses.asdict(d)
-                                     for d in scaler.decisions]
-                                    if scaler is not None else [])}
+        with Session(train_spec(arch, ...)) as s:
+            report = s.train()
+    """
+    spec = train_spec(arch, **kwargs)
+    with Session(spec) as s:
+        return s.train()
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--stages", type=int, default=4)
-    ap.add_argument("--layers", type=int, default=8)
-    ap.add_argument("--d-model", type=int, default=128)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--num-micro", type=int, default=4)
-    ap.add_argument("--mb-global", type=int, default=4)
-    ap.add_argument("--dynamism", default="none")
-    ap.add_argument("--kernel-impl", default="scan",
-                    choices=["reference", "scan", "pallas"])
-    ap.add_argument("--balancer", default="diffusion")
-    ap.add_argument("--rebalance-every", type=int, default=10)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--repack", action="store_true",
-                    help="enable live worker consolidation (paper Alg. 2)")
-    ap.add_argument("--repack-policy", default="adjacent",
-                    choices=["adjacent", "first_fit"])
-    ap.add_argument("--repack-mem-cap", type=float, default=1.1,
-                    help="per-worker memory budget as a multiple of the "
-                         "unpruned per-stage footprint")
-    ap.add_argument("--repack-target", type=int, default=1,
-                    help="never consolidate below this many workers")
-    ap.add_argument("--grow-back", type=int, default=None,
-                    help="legacy: re-expand N steps after a shrink "
-                         "(prefer --autoscale)")
-    ap.add_argument("--async-controller", action="store_true",
-                    help="run profile->decide on a background thread "
-                         "(double-buffered stats mailbox, epoch-fenced "
-                         "plans)")
-    ap.add_argument("--async-drain", action="store_true",
-                    help="deterministic async mode: block for each "
-                         "decision (parity testing)")
-    ap.add_argument("--autoscale", action="store_true",
-                    help="signal-driven shrink/grow: heartbeat failures/"
-                         "recoveries (+ throughput watermark with "
-                         "--autoscale-watermark)")
-    ap.add_argument("--autoscale-watermark", action="store_true",
-                    help="also scale on the per-worker throughput "
-                         "watermark (wall-clock based — leave off on "
-                         "noisy shared machines)")
-    ap.add_argument("--heartbeat-timeout", type=float, default=3.0,
-                    help="missed-beat timeout in steps (simulated clock)")
-    ap.add_argument("--simulate-recover", type=int, default=None,
-                    help="revive all non-active workers at this step "
-                         "(heartbeat-recovery demo)")
-    ap.add_argument("--job-manager", default="inproc",
-                    choices=["inproc", "file"],
-                    help="'file' puts the WorkerPool behind a file-RPC "
-                         "server in a separate process")
-    ap.add_argument("--job-manager-dir", default=None)
-    ap.add_argument("--straggler", default=None,
-                    help="simulate slow workers, e.g. '2:1.5' (stage 2 "
-                         "runs 1.5x slow); the detector feeds the "
-                         "balancer")
-    ap.add_argument("--measure-stage-times", action="store_true",
-                    help="feed MEASURED per-stage wall times (engine stage "
-                         "probe, controller cadence only) into the "
-                         "straggler detector instead of the --straggler "
-                         "simulation")
-    args = ap.parse_args()
-    out = run_training(
-        args.arch, steps=args.steps, stages=args.stages, layers=args.layers,
-        d_model=args.d_model, seq=args.seq, num_micro=args.num_micro,
-        mb_global=args.mb_global, dynamism=args.dynamism,
-        kernel_impl=args.kernel_impl, balancer=args.balancer,
-        rebalance_every=args.rebalance_every, ckpt_dir=args.ckpt_dir,
-        repack=args.repack, repack_policy=args.repack_policy,
-        repack_mem_cap=args.repack_mem_cap,
-        repack_target=args.repack_target, grow_back=args.grow_back,
-        async_controller=args.async_controller,
-        async_drain=args.async_drain, autoscale=args.autoscale,
-        autoscale_watermark=args.autoscale_watermark,
-        heartbeat_timeout=args.heartbeat_timeout,
-        simulate_recover=args.simulate_recover,
-        job_manager=args.job_manager,
-        job_manager_dir=args.job_manager_dir,
-        straggler=_parse_straggler(args.straggler),
-        measure_stage_times=args.measure_stage_times)
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="DynMo trainer (config-first: --config RUN.JSON; "
+                    "flags below override spec fields)")
+    add_config_args(ap)
+    add_alias_flags(ap, TRAIN_ALIASES)
+    add_spec_flags(ap)
+    args = ap.parse_args(argv)
+    spec = build_spec(args, TRAIN_ALIASES, cli_defaults=TRAIN_CLI_DEFAULTS)
+    if maybe_dump(args, spec):
+        return
+    with Session(spec) as s:
+        out = s.train()
     ctl = out["controller"]
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
           f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}; "

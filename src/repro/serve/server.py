@@ -68,7 +68,7 @@ class ElasticServer:
                  data: int = 1, job_manager: Optional[JobManagerClient] = None,
                  scaler: Optional[Autoscaler] = None, min_stages: int = 1,
                  eos_id: Optional[int] = None, defrag_every: int = 0,
-                 seed: int = 0):
+                 seed: int = 0, measure_stage_times: bool = False):
         assert shapes.cache_len >= shapes.seq, "cache must hold the prompt"
         self.engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=data,
                                     job_manager=job_manager)
@@ -80,6 +80,7 @@ class ElasticServer:
         self.max_stages = dcfg.num_stages
         self.eos_id = eos_id
         self.defrag_every = defrag_every
+        self.measure_stage_times = measure_stage_times
 
     def close(self) -> None:
         self.engine.close()
@@ -179,6 +180,15 @@ class ElasticServer:
             tick += 1
         wall_s = time.perf_counter() - t_run
         total_tokens = sum(len(r.tokens) for r in sched.completions)
+        measured = None
+        if self.measure_stage_times:
+            # per-stage prefill-shaped wall times via the engine's stage
+            # probe (off the serving hot loop: one probe after the trace
+            # drains, on whatever world the server ended up holding)
+            probe_batch = {"tokens": np.zeros(
+                (m, B, self.shapes.seq), np.int32)}
+            measured = list(map(float, self.engine.measure_stage_times(
+                self.state, probe_batch)))
         report = {
             "completions": [
                 {"rid": r.rid, "kind": r.kind, "arrival": r.arrival,
@@ -203,5 +213,6 @@ class ElasticServer:
             "tokens_per_s": total_tokens / max(1e-9, wall_s),
             "latency_p50_s": _pct(token_lat, 50),
             "latency_p95_s": _pct(token_lat, 95),
+            "measured_stage_times": measured,
         }
         return report
