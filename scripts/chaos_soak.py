@@ -1,0 +1,129 @@
+"""Chaos soak: a fault-free baseline vs a seeded-chaos run of the same
+spec, with the paper-level acceptance checks (DESIGN.md §12) asserted and
+a machine-readable fault-event log written for the CI artifact.
+
+  train: auto-derived faults (worker crash, job-manager kill -9/respawn,
+         RPC loss+dup, straggler spike) against the file job manager; the
+         chaos run must end within loss tolerance of the baseline — a
+         crash costs capacity, never correctness.
+  serve: a worker crash mid-flight; the chaos run must complete the EXACT
+         same request->tokens map as the baseline (zero lost requests,
+         every in-flight request requeued and replayed).
+
+Usage (CI chaos job; 4 forced host devices are set up internally):
+  PYTHONPATH=src python scripts/chaos_soak.py --mode train \
+      --fault-seed 1 --out chaos_events_train_1.json
+"""
+import argparse
+import json
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.api import RunSpec, Session  # noqa: E402
+
+LOSS_TOL = 3e-3     # ULP-level drift of a different stage split (§12)
+
+TRAIN_BASE = {
+    "steps": 16, "seed": 5, "log_every": 4,
+    "model": {"arch": "smollm-360m", "layers": 8, "d_model": 64,
+              "num_heads": 4, "num_kv_heads": 2, "d_ff": 256,
+              "vocab_size": 512},
+    "parallel": {"stages": 4, "num_micro": 2, "mb_global": 2, "seq": 32,
+                 "remat": "none", "param_dtype": "float32"},
+    "cluster": {"job_manager": "file", "autoscale": True,
+                "heartbeat_timeout": 3.0, "rpc_timeout_s": 2.0,
+                "spares": 1},
+}
+
+SERVE_BASE = {
+    "seed": 3,
+    "model": {"arch": "smollm-360m", "layers": 8, "d_model": 64,
+              "num_heads": 4, "num_kv_heads": 2, "d_ff": 256,
+              "vocab_size": 512},
+    "parallel": {"stages": 4, "num_micro": 2, "mb_global": 2, "seq": 16,
+                 "remat": "none", "param_dtype": "float32"},
+    "serve": {"requests": 10, "prompt_len": 16, "gen": 12, "min_prompt": 4,
+              "burst_period": 6, "burst_len": 2, "burst_rate": 3,
+              "lull_rate": 1},
+    "cluster": {"job_manager": "inproc", "autoscale": False, "spares": 1},
+}
+
+
+def soak_train(fault_seed: int) -> dict:
+    with Session(RunSpec.from_dict(dict(TRAIN_BASE))) as s:
+        base = s.train()
+    chaos_cfg = dict(TRAIN_BASE)
+    chaos_cfg["faults"] = {"enabled": True, "auto": True,
+                           "seed": fault_seed}
+    with Session(RunSpec.from_dict(chaos_cfg)) as s:
+        chaos = s.train()
+    diffs = [abs(a - b) for a, b in zip(base["losses"], chaos["losses"])]
+    verdict = {
+        "steps": len(chaos["losses"]),
+        "max_loss_diff": max(diffs),
+        "loss_tol": LOSS_TOL,
+        "resizes": [(r["kind"], r["step"]) for r in chaos["resizes"]],
+        "ok": (len(chaos["losses"]) == TRAIN_BASE["steps"]
+               and max(diffs) < LOSS_TOL),
+    }
+    return {"mode": "train", "fault_seed": fault_seed, "verdict": verdict,
+            "fault_plan": chaos["fault_plan"], "events": chaos["faults"],
+            "degraded_events": chaos["degraded_events"],
+            "rpc": chaos["rpc"],
+            "baseline_losses": base["losses"],
+            "chaos_losses": chaos["losses"]}
+
+
+def soak_serve(fault_seed: int) -> dict:
+    with Session(RunSpec.from_dict(dict(SERVE_BASE))) as s:
+        base = s.serve()
+    chaos_cfg = dict(SERVE_BASE)
+    chaos_cfg["faults"] = {"enabled": True, "auto": True,
+                           "seed": fault_seed}
+    with Session(RunSpec.from_dict(chaos_cfg)) as s:
+        chaos = s.serve()
+    tok_a = {c["rid"]: c["tokens"] for c in base["completions"]}
+    tok_b = {c["rid"]: c["tokens"] for c in chaos["completions"]}
+    mismatched = sorted(r for r in tok_a if tok_b.get(r) != tok_a[r])
+    verdict = {
+        "requests": len(tok_a),
+        "lost_requests": sorted(set(tok_a) - set(tok_b)),
+        "token_mismatches": mismatched,
+        "requeued_total": chaos["requeued_total"],
+        "resizes": [(r["kind"], r["step"]) for r in chaos["resizes"]],
+        "ok": set(tok_a) == set(tok_b) and not mismatched,
+    }
+    return {"mode": "serve", "fault_seed": fault_seed, "verdict": verdict,
+            "fault_plan": chaos["fault_plan"], "events": chaos["faults"],
+            "degraded_events": chaos["degraded_events"],
+            "completions": chaos["completions"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=["train", "serve"], required=True)
+    ap.add_argument("--fault-seed", type=int, default=1)
+    ap.add_argument("--out", default=None, metavar="EVENTS.JSON",
+                    help="write the fault-event log here (CI artifact)")
+    args = ap.parse_args()
+    log = (soak_train if args.mode == "train" else soak_serve)(
+        args.fault_seed)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(log, f, indent=1)
+    v = log["verdict"]
+    print(f"chaos soak [{log['mode']} seed {log['fault_seed']}]: "
+          f"{'PASS' if v['ok'] else 'FAIL'} {v}")
+    print(f"  injected: {[(e['step'], e['kind']) for e in log['events']]}")
+    if log["degraded_events"]:
+        print(f"  degraded: {log['degraded_events']}")
+    return 0 if v["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -163,6 +163,14 @@ _COMMON: List[Alias] = [
           help="'file' puts the WorkerPool behind a file-RPC server in a "
                "separate process"),
     Alias("--job-manager-dir", "cluster.job_manager_dir"),
+    Alias("--chaos", "faults.enabled", flag=True,
+          help="inject a seeded fault schedule (worker crashes, manager "
+               "kills, RPC loss) — see faults.* fields and DESIGN.md §12"),
+    Alias("--chaos-seed", "faults.seed",
+          help="fault-schedule seed; same seed => byte-identical faults"),
+    Alias("--spares", "cluster.spares",
+          help="spare workers the job manager can grant beyond the "
+               "initial pool (crash recovery headroom)"),
     Alias("--seed", "seed"),
     Alias("--log-every", "log_every"),
 ]
@@ -175,6 +183,9 @@ TRAIN_ALIASES: List[Alias] = _COMMON + [
           choices=["diffusion", "partition"]),
     Alias("--rebalance-every", "controller.rebalance_every"),
     Alias("--ckpt-dir", "ckpt_dir"),
+    Alias("--ckpt-every", "ckpt_every",
+          help="take a crash-safe safe point every N steps (resumable "
+               "with Session.resume / --resume); needs --ckpt-dir"),
     Alias("--repack", "controller.repack.enabled", flag=True,
           help="enable live worker consolidation (paper Alg. 2)"),
     Alias("--repack-policy", "controller.repack.policy",

@@ -48,7 +48,7 @@ from repro.api.specs import RunSpec
 @dataclasses.dataclass
 class SessionEvent:
     """One telemetry record: ``kind`` in {"log", "rebalance", "resize",
-    "autoscale", "serve_summary", "train_summary"}."""
+    "autoscale", "safepoint", "serve_summary", "train_summary"}."""
     kind: str
     step: int
     data: Dict[str, Any]
@@ -65,7 +65,28 @@ class Session:
         self._server = None      # serve.server.ElasticServer
         self._jm = None          # cluster.rpc.JobManagerClient
         self._jm_proc = None
+        self._jm_dir = None
         self._closed = False
+        self.injector = None     # faults.ChaosInjector when chaos is on
+        self._resume_dir: Optional[str] = None
+        self._resume_step: Optional[int] = None
+
+    @classmethod
+    def resume(cls, ckpt_dir: str, *,
+               step: Optional[int] = None) -> "Session":
+        """Rebuild a crashed run from its newest complete safe point.  The
+        safe point carries the producing ``RunSpec``, so the caller needs
+        nothing but the directory; ``train()`` then restores tensors,
+        stage→worker topology, pool state, and control-plane hysteresis and
+        continues from the step after the safe point — bit-identically to
+        the run that never crashed (DESIGN.md §12)."""
+        from repro.checkpoint.safepoint import peek
+        idx = peek(ckpt_dir, step)
+        spec = RunSpec.from_dict(idx["meta"]["spec"])
+        s = cls(spec)
+        s._resume_dir = ckpt_dir
+        s._resume_step = int(idx["step"])
+        return s
 
     # -- lifecycle ---------------------------------------------------------
     def __enter__(self) -> "Session":
@@ -83,6 +104,9 @@ class Session:
         if self._server is not None:
             self._server.close()
         elif self._engine is not None:
+            # deliver bookkeeping deferred while the manager was down —
+            # best-effort; an unreachable manager must not block teardown
+            self._engine._flush_pending_jm()
             self._engine.close()
         if self._jm is not None:
             self._jm.close()             # tells a file-RPC server to exit
@@ -115,10 +139,17 @@ class Session:
                           remat=p.remat, param_dtype=p.param_dtype,
                           kernel_impl=p.kernel_impl)
 
-    def _connect_job_manager(self):
+    def _connect_job_manager(self, plan=None, injector=None,
+                             pool_state=None):
         """'file' spawns the WorkerPool server in a separate process and
         returns a client speaking atomic req/resp JSON files to it; 'inproc'
-        returns None (the engine wraps its own pool)."""
+        returns None (the engine wraps its own pool).  ``pool_state`` (from
+        a safe point) is seeded into the fresh directory as the server's
+        journal, so the respawned server starts from the crashed run's pool
+        topology; with an RPC-chaos ``plan`` the client is the chaos
+        transport."""
+        import json
+
         from repro.cluster.rpc import FileJobManager, spawn_file_manager
         c = self.spec.cluster
         if c.job_manager == "inproc":
@@ -131,8 +162,18 @@ class Session:
             jm_dir = tempfile.mkdtemp(prefix="run_", dir=c.job_manager_dir)
         else:
             jm_dir = tempfile.mkdtemp(prefix="dynmo_jm_")
-        self._jm_proc = spawn_file_manager(jm_dir, self.spec.parallel.stages)
-        self._jm = FileJobManager(jm_dir, timeout_s=60.0)
+        if pool_state is not None:
+            with open(os.path.join(jm_dir, "state.json"), "w") as f:
+                json.dump({"pool": pool_state, "answered": {}}, f)
+        self._jm_dir = jm_dir
+        self._jm_proc = spawn_file_manager(jm_dir, self.spec.parallel.stages,
+                                           spares=c.spares)
+        if plan is not None and plan.any_rpc:
+            from repro.faults import ChaosFileJobManager
+            self._jm = ChaosFileJobManager(jm_dir, plan, injector,
+                                           timeout_s=c.rpc_timeout_s)
+        else:
+            self._jm = FileJobManager(jm_dir, timeout_s=c.rpc_timeout_s)
         return self._jm
 
     # =======================================================================
@@ -181,11 +222,89 @@ class Session:
         tokens_per_step = (spec.parallel.num_micro
                            * spec.parallel.mb_global * seq)
 
-        jm = self._connect_job_manager()
+        # ---- resume point (safe-point metadata drives everything below)
+        resume_idx = None
+        start_step = 0
+        if self._resume_dir:
+            from repro.checkpoint.safepoint import peek
+            resume_idx = peek(self._resume_dir, self._resume_step)
+            start_step = int(resume_idx["step"]) + 1
+        rmeta = resume_idx["meta"] if resume_idx is not None else {}
+
+        # ---- chaos: resolve the fault plan before anything it may target
+        # (named fplan — the controller's DecisionPlan reuses ``plan``
+        # inside the step loop)
+        fplan = injector = None
+        if spec.faults.enabled:
+            from repro.faults import ChaosInjector, resolve_plan
+            if spec.faults.worker_crash and not spec.cluster.autoscale:
+                raise ValueError(
+                    "faults.worker_crash requires cluster.autoscale: the "
+                    "heartbeat -> autoscaler -> evict pipeline IS the "
+                    "recovery path chaos exercises")
+            fplan = resolve_plan(
+                spec.faults, horizon=steps,
+                workers=(stages if spec.cluster.autoscale else 1),
+                file_manager=spec.cluster.job_manager == "file")
+            injector = ChaosInjector(fplan, start_step=start_step,
+                                     resumed=resume_idx is not None)
+            self.injector = injector
+
+        jm = self._connect_job_manager(
+            plan=fplan, injector=injector,
+            pool_state=(rmeta.get("pool")
+                        if spec.cluster.job_manager == "file" else None))
+        pool = None
+        if jm is None:
+            from repro.runtime.fault_tolerance import WorkerPool
+            if resume_idx is not None and rmeta.get("pool"):
+                pool = WorkerPool.from_state(rmeta["pool"])
+            elif spec.cluster.spares:
+                pool = WorkerPool(stages, spares=spec.cluster.spares)
         engine = ElasticEngine(cfg, dcfg, dyncfg, shapes,
-                               data=spec.parallel.data, job_manager=jm)
+                               data=spec.parallel.data, pool=pool,
+                               job_manager=jm)
         self._engine = engine
-        state = engine.init_state(jax.random.PRNGKey(spec.seed))
+        if injector is not None:
+            import signal
+
+            def _kill_manager():
+                if self._jm_proc is not None:
+                    self._jm_proc.kill()
+                    self._jm_proc.wait()
+
+            def _respawn_manager():
+                from repro.cluster.rpc import spawn_file_manager
+                self._jm_proc = spawn_file_manager(self._jm_dir, stages,
+                                                   spares=spec.cluster
+                                                   .spares)
+
+            cbs = {"kill_self":
+                   lambda: os.kill(os.getpid(), signal.SIGKILL)}
+            if spec.cluster.job_manager == "file":
+                cbs["kill_manager"] = _kill_manager
+                cbs["respawn_manager"] = _respawn_manager
+            injector.bind(**cbs)
+        if resume_idx is not None:
+            # rebuild at the stage count the run died at, then overwrite
+            # the randomly-initialized tensors with the safe point's shards
+            # (bit-exact) and re-place them on the restored world's submesh
+            from repro.checkpoint.safepoint import restore
+            engine.bind_workers([int(w) for w in rmeta["stage_workers"]])
+            state = engine.init_state(
+                jax.random.PRNGKey(spec.seed),
+                stages=int(resume_idx["num_stages"]),
+                lps=[int(x) for x in resume_idx["layers_per_stage"]])
+            p, o, d, _ = restore(
+                self._resume_dir,
+                (state.params, state.opt_state, state.dyn),
+                int(resume_idx["step"]))
+            w = engine.world(state.stages)
+            (state.params, state.opt_state, state.dyn, state.assignment,
+             _) = engine._place(w, p, o, d, state.assignment)
+            engine.epoch = int(rmeta.get("epoch", 0))
+        else:
+            state = engine.init_state(jax.random.PRNGKey(spec.seed))
 
         ccfg = ControllerConfig(method=spec.controller.balancer,
                                 rebalance_every=spec.controller
@@ -202,12 +321,18 @@ class Session:
             ccfg.repack_mem_cap = stage_memory_budget(
                 cfg, tokens_per_step, seq, dcfg.bytes_per_param, stages,
                 cap_factor=spec.controller.repack.mem_cap)
+        if resume_idx is not None and rmeta.get("repack_enabled") is False:
+            # the crashed run had already latched repack off (a grow keeps
+            # granted workers); the resumed one must not re-plan a shrink
+            ccfg.repack = False
         det = StragglerDetector(stages) \
             if (straggler or measure_stage_times) else None
         ctrl = DynMoController(cfg, dcfg, dyncfg, ccfg, straggler=det)
         cp = ControlPlane(ctrl, async_mode=spec.controller.async_decide,
                           epoch_fn=lambda: engine.epoch)
         self._cp = cp
+        if resume_idx is not None:
+            cp.rebind(engine.dcfg_for(state.stages), state.lps)
 
         # ---- autoscaler: heartbeats + throughput watermark; the monitor
         # runs on a step-granular simulated clock so CI is deterministic
@@ -222,12 +347,18 @@ class Session:
                                  max_stages=stages,
                                  watermark=spec.cluster.autoscale_watermark),
                 monitor)
+            if resume_idx is not None and rmeta.get("scaler"):
+                scaler.load_state(rmeta["scaler"])
 
         loader = make_loader(cfg, DataConfig(spec.parallel.num_micro,
                                              spec.parallel.mb_global, seq,
-                                             seed=spec.seed))
-        ckpt = None
-        if spec.ckpt_dir:
+                                             seed=spec.seed),
+                             start_step=start_step)
+        ckpt = safept = None
+        if spec.ckpt_every:
+            from repro.checkpoint.safepoint import SafepointManager
+            safept = SafepointManager(spec.ckpt_dir, every=spec.ckpt_every)
+        elif spec.ckpt_dir:
             from repro.checkpoint.checkpoint import CheckpointManager
             ckpt = CheckpointManager(spec.ckpt_dir,
                                      every=max(10, steps // 5))
@@ -263,7 +394,7 @@ class Session:
         losses, events, step_times, stages_hist = [], [], [], []
         last_measured = None
         t0 = time.perf_counter()
-        for step, batch in enumerate(loader):
+        for step, batch in enumerate(loader, start=start_step):
             if step >= steps:
                 break
             t_step = time.perf_counter()
@@ -308,7 +439,9 @@ class Session:
             # beat; released/dead ones go silent and time out)
             if monitor is not None:
                 sim_clock[0] = float(step)
-                for w in engine.stage_workers:
+                beat = engine.stage_workers if injector is None \
+                    else injector.heartbeat_workers(engine.stage_workers)
+                for w in beat:
                     monitor.beat(w)
                 if (spec.cluster.simulate_recover is not None
                         and step == spec.cluster.simulate_recover):
@@ -339,6 +472,16 @@ class Session:
                     measured = measured * np.array(
                         [straggler.get(engine.stage_workers[s], 1.0)
                          for s in range(state.stages)])
+                if injector is not None:
+                    # chaos straggler spikes: same per-worker multiplier
+                    # shape as the simulation knob above, sourced from the
+                    # fault plan
+                    mult = injector.spike_for(engine.stage_workers)
+                    if mult is not None:
+                        if measured is None:
+                            share = np.asarray(state.lps, np.float64)
+                            measured = share / share.sum() * step_times[-1]
+                        measured = measured * np.asarray(mult)
                 cp.publish(StatsSnapshot(
                     iteration=step + 1, epoch=engine.epoch,
                     stats=engine.stats_to_host(state, stats),
@@ -376,7 +519,13 @@ class Session:
 
             # ---- autoscaler: heartbeat + watermark signals
             if scaler is not None:
-                d = scaler.observe(step, step_times[-1], state.stages,
+                # "logical" clock: feed the watermark a schedule-derived
+                # step time (GPipe tick count) instead of wall-clock —
+                # deterministic on shared CI machines
+                wm_dt = step_times[-1]
+                if spec.cluster.watermark_clock == "logical":
+                    wm_dt = engine.ticks(state.stages) * 1e-3
+                d = scaler.observe(step, wm_dt, state.stages,
                                    engine.stage_workers, tokens_per_step)
                 if d.action != "none":
                     self._emit("autoscale", step, action=d.action,
@@ -414,6 +563,19 @@ class Session:
             if ckpt:
                 ckpt.maybe_save(step, state.params, state.opt_state,
                                 state.dyn, state.lps)
+            if safept is not None and safept.due(step):
+                path = safept.save(
+                    step, state, spec=spec, engine=engine, scaler=scaler,
+                    repack_enabled=cp.with_ctrl(
+                        lambda c: bool(c.ccfg.repack)),
+                    jm_dir=self._jm_dir)
+                self._emit("safepoint", step, path=path,
+                           stages=state.stages)
+            if injector is not None:
+                # fire scheduled faults AFTER the safe point: a trainer
+                # kill at step k leaves the k-aligned safe point on disk
+                # for Session.resume
+                injector.on_step(step, workers=engine.stage_workers)
             if step % spec.log_every == 0:
                 self._emit("log", step, loss=float(loss),
                            gnorm=float(gnorm), stages=state.stages,
@@ -443,6 +605,17 @@ class Session:
                                      for d in scaler.decisions]
                                     if scaler is not None else []),
             "spec": self.spec.to_dict(),
+            # ---- fault-tolerance telemetry (DESIGN.md §12)
+            "start_step": start_step,
+            "resumed_from": (int(resume_idx["step"])
+                             if resume_idx is not None else None),
+            "safepoints": list(safept.saved) if safept is not None else [],
+            "faults": injector.report() if injector is not None else [],
+            "fault_plan": fplan.to_dict() if fplan is not None else None,
+            "degraded_events": list(engine.degraded_events),
+            "rpc": ({"stats": dict(jm.rpc_stats),
+                     "breaker": jm.breaker.state_dict()}
+                    if jm is not None else None),
         }
         self._emit("train_summary", steps - 1,
                    loss_first=losses[0] if losses else None,
@@ -488,6 +661,25 @@ class Session:
                                 cache_len=s.prompt_len + s.gen)
         if trace is None:
             trace = self.make_trace()
+
+        # ---- chaos: the fault horizon is the trace's expected drain time
+        # (arrival span + tokens/lanes), not max_ticks — auto-derived events
+        # must land while requests are actually in flight
+        plan = injector = None
+        if spec.faults.enabled:
+            from repro.faults import ChaosInjector, resolve_plan
+            lanes = spec.parallel.num_micro * spec.parallel.mb_global
+            est = (max((r.arrival for r in trace), default=0)
+                   + sum(r.gen for r in trace) // max(1, lanes)
+                   + len(trace))
+            plan = resolve_plan(spec.faults,
+                                horizon=max(8, min(s.max_ticks, est)),
+                                workers=spec.parallel.stages,
+                                file_manager=spec.cluster.job_manager
+                                == "file")
+            injector = ChaosInjector(plan)
+            self.injector = injector
+
         scaler = None
         if spec.cluster.autoscale:
             scaler = Autoscaler(AutoscalerConfig(
@@ -496,7 +688,22 @@ class Session:
                 patience=s.patience, cooldown=s.cooldown,
                 queue_high=s.queue_high, occupancy_low=s.occupancy_low,
                 latency_slo_s=s.latency_slo_s))
-        jm = self._connect_job_manager()
+        jm = self._connect_job_manager(plan=plan, injector=injector)
+        if injector is not None and spec.cluster.job_manager == "file":
+
+            def _kill_manager():
+                if self._jm_proc is not None:
+                    self._jm_proc.kill()
+                    self._jm_proc.wait()
+
+            def _respawn_manager():
+                from repro.cluster.rpc import spawn_file_manager
+                self._jm_proc = spawn_file_manager(
+                    self._jm_dir, spec.parallel.stages,
+                    spares=spec.cluster.spares)
+
+            injector.bind(kill_manager=_kill_manager,
+                          respawn_manager=_respawn_manager)
         srv = ElasticServer(cfg, dcfg, dyncfg, shapes, job_manager=jm,
                             scaler=scaler, min_stages=s.min_stages,
                             seed=spec.seed, defrag_every=s.defrag_every,
@@ -504,8 +711,15 @@ class Session:
                             .measure_stage_times)
         self._server = srv
         report = srv.serve(trace, autoscale=spec.cluster.autoscale,
-                           resize_at=resize_at, max_ticks=s.max_ticks)
+                           resize_at=resize_at, max_ticks=s.max_ticks,
+                           injector=injector)
         report["spec"] = spec.to_dict()
+        report["faults"] = injector.report() if injector is not None else []
+        report["fault_plan"] = plan.to_dict() if plan is not None else None
+        report["degraded_events"] = list(srv.engine.degraded_events)
+        report["rpc"] = ({"stats": dict(jm.rpc_stats),
+                          "breaker": jm.breaker.state_dict()}
+                         if jm is not None else None)
         for rz in report["resizes"]:
             self._emit("resize", rz["step"], resize_kind=rz["kind"],
                        from_stages=rz["from_stages"],

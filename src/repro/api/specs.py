@@ -30,7 +30,7 @@ from typing import Any, Dict, List, Optional
 from repro.configs.base import DTYPE_BYTES
 from repro.dynamics.config import DynamicsConfig
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 DYNAMISM_KINDS = ("none", "moe", "pruning", "freezing", "sparse_attention",
                   "early_exit", "mod")
@@ -221,19 +221,86 @@ class ClusterSpec:
     job_manager_dir: Optional[str] = None
     autoscale: bool = False
     autoscale_watermark: bool = False
+    watermark_clock: str = "wall"   # "logical": schedule-derived step times
+    #   (GPipe tick counts) feed the throughput watermark instead of
+    #   wall-clock — deterministic, so --autoscale-watermark runs in CI
     heartbeat_timeout: float = 3.0
+    rpc_timeout_s: float = 60.0   # file job-manager client: TOTAL retry
+    #   budget per call — chaos/CI runs shrink it so degraded-mode paths
+    #   (manager down, breaker open) don't stall a test for a minute
     simulate_recover: Optional[int] = None
+    spares: int = 0   # fresh worker ids the pool may provision beyond the
+    #   initial set — a post-crash grow can be granted a NEVER-seen process
+    #   id instead of waiting for the dead machine to revive
     grow_back: Optional[int] = None   # DEPRECATED: fixed-step re-expansion
 
     def __post_init__(self):
         _check_choice(self.job_manager, JOB_MANAGERS, "cluster.job_manager")
+        _check_choice(self.watermark_clock, ("wall", "logical"),
+                      "cluster.watermark_clock")
         _check(self.heartbeat_timeout > 0, "cluster.heartbeat_timeout",
                f"must be > 0, got {self.heartbeat_timeout!r}")
+        _check(self.spares >= 0, "cluster.spares",
+               f"must be >= 0, got {self.spares!r}")
+        _check(self.rpc_timeout_s > 0, "cluster.rpc_timeout_s",
+               f"must be > 0, got {self.rpc_timeout_s!r}")
         if self.simulate_recover is not None:
             _check(self.simulate_recover >= 0, "cluster.simulate_recover",
                    f"must be >= 0, got {self.simulate_recover!r}")
         if self.grow_back is not None:
             _check_pos(self.grow_back, "cluster.grow_back")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Deterministic chaos schedule (new in schema v2; DESIGN.md §12).
+
+    ``enabled`` turns the ``faults.ChaosInjector`` on; ``auto`` derives a
+    seeded random schedule from ``seed`` (``faults.plan.resolve_plan``) and
+    merges it under any explicitly pinned fields below.  Steps are trainer
+    steps (train) or scheduler ticks (serve); probabilities are per-RPC.
+    """
+    enabled: bool = False
+    seed: int = 0
+    auto: bool = False
+    worker_crash: Optional[Dict[int, int]] = None   # step/tick -> worker id
+    manager_kill: Optional[int] = None              # kill -9 the jm server
+    manager_respawn: Optional[int] = None           # restart it on same dir
+    kill_at: Optional[int] = None                   # SIGKILL the trainer
+    rpc_loss: float = 0.0                           # drop a request write
+    rpc_dup: float = 0.0                            # duplicate a delivery
+    rpc_delay_s: float = 0.0                        # per-message max delay
+    straggler_spike: Optional[Dict[int, float]] = None  # step -> multiplier
+
+    def __post_init__(self):
+        _check(isinstance(self.seed, int), "faults.seed",
+               f"must be an int, got {self.seed!r}")
+        for name in ("rpc_loss", "rpc_dup"):
+            _check_frac(getattr(self, name), f"faults.{name}")
+        _check(self.rpc_delay_s >= 0, "faults.rpc_delay_s",
+               f"must be >= 0, got {self.rpc_delay_s!r}")
+        for name in ("manager_kill", "manager_respawn", "kill_at"):
+            v = getattr(self, name)
+            if v is not None:
+                _check(isinstance(v, int) and v >= 0, f"faults.{name}",
+                       f"must be a step index >= 0, got {v!r}")
+        if self.worker_crash is not None:
+            for k, v in self.worker_crash.items():
+                _check(isinstance(k, int) and k >= 0, "faults.worker_crash",
+                       f"keys must be steps >= 0, got {k!r}")
+                _check(isinstance(v, int) and v >= 0, "faults.worker_crash",
+                       f"values must be worker ids >= 0, got {v!r}")
+        if self.straggler_spike is not None:
+            for k, v in self.straggler_spike.items():
+                _check(isinstance(k, int) and k >= 0,
+                       "faults.straggler_spike",
+                       f"keys must be steps >= 0, got {k!r}")
+                _check(float(v) > 0, "faults.straggler_spike",
+                       f"multiplier at step {k} must be > 0, got {v!r}")
+
+    @property
+    def any_rpc(self) -> bool:
+        return bool(self.rpc_loss or self.rpc_dup or self.rpc_delay_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -291,10 +358,12 @@ class RunSpec:
         default_factory=ControllerSpec)
     cluster: ClusterSpec = dataclasses.field(default_factory=ClusterSpec)
     serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     steps: int = 50
     seed: int = 0
     log_every: int = 10
     ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0       # >0: safe-point checkpoint cadence (steps)
 
     # -- validation --------------------------------------------------------
     def __post_init__(self):
@@ -328,6 +397,34 @@ class RunSpec:
                 _check(k < self.parallel.stages, "controller.straggler",
                        f"worker id {k} out of range for parallel.stages="
                        f"{self.parallel.stages}")
+        _check(isinstance(self.ckpt_every, int) and self.ckpt_every >= 0,
+               "ckpt_every",
+               f"must be a non-negative int, got {self.ckpt_every!r}")
+        if self.ckpt_every:
+            _check(bool(self.ckpt_dir), "ckpt_every",
+                   "requires ckpt_dir (safe-point checkpoints need a "
+                   "directory to land in)")
+        if self.faults.enabled:
+            f = self.faults
+            if f.manager_kill is not None or f.manager_respawn is not None:
+                _check(self.cluster.job_manager == "file",
+                       "faults.manager_kill",
+                       "killing the job-manager process requires "
+                       "cluster.job_manager='file' (inproc has no process "
+                       "to kill)")
+            if f.manager_kill is not None and f.manager_respawn is not None:
+                _check(f.manager_respawn > f.manager_kill,
+                       "faults.manager_respawn",
+                       f"must be > manager_kill ({f.manager_kill}), got "
+                       f"{f.manager_respawn}")
+            if f.any_rpc:
+                _check(self.cluster.job_manager == "file", "faults.rpc_loss",
+                       "RPC loss/dup/delay faults act on the file "
+                       "transport; cluster.job_manager must be 'file'")
+            if f.kill_at is not None:
+                _check(self.ckpt_every > 0, "faults.kill_at",
+                       "killing the trainer without ckpt_every > 0 loses "
+                       "the run — enable safe-point checkpoints")
 
     # -- serialization -----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -341,9 +438,19 @@ class RunSpec:
         _check(isinstance(d, dict), source,
                f"expected a JSON object, got {type(d).__name__}")
         ver = d.get("schema_version", SCHEMA_VERSION)
-        _check(ver == SCHEMA_VERSION, f"{source}.schema_version",
+        _check(isinstance(ver, int), f"{source}.schema_version",
+               f"must be an int, got {ver!r}")
+        _check(ver <= SCHEMA_VERSION, f"{source}.schema_version",
                f"this build reads schema v{SCHEMA_VERSION}, the file says "
                f"v{ver}; migrate the config (DESIGN.md §11)")
+        while ver < SCHEMA_VERSION:
+            _check(ver in _UPGRADERS, f"{source}.schema_version",
+                   f"no upgrader registered for schema v{ver}")
+            d = _UPGRADERS[ver](dict(d))
+            _check(d.get("schema_version") == ver + 1,
+                   f"{source}.schema_version",
+                   f"upgrader v{ver} did not bump the version")
+            ver += 1
         return _from_dict(cls, d, source)
 
     @classmethod
@@ -389,6 +496,24 @@ class RunSpec:
 
 
 # ---------------------------------------------------------------------------
+# Schema migrations: one pure dict->dict upgrader per historical version.
+# ``from_dict`` chains them, so a v1 config keeps loading forever and the
+# golden-fixture test pins each frozen version's file byte-for-byte.
+# ---------------------------------------------------------------------------
+def _upgrade_v1(d: Dict[str, Any]) -> Dict[str, Any]:
+    """v1 -> v2: adds ``faults`` (FaultSpec) and ``ckpt_every``.  Both are
+    new knobs with inert defaults, so the upgrade is purely additive —
+    a v1 run means exactly the same v2 run."""
+    d["schema_version"] = 2
+    d.setdefault("faults", {})
+    d.setdefault("ckpt_every", 0)
+    return d
+
+
+_UPGRADERS = {1: _upgrade_v1}
+
+
+# ---------------------------------------------------------------------------
 # dict <-> dataclass plumbing (strict: unknown keys are errors)
 # ---------------------------------------------------------------------------
 def _to_dict(spec) -> Dict[str, Any]:
@@ -405,6 +530,15 @@ def _to_dict(spec) -> Dict[str, Any]:
     return out
 
 
+# int-keyed dict fields (JSON stringifies keys; from_dict coerces back):
+# (owner class, field name) -> value coercion
+_INT_KEY_DICTS = {
+    ("ControllerSpec", "straggler"): float,
+    ("FaultSpec", "worker_crash"): int,
+    ("FaultSpec", "straggler_spike"): float,
+}
+
+
 def _from_dict(cls, d: Dict[str, Any], path: str):
     fields = {f.name: f for f in dataclasses.fields(cls)}
     unknown = sorted(set(d) - set(fields))
@@ -417,20 +551,20 @@ def _from_dict(cls, d: Dict[str, Any], path: str):
         if name not in d:
             continue
         v = d[name]
+        val_t = _INT_KEY_DICTS.get((cls.__name__, name))
         if dataclasses.is_dataclass(f.type):
             _check(isinstance(v, dict), f"{path}.{name}",
                    f"expected a JSON object, got {type(v).__name__}")
             v = _from_dict(f.type, v, f"{path}.{name}")
-        elif cls is ControllerSpec and name == "straggler" and v is not None:
+        elif val_t is not None and v is not None:
             _check(isinstance(v, dict), f"{path}.{name}",
                    f"expected a JSON object, got {type(v).__name__}")
             try:
-                v = {int(k): float(vv) for k, vv in v.items()}
+                v = {int(k): val_t(vv) for k, vv in v.items()}
             except (TypeError, ValueError):
                 raise SpecError(
-                    f"{path}.{name}: keys must be worker ids (ints), "
-                    f"values slowdown multipliers (floats); got {v!r}"
-                ) from None
+                    f"{path}.{name}: keys must be ints, values "
+                    f"{val_t.__name__}s; got {v!r}") from None
         kwargs[name] = v
     return cls(**kwargs)
 
@@ -475,15 +609,17 @@ def coerce_value(value: Any, ftype, path: str) -> Any:
             return None
         ftype = inner[0] if len(inner) == 1 else str
         origin = getattr(ftype, "__origin__", None)
-    if origin is dict:   # controller.straggler: "2:1.5,3:1.2" or a dict
+    if origin is dict:   # e.g. controller.straggler: "2:1.5,3:1.2" or a dict
+        dict_args = getattr(ftype, "__args__", ())
+        val_t = dict_args[1] if len(dict_args) == 2 else float
         if isinstance(value, dict):
-            return {int(k): float(v) for k, v in value.items()}
+            return {int(k): val_t(v) for k, v in value.items()}
         try:
-            return {int(k): float(v) for k, v in
+            return {int(k): val_t(v) for k, v in
                     (part.split(":") for part in str(value).split(","))}
         except ValueError:
             raise SpecError(
-                f"{path}: expected 'worker:mult[,worker:mult...]', "
+                f"{path}: expected 'key:value[,key:value...]', "
                 f"got {value!r}") from None
     if ftype is bool:
         if isinstance(value, bool):

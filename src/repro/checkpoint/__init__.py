@@ -1,6 +1,7 @@
-from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
-                                         save_checkpoint)
+from repro.checkpoint.checkpoint import (CheckpointManager, latest_index,
+                                         load_checkpoint, save_checkpoint)
 from repro.checkpoint.elastic import elastic_restore
+from repro.checkpoint.safepoint import SafepointManager
 
 __all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
-           "elastic_restore"]
+           "latest_index", "elastic_restore", "SafepointManager"]

@@ -104,6 +104,22 @@ def _verify(ckdir: str) -> Optional[Dict[str, Any]]:
     return index
 
 
+def latest_index(path: str, step: Optional[int] = None
+                 ) -> Optional[Dict[str, Any]]:
+    """Index of the newest *complete* checkpoint (or of ``step`` if given
+    and complete) without loading any tensor data — the resume path reads
+    this first to learn the stage count/layout it must build templates
+    for.  Returns None when no complete checkpoint exists."""
+    cands = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    if step is not None:
+        cands = [d for d in cands if d == f"step_{step:08d}"] or cands
+    for d in reversed(cands):
+        index = _verify(os.path.join(path, d))
+        if index is not None:
+            return index
+    return None
+
+
 def load_checkpoint(path: str, templates: Tuple[Any, Any, Any],
                     step: Optional[int] = None):
     """Load (params, opt_state, dyn) matching the given templates.

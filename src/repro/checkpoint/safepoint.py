@@ -1,0 +1,98 @@
+"""Safe-point checkpoints: everything a crashed trainer needs to resume
+bit-identically (DESIGN.md §12).
+
+A *safe point* extends the ordinary checkpoint shards (params + optimizer +
+dynamism state, atomically published via write-temp-then-rename) with the
+run's control-plane state in the index metadata:
+
+  * the producing ``RunSpec`` (as a dict — ``Session.resume`` rebuilds the
+    whole run from the checkpoint alone, no side-channel config);
+  * the step, stage count, layer split, and stage→worker map;
+  * the worker-pool topology (in-process pools directly; file-backed pools
+    via the manager's own ``state.json`` journal);
+  * autoscaler hysteresis state and the controller's repack latch.
+
+Data-loader position and LR schedule are pure functions of (spec, step),
+so restoring ``step`` restores them; model/optimizer tensors restore
+bit-exactly from the npz shards.  ``Session.resume(dir)`` therefore
+replays the exact trajectory the uninterrupted run would have taken.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional
+
+from repro.checkpoint.checkpoint import (latest_index, load_checkpoint,
+                                         save_checkpoint)
+
+
+class SafepointManager:
+    """Periodic safe points under ``path``; keeps the newest ``keep``."""
+
+    def __init__(self, path: str, every: int, keep: int = 3):
+        assert every > 0
+        self.path, self.every, self.keep = path, every, keep
+        self.saved: List[str] = []
+        os.makedirs(path, exist_ok=True)
+
+    def due(self, step: int) -> bool:
+        return (step + 1) % self.every == 0
+
+    def save(self, step: int, state, *, spec, engine,
+             scaler=None, repack_enabled: Optional[bool] = None,
+             jm_dir: Optional[str] = None) -> str:
+        """Write the safe point for a fully-completed ``step``."""
+        pool_state = None
+        if engine.pool is not None:
+            pool_state = engine.pool.state_dict()
+        elif jm_dir is not None:
+            # file-backed manager: the authoritative pool lives in the
+            # server process; its journal (written before every response)
+            # is exactly the topology we need
+            sp = os.path.join(jm_dir, "state.json")
+            if os.path.exists(sp):
+                try:
+                    with open(sp) as f:
+                        pool_state = json.load(f)["pool"]
+                except (json.JSONDecodeError, OSError, KeyError):
+                    pool_state = None
+        meta: Dict[str, Any] = {
+            "kind": "safepoint",
+            "spec": spec.to_dict(),
+            "step": step,
+            "stage_workers": [int(w) for w in engine.stage_workers],
+            "epoch": int(engine.epoch),
+            "pool": pool_state,
+            "scaler": scaler.state_dict() if scaler is not None else None,
+            "repack_enabled": repack_enabled,
+        }
+        out = save_checkpoint(self.path, step, state.params, state.opt_state,
+                              state.dyn, state.lps, extra_meta=meta)
+        self.saved.append(out)
+        self._gc()
+        return out
+
+    def _gc(self) -> None:
+        cands = sorted(d for d in os.listdir(self.path)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in cands[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, d), ignore_errors=True)
+
+
+def peek(path: str, step: Optional[int] = None) -> Dict[str, Any]:
+    """Index (with safepoint meta) of the newest complete safe point."""
+    idx = latest_index(path, step)
+    if idx is None:
+        raise FileNotFoundError(f"no complete safe point under {path}")
+    if idx.get("meta", {}).get("kind") != "safepoint":
+        raise ValueError(
+            f"checkpoint under {path} is not a safe point (plain "
+            f"checkpoints lack the control-plane state resume needs)")
+    return idx
+
+
+def restore(path: str, templates, step: Optional[int] = None):
+    """(params, opt_state, dyn, index) for the newest complete safe point."""
+    return load_checkpoint(path, templates, step)

@@ -93,6 +93,44 @@ class Autoscaler:
         self._last_grow_attempt: Optional[int] = None
         self.decisions: List[ScaleDecision] = []
 
+    # -- persistence (Session safepoints, DESIGN.md §12) -------------------
+    def state_dict(self) -> dict:
+        """Hysteresis state for crash-safe resume: a resumed run must make
+        the same decisions the uninterrupted run would have (cooldown
+        anchors, streaks, and best-throughput baselines all carry over).
+        ``decisions`` stays out — it is report telemetry, not policy state."""
+        return {
+            "times": list(self._times),
+            "known_failed": sorted(self._known_failed),
+            "pending_recovered": sorted(self._pending_recovered),
+            "pending_evict": sorted(self._pending_evict),
+            "bad_shrink_sizes": sorted(self._bad_shrink_sizes),
+            "best_per_worker": self._best_per_worker,
+            "best_total": self._best_total,
+            "low_streak": self._low_streak,
+            "slow_streak": self._slow_streak,
+            "pressure_streak": self._pressure_streak,
+            "drain_streak": self._drain_streak,
+            "last_resize_step": self._last_resize_step,
+            "last_grow_attempt": self._last_grow_attempt,
+        }
+
+    def load_state(self, sd: dict) -> None:
+        self._times.clear()
+        self._times.extend(float(t) for t in sd["times"])
+        self._known_failed = set(sd["known_failed"])
+        self._pending_recovered = set(sd["pending_recovered"])
+        self._pending_evict = set(sd["pending_evict"])
+        self._bad_shrink_sizes = set(sd["bad_shrink_sizes"])
+        self._best_per_worker = float(sd["best_per_worker"])
+        self._best_total = float(sd["best_total"])
+        self._low_streak = int(sd["low_streak"])
+        self._slow_streak = int(sd["slow_streak"])
+        self._pressure_streak = int(sd["pressure_streak"])
+        self._drain_streak = int(sd["drain_streak"])
+        self._last_resize_step = sd["last_resize_step"]
+        self._last_grow_attempt = sd["last_grow_attempt"]
+
     # -- lifecycle hooks ---------------------------------------------------
     def note_resize(self, step: int, stages: int) -> None:
         """The world changed (any cause): reset the throughput window and

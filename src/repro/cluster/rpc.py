@@ -20,18 +20,80 @@ atomically published via write-to-temp + ``os.replace`` so a reader never
 observes a partial file.  Ops: ``status | release | request | fail |
 shutdown``.  Every response carries the manager's view of the pool
 (``active`` count) so the client can mirror it without extra round trips.
+
+Failure model (DESIGN.md §12): the sequence number IS the idempotency key.
+The client retries a timed-out call by re-publishing the SAME ``req-<seq>``
+with exponential backoff + seeded jitter; the server journals every
+executed response (plus the pool state it produced) into ``state.json``
+*before* publishing it, so a retry — or a freshly respawned server after a
+``kill -9`` — re-serves the stored response instead of re-executing the
+op.  When the whole retry budget burns, ``JobManagerUnavailable`` (a
+``TimeoutError``) surfaces and a client-side circuit breaker opens: calls
+fail fast (training continues without scaling decisions) with a periodic
+probe so a revived manager is rediscovered.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import random
 import subprocess
 import sys
 import time
-from typing import List, Optional, Protocol, Sequence, runtime_checkable
+from typing import Dict, List, Optional, Protocol, Sequence, \
+    runtime_checkable
 
 from repro.runtime.fault_tolerance import WorkerPool
+
+
+class JobManagerUnavailable(TimeoutError):
+    """The manager did not answer within the retry budget (or the circuit
+    breaker is open).  Subclasses ``TimeoutError`` so callers that handled
+    the raw timeout keep working; the elastic engine catches it and
+    degrades — no scaling decision, training continues."""
+
+
+class CircuitBreaker:
+    """Count-based breaker (deterministic — no wall-clock cool-off): after
+    ``trip_after`` consecutive call failures the circuit opens and calls
+    fail fast; every ``probe_every``-th blocked call is let through as a
+    probe, and one success closes the circuit again."""
+
+    def __init__(self, trip_after: int = 2, probe_every: int = 4):
+        self.trip_after = max(1, trip_after)
+        self.probe_every = max(1, probe_every)
+        self.failures = 0
+        self.trips = 0
+        self.fast_fails = 0
+        self._blocked_since_probe = 0
+
+    @property
+    def open(self) -> bool:
+        return self.failures >= self.trip_after
+
+    def allow(self) -> bool:
+        if not self.open:
+            return True
+        self._blocked_since_probe += 1
+        if self._blocked_since_probe >= self.probe_every:
+            self._blocked_since_probe = 0
+            return True                   # probe
+        self.fast_fails += 1
+        return False
+
+    def success(self) -> None:
+        self.failures = 0
+        self._blocked_since_probe = 0
+
+    def failure(self) -> None:
+        self.failures += 1
+        if self.failures == self.trip_after:
+            self.trips += 1
+
+    def state_dict(self) -> dict:
+        return {"failures": self.failures, "trips": self.trips,
+                "fast_fails": self.fast_fails}
 
 
 @runtime_checkable
@@ -105,10 +167,16 @@ class FileJobManager:
     the transport stays trivially debuggable (``ls`` the directory)."""
 
     def __init__(self, root: str, timeout_s: float = 30.0,
-                 poll_s: float = 0.01):
+                 poll_s: float = 0.01, *, retries: int = 3,
+                 backoff_s: float = 0.05, jitter_seed: int = 0,
+                 breaker_after: int = 2, breaker_probe_every: int = 4):
         self.root = root
-        self.timeout_s = timeout_s
+        self.timeout_s = timeout_s       # TOTAL budget, split over retries
         self.poll_s = poll_s
+        self.retries = max(1, retries)
+        self.backoff_s = backoff_s
+        self._jitter = random.Random(jitter_seed)
+        self.breaker = CircuitBreaker(breaker_after, breaker_probe_every)
         # start past any leftover req/resp files (a reused directory):
         # colliding with a previous run's sequence numbers would read its
         # stale responses as answers to our requests
@@ -123,27 +191,69 @@ class FileJobManager:
                     pass
         self._active: Optional[int] = None
         self.log: List[str] = []        # client-side mirror of transitions
+        self.rpc_stats: Dict[str, int] = {"calls": 0, "retries": 0,
+                                          "timeouts": 0}
+
+    # -- transport hooks (ChaosFileJobManager overrides these) -------------
+    def _send(self, req_path: str, obj: dict, attempt: int) -> None:
+        _atomic_write_json(req_path, obj)
+
+    def _await(self, resp_path: str, deadline: float, attempt: int) -> dict:
+        while not os.path.exists(resp_path):
+            if time.monotonic() > deadline:
+                raise TimeoutError(resp_path)
+            time.sleep(self.poll_s)
+        return _read_json(resp_path)
 
     def _call(self, op: str, **payload) -> dict:
+        if not self.breaker.allow():
+            raise JobManagerUnavailable(
+                f"job manager circuit open ({self.breaker.failures} "
+                f"consecutive failures): {op} skipped")
         self._seq += 1
         seq = self._seq
+        self.rpc_stats["calls"] += 1
         req = os.path.join(self.root, f"req-{seq:06d}.json")
         resp = os.path.join(self.root, f"resp-{seq:06d}.json")
-        _atomic_write_json(req, {"op": op, **payload})
-        deadline = time.monotonic() + self.timeout_s
-        while not os.path.exists(resp):
-            if time.monotonic() > deadline:
-                raise TimeoutError(
-                    f"job manager did not answer {op} (req {seq}) within "
-                    f"{self.timeout_s}s — is the server process running on "
-                    f"{self.root!r}?")
-            time.sleep(self.poll_s)
-        out = _read_json(resp)
-        if "active" in out:
-            self._active = int(out["active"])
-        if out.get("error"):
-            raise RuntimeError(f"job manager rejected {op}: {out['error']}")
-        return out
+        obj = {"op": op, "seq": seq, **payload}
+        per_attempt = self.timeout_s / self.retries
+        for attempt in range(self.retries):
+            # retries re-publish the SAME sequence number: the server
+            # dedups on it, so a retried-but-actually-executed op is
+            # answered from its journal, never run twice
+            self._send(req, obj, attempt)
+            try:
+                out = self._await(resp,
+                                  time.monotonic() + per_attempt, attempt)
+            except TimeoutError:
+                self.rpc_stats["timeouts"] += 1
+                if attempt + 1 < self.retries:
+                    self.rpc_stats["retries"] += 1
+                    # exponential backoff with seeded jitter: deterministic
+                    # per client, still decorrelated across clients
+                    time.sleep(self.backoff_s * (2 ** attempt)
+                               * (1.0 + self._jitter.random()))
+                continue
+            self.breaker.success()
+            if "active" in out:
+                self._active = int(out["active"])
+            if out.get("error"):
+                raise RuntimeError(
+                    f"job manager rejected {op}: {out['error']}")
+            return out
+        # withdraw the request before giving up: a server that comes back
+        # later must not execute an op whose caller already moved on (a
+        # stale ``request`` would leak its grant).  Best-effort — if the
+        # server is mid-execution the journal dedup still applies.
+        try:
+            os.unlink(req)
+        except OSError:
+            pass
+        self.breaker.failure()
+        raise JobManagerUnavailable(
+            f"job manager did not answer {op} (req {seq}) within "
+            f"{self.timeout_s}s across {self.retries} attempts — is the "
+            f"server process running on {self.root!r}?")
 
     # -- JobManagerClient --------------------------------------------------
     def release(self, workers: Sequence[int]) -> List[int]:
@@ -164,8 +274,14 @@ class FileJobManager:
 
     @property
     def num_active(self) -> int:
+        """Last-known active count; -1 when the manager has never answered
+        and is currently unreachable (telemetry must not raise in degraded
+        mode — scaling decisions use the RPC ops, not this)."""
         if self._active is None:
-            self._call("status")
+            try:
+                self._call("status")
+            except JobManagerUnavailable:
+                return -1
         return int(self._active)
 
     def close(self) -> None:
@@ -182,24 +298,52 @@ class FileJobManager:
 
 
 def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
-                       idle_timeout_s: Optional[float] = None) -> WorkerPool:
+                       idle_timeout_s: Optional[float] = None,
+                       spares: int = 0) -> WorkerPool:
     """Serve one ``WorkerPool`` over the file protocol until a ``shutdown``
     request (or ``idle_timeout_s`` with no traffic).  Runs in its own
     process in tests/CI; returns the final pool for inspection when called
-    in-process."""
-    pool = WorkerPool(workers)
-    done: set = set()
+    in-process.
+
+    Crash-safety: before publishing any response the server journals
+    ``{pool state, answered responses}`` into ``state.json`` (atomic
+    replace).  A respawned server on the same directory restores the pool
+    exactly where the dead one left it and re-serves journaled responses
+    for retried sequence numbers — ops are executed at most once even
+    across a ``kill -9`` (DESIGN.md §12)."""
+    state_path = os.path.join(root, "state.json")
+    answered: Dict[str, dict] = {}
+    pool: Optional[WorkerPool] = None
+    if os.path.exists(state_path):
+        try:
+            js = _read_json(state_path)
+            pool = WorkerPool.from_state(js["pool"])
+            answered = dict(js["answered"])
+        except (json.JSONDecodeError, OSError, KeyError):
+            pool = None                  # torn/old journal: start fresh
+    if pool is None:
+        pool = WorkerPool(workers, spares=spares)
+    done: set = set(answered)
     last_traffic = time.monotonic()
     while True:
         names = sorted(n for n in os.listdir(root)
                        if n.startswith("req-") and n.endswith(".json"))
         for name in names:
             seq = name[len("req-"):-len(".json")]
+            resp_path = os.path.join(root, f"resp-{seq}.json")
             if seq in done:
+                # a client retry after response loss: re-publish the
+                # journaled answer — the op itself is NOT re-executed
+                if not os.path.exists(resp_path) and seq in answered:
+                    _atomic_write_json(resp_path, answered[seq])
                 continue
-            if os.path.exists(os.path.join(root, f"resp-{seq}.json")):
+            if os.path.exists(resp_path):
                 done.add(seq)            # answered by a previous server
-                continue                 # process — never replay its ops
+                try:                     # keep it re-servable after resp
+                    answered[seq] = _read_json(resp_path)   # file loss
+                except (json.JSONDecodeError, OSError):
+                    pass
+                continue                 # — but never re-execute its op
             try:
                 req = _read_json(os.path.join(root, name))
             except (json.JSONDecodeError, OSError):
@@ -207,7 +351,7 @@ def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
             done.add(seq)
             last_traffic = time.monotonic()
             op = req.get("op")
-            out: dict = {"op": op}
+            out: dict = {"op": op, "seq": req.get("seq")}
             if op == "release":
                 out["released"] = [
                     int(w) for w in req["workers"] if w in pool.active]
@@ -221,7 +365,15 @@ def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
             else:
                 out["error"] = f"unknown op {op!r}"
             out["active"] = pool.num_active
-            _atomic_write_json(os.path.join(root, f"resp-{seq}.json"), out)
+            # journal BEFORE publishing: if we die in between, the respawn
+            # finds the executed op in the journal and re-serves it; if we
+            # die before journaling, the resp was never visible and the
+            # retried op re-executes against the pre-op pool state —
+            # either way the op takes effect exactly once
+            answered[seq] = out
+            _atomic_write_json(state_path, {"pool": pool.state_dict(),
+                                            "answered": answered})
+            _atomic_write_json(resp_path, out)
             if op == "shutdown":
                 return pool
         if (idle_timeout_s is not None
@@ -231,7 +383,8 @@ def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
 
 
 def spawn_file_manager(root: str, workers: int,
-                       idle_timeout_s: float = 300.0) -> subprocess.Popen:
+                       idle_timeout_s: float = 300.0,
+                       spares: int = 0) -> subprocess.Popen:
     """Start the file job manager as a separate process (the RPC actually
     crosses a process boundary).  The idle timeout is a safety net so an
     orphaned server never outlives its job by much."""
@@ -239,7 +392,7 @@ def spawn_file_manager(root: str, workers: int,
         [sys.executable, "-c",
          "from repro.cluster.rpc import main; main()", "--dir", root,
          "--workers", str(workers), "--idle-timeout",
-         str(idle_timeout_s)],
+         str(idle_timeout_s), "--spares", str(spares)],
         env={**os.environ,
              "PYTHONPATH": os.pathsep.join(
                  p for p in [os.environ.get("PYTHONPATH"),
@@ -255,9 +408,13 @@ def main() -> None:
     ap.add_argument("--workers", type=int, required=True)
     ap.add_argument("--poll", type=float, default=0.01)
     ap.add_argument("--idle-timeout", type=float, default=None)
+    ap.add_argument("--spares", type=int, default=0,
+                    help="fresh worker ids grantable beyond the released "
+                         "set (new processes, not revivals)")
     args = ap.parse_args()
     pool = serve_file_manager(args.dir, args.workers, poll_s=args.poll,
-                              idle_timeout_s=args.idle_timeout)
+                              idle_timeout_s=args.idle_timeout,
+                              spares=args.spares)
     print(f"job manager done: active={pool.num_active} "
           f"released={sorted(pool.released)} dead={sorted(pool.dead)}")
 

@@ -1,0 +1,12 @@
+"""Deterministic chaos engineering for the elastic runtime (DESIGN.md §12).
+
+``FaultSpec`` (on the RunSpec) -> ``resolve_plan`` -> ``FaultPlan`` ->
+``ChaosInjector`` firing scheduled faults into a live ``Session``; the
+``ChaosFileJobManager`` transport adds seeded RPC loss/dup/delay.
+"""
+from repro.faults.injector import (ChaosFileJobManager, ChaosInjector,
+                                   FaultRecord)
+from repro.faults.plan import FaultEvent, FaultPlan, resolve_plan
+
+__all__ = ["ChaosFileJobManager", "ChaosInjector", "FaultRecord",
+           "FaultEvent", "FaultPlan", "resolve_plan"]

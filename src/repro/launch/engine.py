@@ -30,7 +30,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.cluster.rpc import InProcessJobManager, JobManagerClient
+from repro.cluster.rpc import (InProcessJobManager, JobManagerClient,
+                               JobManagerUnavailable)
 from repro.configs.base import DistConfig, ModelConfig
 from repro.dynamics.config import DynamicsConfig
 from repro.launch.mesh import make_submesh
@@ -153,7 +154,24 @@ class ElasticEngine:
             self.jm = job_manager
             self.pool = pool
         self.stage_workers: List[int] = list(range(dcfg.num_stages))
-        self._worlds: Dict[int, EngineWorld] = {}
+        # worker id -> device column (a list of ``data`` devices).  Bound
+        # positionally at init; a worker GRANTED later under a never-seen
+        # id (the job manager provisioned a fresh process, not a revival)
+        # is bound to a free column on arrival — device discovery survives
+        # process-set changes instead of assuming id == device index.
+        S0 = dcfg.num_stages
+        assert len(self.devices) >= data * S0, (
+            f"need {data * S0} devices, have {len(self.devices)}")
+        self._columns: List[List[Any]] = [
+            [self.devices[d * S0 + s] for d in range(data)]
+            for s in range(S0)]
+        self.worker_column: Dict[int, int] = {w: w for w in range(S0)}
+        self._worlds: Dict[Any, EngineWorld] = {}
+        # ops the job manager must eventually hear about, queued while it
+        # is unreachable (degraded mode: training continues, bookkeeping
+        # catches up when the manager comes back)
+        self._pending_jm: List[Any] = []
+        self.degraded_events: List[str] = []
         self.resizes: List[ResizeEvent] = []
         self.last_shrink_step: Optional[int] = None
         # world epoch: bumped by every resize; the control plane fences
@@ -181,18 +199,105 @@ class ElasticEngine:
     def ticks(self, stages: int) -> int:
         return self.shapes.num_micro + stages - 1
 
-    def world(self, stages: int) -> EngineWorld:
-        w = self._worlds.get(stages)
+    def _devices_for(self, workers: Sequence[int]) -> List[Any]:
+        """Flat (data-major) device list for a worker list: stage s runs on
+        worker ``workers[s]``'s bound column."""
+        cols = [self._columns[self.worker_column[w]] for w in workers]
+        return [cols[s][d] for d in range(self.data)
+                for s in range(len(workers))]
+
+    def _bind_new_workers(self, granted: Sequence[int]
+                          ) -> tuple:
+        """Bind device columns for granted workers.  Known ids keep their
+        binding; NEVER-seen ids (the manager provisioned a fresh process)
+        get a free column.  Returns (accepted, rejected) — a grant with no
+        free hardware column behind it cannot be executed and must go back
+        to the manager."""
+        used = {self.worker_column[w] for w in self.stage_workers
+                if w in self.worker_column}
+        accepted: List[int] = []
+        rejected: List[int] = []
+        for w in granted:
+            col = self.worker_column.get(w)
+            if col is not None and col not in used:
+                used.add(col)
+                accepted.append(w)
+                continue
+            # unknown id — or a stale binding whose column was re-assigned
+            # while this worker was away: (re-)bind to a free column
+            free = [c for c in range(len(self._columns)) if c not in used]
+            if not free:
+                rejected.append(w)
+                continue
+            self.worker_column[w] = free[0]
+            used.add(free[0])
+            accepted.append(w)
+        return accepted, rejected
+
+    def bind_workers(self, workers: Sequence[int]) -> None:
+        """Adopt a restored stage→worker map (checkpoint resume): workers
+        are bound to columns positionally, replacing the init bindings."""
+        assert len(workers) <= len(self._columns)
+        self.stage_workers = list(workers)
+        for s, w in enumerate(self.stage_workers):
+            self.worker_column[w] = s
+
+    def world(self, stages: int,
+              workers: Optional[Sequence[int]] = None) -> EngineWorld:
+        if workers is None:
+            workers = self.stage_workers[:stages]
+        assert len(workers) == stages, (workers, stages)
+        devs = self._devices_for(workers)
+        key = (stages, tuple(d.id for d in devs))
+        w = self._worlds.get(key)
         if w is None:
             dcfg = self.dcfg_for(stages)
-            mesh = make_submesh(self.data, stages, devices=self.devices)
+            mesh = make_submesh(self.data, stages, devices=devs)
             init_opt, step_fn = make_train_step(
                 self.cfg, dcfg, self.dyncfg, mesh, self.shapes, self.opt_cfg)
             w = EngineWorld(stages=stages, dcfg=dcfg, mesh=mesh,
                             init_opt=init_opt,
                             step=jax.jit(step_fn, donate_argnums=(0, 1)))
-            self._worlds[stages] = w
+            self._worlds[key] = w
         return w
+
+    # -- degraded-mode job-manager calls (DESIGN.md §12) -------------------
+    def _flush_pending_jm(self) -> bool:
+        """Replay queued release/fail bookkeeping in order; True when the
+        queue drained (manager reachable again)."""
+        while self._pending_jm:
+            kind, arg = self._pending_jm[0]
+            try:
+                if kind == "release":
+                    self.jm.release(arg)
+                else:
+                    self.jm.fail(arg)
+            except JobManagerUnavailable:
+                return False
+            self._pending_jm.pop(0)
+            self.degraded_events.append(f"replayed {kind}:{arg}")
+        return True
+
+    def _jm_release(self, workers: Sequence[int]) -> None:
+        workers = list(workers)
+        if self._flush_pending_jm():
+            try:
+                self.jm.release(workers)
+                return
+            except JobManagerUnavailable:
+                pass
+        self._pending_jm.append(("release", workers))
+        self.degraded_events.append(f"release deferred: {workers}")
+
+    def _jm_fail(self, worker: int) -> None:
+        if self._flush_pending_jm():
+            try:
+                self.jm.fail(worker)
+                return
+            except JobManagerUnavailable:
+                pass
+        self._pending_jm.append(("fail", worker))
+        self.degraded_events.append(f"fail deferred: {worker}")
 
     # -- placement ---------------------------------------------------------
     def _place(self, world: EngineWorld, params, opt_state, dyn, assignment,
@@ -223,14 +328,21 @@ class ElasticEngine:
 
     # -- lifecycle ---------------------------------------------------------
     def init_state(self, rng: jax.Array, *, with_opt: bool = True,
-                   with_cache: bool = False) -> EngineState:
+                   with_cache: bool = False, stages: Optional[int] = None,
+                   lps: Optional[Sequence[int]] = None) -> EngineState:
         """``with_opt=False`` skips the optimizer (serving: no moments);
         ``with_cache=True`` allocates the stacked decode KV cache from the
-        engine's shapes (requires ``shapes.cache_len > 0``)."""
-        stages = self.base_dcfg.num_stages
+        engine's shapes (requires ``shapes.cache_len > 0``).  ``stages`` /
+        ``lps`` override the base world — the checkpoint-resume path builds
+        templates at the stage count the run died at, not at the spec's
+        maximum.  When ``stages`` is given the caller must have bound the
+        matching workers first (``bind_workers``)."""
+        stages = stages if stages is not None else self.base_dcfg.num_stages
         world = self.world(stages)
         params = M.init_params(rng, self.cfg, world.dcfg)
-        assignment = M.make_assignment(self.cfg, world.dcfg)
+        lps = (list(lps) if lps is not None
+               else M.uniform_boundaries(self.cfg.total_blocks(), stages))
+        assignment = M.make_assignment(self.cfg, world.dcfg, lps)
         dyn = M.init_dyn(self.cfg, world.dcfg, self.dyncfg)
         opt_state = world.init_opt(params) if with_opt else None
         cache = None
@@ -238,7 +350,6 @@ class ElasticEngine:
             assert self.shapes.cache_len > 0, "shapes.cache_len required"
             cache = M.init_cache(self.cfg, world.dcfg, self.shapes.num_micro,
                                  self.shapes.mb_global, self.shapes.cache_len)
-        lps = M.uniform_boundaries(self.cfg.total_blocks(), stages)
         params, opt_state, dyn, assignment, cache = self._place(
             world, params, opt_state, dyn, assignment, cache)
         return EngineState(params, opt_state, dyn, assignment, lps, stages,
@@ -367,7 +478,8 @@ class ElasticEngine:
 
     # -- live resize -------------------------------------------------------
     def resize(self, state: EngineState, new_stages: int,
-               new_lps: Optional[Sequence[int]] = None) -> EngineState:
+               new_lps: Optional[Sequence[int]] = None,
+               workers: Optional[Sequence[int]] = None) -> EngineState:
         """Reshape all stage-keyed state to ``new_stages`` and place it onto
         that world's submesh — no checkpoint, no restart, no host round-trip.
         A serving cache rides the same re-split plan (its [S, L_max] leading
@@ -376,7 +488,7 @@ class ElasticEngine:
         when ``new_lps`` violates the target world's slot capacity."""
         from repro.checkpoint.elastic import (_resplit_stage_tree,
                                               elastic_restore)
-        world = self.world(new_stages)
+        world = self.world(new_stages, workers)
         if new_lps is not None and (
                 len(new_lps) != new_stages
                 or max(new_lps) > world.dcfg.slots_for(self.cfg)):
@@ -404,7 +516,7 @@ class ElasticEngine:
         new_state = self.resize(state, target_stages, new_lps)
         released = self.stage_workers[target_stages:]
         self.stage_workers = self.stage_workers[:target_stages]
-        self.jm.release(released)
+        self._jm_release(released)
         self.resizes.append(ResizeEvent(
             step=step, kind="shrink", from_stages=state.stages,
             to_stages=target_stages, workers=list(released),
@@ -426,11 +538,13 @@ class ElasticEngine:
         target = len(self.stage_workers) - len(lost)
         assert target >= 1, "cannot evict every worker"
         t0 = time.perf_counter()
-        new_state = self.resize(state, target)
-        self.stage_workers = [w for w in self.stage_workers
-                              if w not in set(lost)]
+        survivors = [w for w in self.stage_workers if w not in set(lost)]
+        # the new world runs on the SURVIVORS' devices (the dead workers'
+        # hardware is gone) — not on a positional device prefix
+        new_state = self.resize(state, target, workers=survivors)
+        self.stage_workers = survivors
         for w in lost:
-            self.jm.fail(w)
+            self._jm_fail(w)
         self.resizes.append(ResizeEvent(
             step=step, kind="evict", from_stages=state.stages,
             to_stages=target, workers=list(lost),
@@ -444,13 +558,33 @@ class ElasticEngine:
              step: int = -1) -> EngineState:
         """Re-expansion: request workers back from the pool and rebuild the
         pipeline over the larger device subset.  Grows by however many the
-        pool actually grants (possibly zero)."""
+        pool actually grants (possibly zero).  An unreachable manager
+        degrades to "no grant, training continues"; a granted id with no
+        free device column behind it is handed back."""
         t0 = time.perf_counter()
-        granted = self.jm.request(n_workers)
+        self._flush_pending_jm()
+        try:
+            granted = self.jm.request(n_workers)
+            if not granted and self._pending_jm and self._flush_pending_jm():
+                # the request got through, so the manager is back — but its
+                # pool hadn't heard our deferred releases yet (the breaker
+                # blocked the flush, the request was the probe that closed
+                # it).  Bookkeeping is settled now; ask once more.
+                granted = self.jm.request(n_workers)
+        except JobManagerUnavailable:
+            self.degraded_events.append(
+                f"grow denied at step {step}: manager unreachable")
+            return state
+        granted, rejected = self._bind_new_workers(granted)
+        if rejected:
+            self.degraded_events.append(
+                f"grant rejected (no free device column): {rejected}")
+            self._jm_release(rejected)
         if not granted:
             return state
         target = state.stages + len(granted)
-        new_state = self.resize(state, target)
+        new_state = self.resize(state, target,
+                                workers=self.stage_workers + granted)
         self.stage_workers = self.stage_workers + granted
         self.resizes.append(ResizeEvent(
             step=step, kind="grow", from_stages=state.stages,

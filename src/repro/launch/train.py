@@ -105,13 +105,22 @@ def main(argv=None):
         description="DynMo trainer (config-first: --config RUN.JSON; "
                     "flags below override spec fields)")
     add_config_args(ap)
+    ap.add_argument("--resume", default=None, metavar="CKPT_DIR",
+                    help="resume from the newest safe point in this "
+                         "directory; the safe point carries the producing "
+                         "RunSpec, so every other flag is ignored")
     add_alias_flags(ap, TRAIN_ALIASES)
     add_spec_flags(ap)
     args = ap.parse_args(argv)
-    spec = build_spec(args, TRAIN_ALIASES, cli_defaults=TRAIN_CLI_DEFAULTS)
-    if maybe_dump(args, spec):
-        return
-    with Session(spec) as s:
+    if args.resume:
+        sess = Session.resume(args.resume)
+    else:
+        spec = build_spec(args, TRAIN_ALIASES,
+                          cli_defaults=TRAIN_CLI_DEFAULTS)
+        if maybe_dump(args, spec):
+            return
+        sess = Session(spec)
+    with sess as s:
         out = s.train()
     ctl = out["controller"]
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "

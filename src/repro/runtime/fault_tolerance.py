@@ -132,15 +132,25 @@ class StragglerDetector:
 @dataclasses.dataclass
 class WorkerPool:
     """Job-manager facing pool (k8s/ECK stand-in).  DynMo's re-packing calls
-    ``release``; failures call ``fail``; elastic growth calls ``request``."""
+    ``release``; failures call ``fail``; elastic growth calls ``request``.
+
+    ``spares`` models the cluster provisioning *fresh* machines: when a
+    ``request`` cannot be met from previously released workers, up to
+    ``spares`` brand-new worker ids (never seen before — a NEW process, not
+    a revived one) are minted.  The engine must treat such ids as unknown
+    hardware and bind devices for them (DESIGN.md §12)."""
     total: int
     active: Optional[Set[int]] = None
+    spares: int = 0
 
     def __post_init__(self):
         if self.active is None:
             self.active = set(range(self.total))
         self.released: Set[int] = set()
         self.dead: Set[int] = set()
+        self.provisioned: Set[int] = set()
+        self._next_id = (max(self.active) + 1 if self.active
+                         else self.total)
         self.log: List[str] = []
         self._hooks: List[Callable[[str, int], None]] = []
 
@@ -184,8 +194,36 @@ class WorkerPool:
             self.released.discard(w)
             self.active.add(w)
             self._notify("grant", w)
+        # released workers exhausted: provision fresh machines from the
+        # spare budget — each arrives as a NEVER-seen worker id
+        while len(grant) < n and len(self.provisioned) < self.spares:
+            w = self._next_id
+            self._next_id += 1
+            self.provisioned.add(w)
+            self.active.add(w)
+            grant.append(w)
+            self._notify("grant", w)
         return grant
 
     @property
     def num_active(self) -> int:
         return len(self.active)
+
+    # -- persistence (job-manager journal / trainer safe points) -----------
+    def state_dict(self) -> dict:
+        return {"total": self.total, "spares": self.spares,
+                "active": sorted(self.active),
+                "released": sorted(self.released),
+                "dead": sorted(self.dead),
+                "provisioned": sorted(self.provisioned),
+                "next_id": self._next_id}
+
+    @classmethod
+    def from_state(cls, sd: dict) -> "WorkerPool":
+        pool = cls(int(sd["total"]), active=set(sd["active"]),
+                   spares=int(sd.get("spares", 0)))
+        pool.released = set(sd["released"])
+        pool.dead = set(sd["dead"])
+        pool.provisioned = set(sd.get("provisioned", []))
+        pool._next_id = int(sd["next_id"])
+        return pool

@@ -31,6 +31,12 @@ class Request:
     admitted: int = -1
     finished: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # fault recovery (DESIGN.md §12): tokens generated before the lane's
+    # KV was lost to a worker crash.  Re-admission treats prompt+carried as
+    # an extended prompt — prefill plus teacher-forced replay rebuilds the
+    # KV line, and decoding resumes exactly where the crash cut it off
+    carried: List[int] = dataclasses.field(default_factory=list)
+    requeues: int = 0
 
     @property
     def plen(self) -> int:
@@ -58,6 +64,11 @@ class RequestQueue:
 
     def pop(self) -> Optional[Request]:
         return self.pending.popleft() if self.pending else None
+
+    def push_front(self, r: Request) -> None:
+        """Requeue an evicted in-flight request ahead of ordinary arrivals —
+        it already waited its turn once."""
+        self.pending.appendleft(r)
 
     @property
     def depth(self) -> int:

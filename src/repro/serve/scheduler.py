@@ -33,6 +33,7 @@ on (see DESIGN.md §10).
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -78,6 +79,12 @@ class Scheduler:
         self.gen_budget = np.zeros(n, np.int64)
         self.live: Dict[int, Request] = {}
         self.completions: List[Request] = []
+        # teacher-forced replay (requeued lanes, DESIGN.md §12): known
+        # tokens still to feed through decode to rebuild the KV line; while
+        # a lane replays, decode emissions are ignored — the model's
+        # predictions are only recorded once it reaches unseen positions
+        self.replay: Dict[int, deque] = {}
+        self.requeued_total = 0
 
     # -- signals (autoscaler food) ----------------------------------------
     @property
@@ -107,29 +114,59 @@ class Scheduler:
             lane = self.slots.alloc(r.rid)
             # admission owns the runtime fields: serving the same Request
             # objects through a second run must not append onto the first
-            # run's token stream
+            # run's token stream.  A requeued request re-enters with its
+            # already-generated tokens as ``carried`` — prompt+carried is
+            # the effective prompt whose KV this admission rebuilds
             r.admitted = tick
             r.finished = -1
-            r.tokens = []
+            r.tokens = list(r.carried)
             mi, bi = self.slots.unravel(lane)
-            toks[mi, bi, :r.plen] = r.prompt
+            pl = min(r.plen, self.prompt_len)
+            toks[mi, bi, :pl] = r.prompt[:pl]
             mask[mi, bi] = True
             self.live[lane] = r
             # the cache line bounds how far the lane can decode: token g
             # is written at plen - 2 + g, which must stay < cache_len
+            # (carried tokens were generated under that same budget, so a
+            # requeued lane's replay always fits)
             self.gen_budget[lane] = min(r.gen,
                                         self.cache_len - r.plen + 1)
-            self.gen_done[lane] = 0
-            # next-decode position is plen-1 either way: full-length lanes
-            # take token 1 from the prefill argmax (``_record`` advances
-            # them to plen), shorter prompts bootstrap by re-feeding their
-            # last prompt token there (the decode re-writes that position's
-            # KV with identical values and emits token 1)
-            self.pos[lane] = r.plen - 1
-            if r.plen == self.prompt_len:
-                full.append(lane)
+            self.gen_done[lane] = len(r.carried)
+            if r.carried:
+                # requeued lane: rebuild the KV line with the SAME ops
+                # that originally produced it — the prefill covers the
+                # prompt only, and every carried token is teacher-forced
+                # through decode (note_decode feeds the known tokens and
+                # ignores emissions until the replay drains).  Rebuilding
+                # carried positions via prefill would be ULP-different
+                # from the decode that first wrote them, and a near-tie
+                # argmax downstream can flip — losing token identity.
+                if r.plen >= self.prompt_len:
+                    # original run took token 1 from the prefill argmax;
+                    # resume at its first decode: feed token 1 at plen
+                    self.pos[lane] = r.plen
+                    self.cur_tok[lane] = int(r.carried[0])
+                    rest = r.carried[1:]
+                else:
+                    # resume at the bootstrap decode (re-feed the last
+                    # prompt token at plen-1, exactly like admission did)
+                    self.pos[lane] = r.plen - 1
+                    self.cur_tok[lane] = int(r.prompt[r.plen - 1])
+                    rest = r.carried
+                if rest:
+                    self.replay[lane] = deque(int(t) for t in rest)
             else:
-                self.cur_tok[lane] = int(r.prompt[-1])
+                # next-decode position is plen-1 either way: full-length
+                # lanes take their next token from the prefill argmax
+                # (``_record`` advances them), shorter prompts bootstrap by
+                # re-feeding their last token there (the decode re-writes
+                # that position's KV with identical values and emits the
+                # next token)
+                self.pos[lane] = r.plen - 1
+                if r.plen >= self.prompt_len:
+                    full.append(lane)
+                else:
+                    self.cur_tok[lane] = int(r.prompt[r.plen - 1])
             lanes.append((lane, r))
         return AdmissionPlan(lanes, toks, mask, full)
 
@@ -157,6 +194,17 @@ class Scheduler:
                     tick: int) -> List[Request]:
         finished: List[Request] = []
         for lane in plan.lanes:
+            dq = self.replay.get(lane)
+            if dq is not None:
+                # teacher-forced replay: this decode rebuilt one KV
+                # position; advance with the KNOWN next token and drop the
+                # model's emission — predictions only count at positions
+                # the original run never reached
+                self.cur_tok[lane] = dq.popleft()
+                self.pos[lane] = self.pos[lane] + 1
+                if not dq:
+                    del self.replay[lane]
+                continue
             mi, bi = self.slots.unravel(lane)
             self._record(lane, int(ids[mi, bi]), tick, finished)
         return finished
@@ -190,4 +238,25 @@ class Scheduler:
         self.gen_budget = self.gen_budget[perm]
         self.live = {int(np.nonzero(perm == old)[0][0]): r
                      for old, r in self.live.items()}
+        self.replay = {int(np.nonzero(perm == old)[0][0]): dq
+                       for old, dq in self.replay.items()}
         return perm
+
+    # -- fault recovery (DESIGN.md §12) ------------------------------------
+    def requeue_live(self, tick: int) -> List[Request]:
+        """A worker crash lost part of every live lane's KV line (each line
+        passes through every stage).  Pull every in-flight request back to
+        the FRONT of the queue with its generated-so-far tokens carried;
+        re-admission rebuilds the KV from the token prefix and generation
+        resumes token-identically.  Returns the requeued requests."""
+        requeued = [r for _, r in sorted(self.live.items())]
+        for lane in list(self.live):
+            self.slots.free(lane)
+        self.live.clear()
+        self.replay.clear()
+        for r in reversed(requeued):
+            r.carried = list(r.tokens)
+            r.requeues += 1
+            self.queue.push_front(r)
+        self.requeued_total += len(requeued)
+        return requeued

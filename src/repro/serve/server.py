@@ -81,9 +81,33 @@ class ElasticServer:
         self.eos_id = eos_id
         self.defrag_every = defrag_every
         self.measure_stage_times = measure_stage_times
+        self._sched: Optional[Scheduler] = None
 
     def close(self) -> None:
         self.engine.close()
+
+    # -- fault path (DESIGN.md §12) ----------------------------------------
+    def crash_worker(self, worker: int, tick: int) -> None:
+        """A serving worker died mid-flight: its stage's KV shard is gone,
+        and every live lane's KV line passed through it.  Requeue all
+        in-flight requests (generated tokens carried — re-admission
+        rebuilds their KV from the token prefix) and evict the worker; the
+        next tick re-admits onto the smaller world.  The degraded run
+        completes the exact same request set token-identically, just
+        later."""
+        if worker not in self.engine.stage_workers:
+            return
+        if self.state.stages <= 1:
+            raise RuntimeError(
+                "last serving worker crashed — nothing to rebuild on")
+        requeued = (self._sched.requeue_live(tick)
+                    if self._sched is not None else [])
+        self.state = self.engine.evict(self.state, [worker], step=tick)
+        if self.scaler is not None:
+            self.scaler.note_resize(tick, self.state.stages)
+        print(f"tick {tick:4d} CRASH worker {worker}: requeued "
+              f"{len(requeued)} in-flight requests, serving on "
+              f"{self.state.stages} stages")
 
     # -- safe-point resize -------------------------------------------------
     def resize(self, target_stages: int, tick: int, reason: str) -> bool:
@@ -109,14 +133,19 @@ class ElasticServer:
     # -- main loop ----------------------------------------------------------
     def serve(self, requests: List[Request], *, max_ticks: int = 100000,
               resize_at: Optional[Dict[int, int]] = None,
-              autoscale: bool = False) -> Dict[str, Any]:
+              autoscale: bool = False, injector=None) -> Dict[str, Any]:
         """Drive the request trace to completion.  ``resize_at`` scripts
         {tick: target_stages} safe-point resizes (tests/demos);
-        ``autoscale`` lets the attached scaler drive them from load."""
+        ``autoscale`` lets the attached scaler drive them from load;
+        ``injector`` (faults.ChaosInjector) fires scheduled faults at the
+        tick safe points — a crashed worker goes through ``crash_worker``."""
         sched = Scheduler(self.shapes.num_micro, self.shapes.mb_global,
                           self.shapes.seq, self.shapes.cache_len,
                           RequestQueue(requests), eos_id=self.eos_id,
                           defrag_every=self.defrag_every)
+        self._sched = sched
+        if injector is not None:
+            injector.bind(crash_worker=self.crash_worker)
         m, B = self.shapes.num_micro, self.shapes.mb_global
         resizes_before = len(self.engine.resizes)
         tick = 0
@@ -177,6 +206,11 @@ class ElasticServer:
                     self.resize(min(self.max_stages,
                                     self.state.stages + d.workers),
                                 tick, d.reason)
+            if injector is not None:
+                # scheduled faults fire at the same safe point resizes do:
+                # the tick's flight is fully retired, so a crash loses KV
+                # state only — never an in-flight microbatch
+                injector.on_step(tick, workers=self.engine.stage_workers)
             tick += 1
         wall_s = time.perf_counter() - t_run
         total_tokens = sum(len(r.tokens) for r in sched.completions)
@@ -193,7 +227,8 @@ class ElasticServer:
             "completions": [
                 {"rid": r.rid, "kind": r.kind, "arrival": r.arrival,
                  "admitted": r.admitted, "finished": r.finished,
-                 "plen": r.plen, "tokens": list(map(int, r.tokens))}
+                 "plen": r.plen, "requeues": r.requeues,
+                 "tokens": list(map(int, r.tokens))}
                 for r in sorted(sched.completions, key=lambda r: r.rid)],
             "ticks": tick,
             "tick_wall_s": tick_wall,
@@ -208,6 +243,7 @@ class ElasticServer:
             "autoscale_decisions": (
                 [dataclasses.asdict(d) for d in self.scaler.decisions]
                 if self.scaler is not None else []),
+            "requeued_total": sched.requeued_total,
             "total_tokens": total_tokens,
             "wall_s": wall_s,
             "tokens_per_s": total_tokens / max(1e-9, wall_s),

@@ -1,6 +1,7 @@
 """The RunSpec/Session front door: serialization round-trips, strict
 validation, golden schema fixture, CLI precedence, legacy-kwarg shims, and
 the config-path == legacy-path bit-identity acceptance criterion."""
+import argparse
 import glob
 import json
 import os
@@ -25,8 +26,9 @@ from repro.api.cli import (SERVE_ALIASES, TRAIN_ALIASES, TRAIN_CLI_DEFAULTS,
                            build_spec)
 from repro.api.specs import SCHEMA_VERSION
 
-GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
-                      "runspec_default_v1.json")
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v2.json")
+GOLDEN_V1 = os.path.join(GOLDEN_DIR, "runspec_default_v1.json")
 
 
 # ---------------------------------------------------------------------------
@@ -196,13 +198,51 @@ def test_override_coercion_errors():
 def test_golden_default_spec():
     """The serialized default RunSpec is pinned byte-for-byte.  If this
     fails you changed the spec schema: bump SCHEMA_VERSION if the change
-    is breaking, then regenerate the fixture with
-    ``PYTHONPATH=src python -c "from repro.api import RunSpec;
-    RunSpec().save('tests/golden/runspec_default_v1.json')"``."""
+    is breaking, add an upgrader for the old version, then regenerate the
+    fixture with ``PYTHONPATH=src python -c "from repro.api import RunSpec;
+    RunSpec().save('tests/golden/runspec_default_v2.json')"`` (keep the
+    old-version golden — it pins the upgrader's input forever)."""
     with open(GOLDEN) as f:
         golden = json.load(f)
     assert RunSpec().to_dict() == golden
     assert RunSpec.from_dict(golden) == RunSpec()
+
+
+def test_v1_config_loads_via_upgrader():
+    """A v1 config (the frozen v1 golden) still loads: the v1->v2 upgrader
+    stamps defaults for the fields v2 added (faults, ckpt_every, spares,
+    watermark_clock, rpc_timeout_s) and the result round-trips as v2."""
+    with open(GOLDEN_V1) as f:
+        v1 = json.load(f)
+    assert v1["schema_version"] == 1
+    spec = RunSpec.from_dict(v1)
+    assert spec == RunSpec()
+    assert spec.to_dict()["schema_version"] == SCHEMA_VERSION
+    # a populated v1 config keeps its values through the upgrade
+    v1b = dict(v1, steps=7, cluster=dict(v1["cluster"], autoscale=True))
+    up = RunSpec.from_dict(v1b)
+    assert up.steps == 7 and up.cluster.autoscale
+    assert up.faults.enabled is False and up.ckpt_every == 0
+
+
+def test_chaos_flags_resolve_faults_spec():
+    """--chaos/--chaos-seed/--ckpt-every land on the spec's fault and
+    safe-point fields through the shared alias table."""
+    ap = argparse.ArgumentParser()
+    add_config_args(ap)
+    add_alias_flags(ap, TRAIN_ALIASES)
+    add_spec_flags(ap)
+    args = ap.parse_args(["--chaos", "--chaos-seed", "9", "--spares", "2",
+                          "--ckpt-every", "5", "--ckpt-dir", "/tmp/ck",
+                          "--autoscale", "--job-manager", "file",
+                          "--set", "faults.worker_crash=2:1",
+                          "--set", "faults.rpc_loss=0.25"])
+    spec = build_spec(args, TRAIN_ALIASES)
+    assert spec.faults.enabled and spec.faults.seed == 9
+    assert spec.faults.worker_crash == {2: 1}
+    assert spec.faults.rpc_loss == 0.25
+    assert spec.cluster.spares == 2
+    assert spec.ckpt_every == 5 and spec.ckpt_dir == "/tmp/ck"
 
 
 def test_all_repo_configs_validate():

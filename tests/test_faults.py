@@ -1,0 +1,457 @@
+"""Fault-tolerance layer tests (DESIGN.md §12): deterministic fault plans
+and the chaos injector, hardened file-RPC (same-seq retry, server-side
+dedup/journal, circuit breaker), serving requeue/teacher-forced replay,
+worker-pool spares, and the subprocess chaos soaks — kill -9 the job
+manager mid-run, SIGKILL the trainer and ``Session.resume`` bit-identically,
+and the train/serve parity runs the chaos CI job executes."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.api.specs import FaultSpec
+from repro.cluster.rpc import (CircuitBreaker, FileJobManager,
+                               JobManagerUnavailable, spawn_file_manager)
+from repro.faults import (ChaosFileJobManager, ChaosInjector, FaultEvent,
+                          FaultPlan, resolve_plan)
+from repro.runtime.fault_tolerance import WorkerPool
+from repro.serve.requests import Request, RequestQueue
+from repro.serve.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+def test_resolve_plan_pinned_fields_win():
+    fs = FaultSpec(enabled=True, seed=3, worker_crash={5: 2},
+                   manager_kill=4, manager_respawn=9, rpc_loss=0.2)
+    plan = resolve_plan(fs, horizon=20, workers=4, file_manager=True)
+    kinds = {(e.kind, e.at) for e in plan.events}
+    assert ("worker_crash", 5) in kinds
+    assert ("manager_kill", 4) in kinds and ("manager_respawn", 9) in kinds
+    assert plan.rpc_loss == 0.2 and plan.any_rpc
+    # events come out sorted by (at, kind)
+    assert [e.at for e in plan.events] == sorted(e.at for e in plan.events)
+
+
+def test_resolve_plan_auto_is_seeded_and_reproducible():
+    fs = FaultSpec(enabled=True, seed=11, auto=True)
+    a = resolve_plan(fs, horizon=40, workers=4, file_manager=True)
+    b = resolve_plan(fs, horizon=40, workers=4, file_manager=True)
+    assert a.to_dict() == b.to_dict()            # same seed, same schedule
+    kinds = {e.kind for e in a.events}
+    assert {"worker_crash", "manager_kill",
+            "manager_respawn", "straggler_spike"} <= kinds
+    assert a.rpc_loss > 0                        # auto turns on RPC chaos
+    c = resolve_plan(FaultSpec(enabled=True, seed=12, auto=True),
+                     horizon=40, workers=4, file_manager=True)
+    assert c.to_dict() != a.to_dict()            # a new seed moves events
+    # no file manager => no manager/rpc faults to derive
+    d = resolve_plan(FaultSpec(enabled=True, seed=11, auto=True),
+                     horizon=40, workers=4, file_manager=False)
+    assert not any(e.kind.startswith("manager") for e in d.events)
+    assert not d.any_rpc
+
+
+def test_injector_fires_once_and_filters_heartbeats():
+    plan = FaultPlan(events=[
+        FaultEvent(at=3, kind="worker_crash", target=2),
+        FaultEvent(at=5, kind="straggler_spike", target=-1, value=2.0),
+        FaultEvent(at=7, kind="manager_kill")])
+    inj = ChaosInjector(plan)
+    calls = []
+    inj.bind(kill_manager=lambda: calls.append("kill"))
+    assert inj.on_step(0, workers=[0, 1, 2, 3]) == []
+    fired = inj.on_step(3, workers=[0, 1, 2, 3])
+    assert [e.kind for e in fired] == ["worker_crash"]
+    assert inj.heartbeat_workers([0, 1, 2, 3]) == [0, 1, 3]
+    assert inj.on_step(3, workers=[0, 1, 2, 3]) == []     # never refires
+    assert inj.spike_for([0, 1, 3]) is None
+    inj.on_step(5, workers=[0, 1, 3])
+    assert inj.spike_for([0, 1, 3]) == [1.0, 1.0, 2.0]    # last stage hit
+    inj.on_step(7)
+    assert calls == ["kill"]
+    assert [r.kind for r in inj.records] == [
+        "worker_crash", "straggler_spike", "manager_kill"]
+
+
+def test_injector_crash_skipped_when_worker_not_active():
+    plan = FaultPlan(events=[FaultEvent(at=1, kind="worker_crash",
+                                        target=9)])
+    inj = ChaosInjector(plan)
+    inj.on_step(1, workers=[0, 1, 2])
+    assert [r.kind for r in inj.records] == ["worker_crash_skipped"]
+    assert 9 not in inj.crashed
+
+
+def test_injector_resume_semantics():
+    plan = FaultPlan(events=[
+        FaultEvent(at=2, kind="worker_crash", target=1),
+        FaultEvent(at=6, kind="trainer_kill"),
+        FaultEvent(at=8, kind="worker_crash", target=3)])
+    inj = ChaosInjector(plan, start_step=7, resumed=True)
+    # history replay: the pre-restart crash holds (worker 1 stays dead)
+    assert inj.heartbeat_workers([0, 1, 2, 3]) == [0, 2, 3]
+    # the kill that ended the previous life never refires
+    died = []
+    inj.bind(kill_self=lambda: died.append(1))
+    assert inj.on_step(6) == []
+    assert died == []
+    # future events still fire
+    assert [e.kind for e in inj.on_step(8, workers=[0, 2, 3])] \
+        == ["worker_crash"]
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker + file RPC hardening
+# ---------------------------------------------------------------------------
+def test_circuit_breaker_trips_probes_and_closes():
+    br = CircuitBreaker(trip_after=2, probe_every=3)
+    assert br.allow() and not br.open
+    br.failure()
+    assert br.allow() and not br.open            # one failure: still closed
+    br.failure()
+    assert br.open and br.trips == 1
+    # every probe_every-th blocked call is let through as a probe
+    assert [br.allow() for _ in range(6)] == [False, False, True,
+                                              False, False, True]
+    assert br.fast_fails == 4
+    br.success()                                 # the probe succeeded
+    assert not br.open and br.allow()
+
+
+def test_rpc_retry_same_seq_recovers_total_loss(tmp_path):
+    """rpc_loss=1.0 drops every FIRST delivery; the retry re-publishes the
+    same sequence number and every op still succeeds exactly once."""
+    root = str(tmp_path)
+    proc = spawn_file_manager(root, workers=4, idle_timeout_s=60.0)
+    try:
+        jm = ChaosFileJobManager(root, FaultPlan(rpc_loss=1.0, seed=0),
+                                 timeout_s=2.0, poll_s=0.005, retries=4,
+                                 backoff_s=0.01)
+        assert jm.release([3]) == [3]
+        assert jm.request(1) == [3]
+        assert jm.num_active == 4
+        assert jm.rpc_stats["retries"] >= 2      # one per op so far
+        assert jm.breaker.trips == 0             # retries absorbed the loss
+        jm.close()
+        assert proc.wait(timeout=20) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def test_rpc_dup_delivery_deduped_by_server(tmp_path):
+    """rpc_dup=1.0 re-publishes every answered request; the server's seq
+    journal must re-serve, never re-execute (active counts stay exact)."""
+    root = str(tmp_path)
+    proc = spawn_file_manager(root, workers=4, idle_timeout_s=60.0)
+    try:
+        jm = ChaosFileJobManager(root, FaultPlan(rpc_dup=1.0, seed=0),
+                                 timeout_s=5.0, poll_s=0.005)
+        assert jm.release([2]) == [2]
+        assert jm.num_active == 3                # released once, not twice
+        assert jm.request(4) == [2]              # only one worker to grant
+        assert jm.num_active == 4
+        jm.close()
+        assert proc.wait(timeout=20) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def test_rpc_unavailable_trips_breaker_and_withdraws(tmp_path):
+    """No server: the call burns its retry budget, raises, and the breaker
+    opens — later calls fail fast.  Given-up req files are withdrawn so a
+    late server can never execute them."""
+    jm = FileJobManager(str(tmp_path), timeout_s=0.2, poll_s=0.02,
+                        retries=2, backoff_s=0.01, breaker_after=2,
+                        breaker_probe_every=4)
+    for _ in range(2):
+        with pytest.raises(JobManagerUnavailable):
+            jm.request(1)
+    assert jm.breaker.open and jm.breaker.trips == 1
+    t0 = os.times()[4]
+    with pytest.raises(JobManagerUnavailable):
+        jm.release([1])                          # fast fail, no timeout burn
+    assert os.times()[4] - t0 < 0.15
+    assert jm.breaker.fast_fails >= 1
+    assert not [n for n in os.listdir(str(tmp_path))
+                if n.startswith("req-")]         # withdrawn on give-up
+    assert jm.num_active == -1                   # telemetry degrades, no raise
+
+
+def test_server_journal_survives_kill9_exactly_once(tmp_path):
+    """Journal-before-publish: after the server is SIGKILLed and its
+    response deleted (simulating loss), a respawned server re-serves the
+    journaled answer for the same seq without re-executing the op."""
+    root = str(tmp_path)
+    proc = spawn_file_manager(root, workers=4, idle_timeout_s=60.0)
+    try:
+        jm = FileJobManager(root, timeout_s=10.0, poll_s=0.005)
+        assert jm.release([1]) == [1]
+        proc.kill()
+        proc.wait()
+        # the answer is lost in flight; the client will retry seq 1
+        os.unlink(os.path.join(root, "resp-000001.json"))
+        with open(os.path.join(root, "req-000001.json"), "w") as f:
+            json.dump({"op": "release", "seq": 1, "workers": [1]}, f)
+        proc = spawn_file_manager(root, workers=4, idle_timeout_s=60.0)
+        out = jm._await(os.path.join(root, "resp-000001.json"),
+                        deadline=os.times()[4] + 1e9, attempt=1)
+        assert out["released"] == [1]            # journaled answer, and
+        assert out["active"] == 3                # the op ran exactly once
+        assert jm.num_active == 3
+        jm.close()
+        assert proc.wait(timeout=20) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+# ---------------------------------------------------------------------------
+# worker pool spares
+# ---------------------------------------------------------------------------
+def test_worker_pool_spares_mint_fresh_ids():
+    pool = WorkerPool(4, spares=2)
+    pool.fail(2)
+    assert pool.request(1) == [4]                # never-seen id, not 2
+    assert pool.request(2) == [5]                # spare budget caps at 2
+    assert pool.request(1) == []
+    pool.release([4])
+    assert pool.request(1) == [4]                # released beats minting
+    sd = pool.state_dict()
+    back = WorkerPool.from_state(sd)
+    assert back.state_dict() == sd
+    assert back.request(1) == []                 # spare budget persisted
+
+
+# ---------------------------------------------------------------------------
+# serving requeue + teacher-forced replay (scheduler level, no engine)
+# ---------------------------------------------------------------------------
+def _mk_sched(reqs, num_micro=1, mb=2, prompt_len=4, cache_len=12):
+    return Scheduler(num_micro, mb, prompt_len, cache_len,
+                     RequestQueue(reqs))
+
+
+def test_requeue_carries_tokens_and_replay_rebuilds():
+    r0 = Request(rid=0, arrival=0, prompt=np.arange(4, dtype=np.int32),
+                 gen=6)
+    r1 = Request(rid=1, arrival=0, prompt=np.arange(2, dtype=np.int32),
+                 gen=6)
+    sched = _mk_sched([r0, r1])
+    plan = sched.plan_admissions(0)
+    assert {r.rid for _, r in plan.lanes} == {0, 1}
+    # r0 is full-length: token 1 comes from the prefill argmax
+    sched.note_prefill(plan, np.array([[100, 0]]), 0)
+    assert r0.tokens == [100]
+    # two decode ticks: both lanes emit
+    dec = sched.plan_decode()
+    sched.note_decode(dec, np.array([[101, 201]]), 1)
+    assert r0.tokens == [100, 101] and r1.tokens == [201]
+    # crash: everything in flight goes back to the FRONT of the queue
+    requeued = sched.requeue_live(2)
+    assert [r.rid for r in requeued] == [0, 1]
+    assert list(sched.queue.pending)[0].rid == 0      # lane order kept
+    assert r0.carried == [100, 101] and r0.requeues == 1
+    assert sched.slots.num_active == 0 and not sched.live
+    # re-admission rebuilds through decode ONLY: the prefill covers the
+    # original prompt, every carried token is teacher-forced — the same
+    # op sequence that produced the KV line the first time
+    plan = sched.plan_admissions(3)
+    lane0 = next(ln for ln, r in plan.lanes if r.rid == 0)
+    lane1 = next(ln for ln, r in plan.lanes if r.rid == 1)
+    assert plan.full_len_lanes == []             # argmax not re-taken
+    assert sched.cur_tok[lane0] == 100           # full-length: resume at
+    assert sched.pos[lane0] == 4                 # its first decode...
+    assert list(sched.replay[lane0]) == [101]    # ...replaying the rest
+    assert sched.cur_tok[lane1] == 1             # short: bootstrap decode
+    assert sched.pos[lane1] == 1                 # re-feeds prompt[-1]
+    assert list(sched.replay[lane1]) == [201]
+    assert sched.gen_done[lane1] == 1            # carried token counted
+    sched.note_prefill(plan, np.array([[0, 0]]), 3)
+    assert r0.tokens == [100, 101]               # replay lanes take nothing
+    # replay tick: emissions ignored, KNOWN tokens fed back
+    dec = sched.plan_decode()
+    sched.note_decode(dec, np.array([[77, 88]]), 4)
+    assert r0.tokens == [100, 101]               # 77/88 never recorded
+    assert r1.tokens == [201]
+    assert lane0 not in sched.replay             # drained
+    assert lane1 not in sched.replay
+    # past the replay, new positions record again
+    dec = sched.plan_decode()
+    sched.note_decode(dec, np.array([[102, 202]]), 6)
+    assert r0.tokens == [100, 101, 102]
+    assert r1.tokens == [201, 202]
+    assert int(sched.pos[lane0]) == 6            # 4 + 1 replay + 1 emit
+    assert int(sched.pos[lane1]) == 3            # 1 + 1 replay + 1 emit
+    assert sched.requeued_total == 2
+
+
+def test_requeue_preserves_gen_budget_account():
+    """A requeued request finishes after exactly ``gen`` total tokens —
+    carried ones count against the budget."""
+    r = Request(rid=0, arrival=0, prompt=np.arange(4, dtype=np.int32),
+                gen=3)
+    sched = _mk_sched([r], mb=1)
+    plan = sched.plan_admissions(0)
+    sched.note_prefill(plan, np.array([[50]]), 0)
+    sched.note_decode(sched.plan_decode(), np.array([[51]]), 1)
+    sched.requeue_live(2)
+    plan = sched.plan_admissions(3)
+    sched.note_prefill(plan, np.array([[0]]), 3)
+    for ids in ([[51]], [[52]], [[53]]):
+        if sched.done:
+            break
+        dec = sched.plan_decode()
+        if dec is None:
+            break
+        sched.note_decode(dec, np.array(ids), 4)
+    assert r.tokens == [50, 51, 52] and r.finished >= 0
+    assert sched.done
+
+
+# ---------------------------------------------------------------------------
+# subprocess chaos soaks (the chaos CI job runs these same shapes)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_kill9_manager_mid_run_trainer_survives():
+    """kill -9 the file job-manager mid-run: the trainer retries, trips the
+    breaker, keeps training in degraded mode (deferred release/fail
+    bookkeeping), reconnects when the manager respawns, and ends with the
+    same loss trajectory as a fault-free run."""
+    out = run_in_subprocess("""
+        from repro.api import RunSpec, Session
+
+        BASE = {
+            "steps": 16, "seed": 5, "log_every": 1000,
+            "model": {"arch": "smollm-360m", "layers": 8, "d_model": 64,
+                      "num_heads": 4, "num_kv_heads": 2, "d_ff": 256,
+                      "vocab_size": 512},
+            "parallel": {"stages": 4, "num_micro": 2, "mb_global": 2,
+                         "seq": 32, "remat": "none",
+                         "param_dtype": "float32"},
+            "cluster": {"job_manager": "file", "autoscale": True,
+                        "heartbeat_timeout": 3.0, "rpc_timeout_s": 2.0,
+                        "spares": 1},
+        }
+        with Session(RunSpec.from_dict(dict(BASE))) as s:
+            rep_a = s.train()
+
+        chaos = dict(BASE)
+        chaos["faults"] = {"enabled": True, "seed": 1,
+                           "worker_crash": {2: 2},
+                           "manager_kill": 4, "manager_respawn": 8,
+                           "rpc_loss": 0.3, "rpc_dup": 0.3}
+        with Session(RunSpec.from_dict(chaos)) as s:
+            rep_b = s.train()
+
+        assert len(rep_b["losses"]) == 16
+        diffs = [abs(a - b)
+                 for a, b in zip(rep_a["losses"], rep_b["losses"])]
+        assert max(diffs) < 3e-3, f"loss parity violated: {max(diffs)}"
+        kinds = [f["kind"] for f in rep_b["faults"]]
+        assert "manager_kill" in kinds and "manager_respawn" in kinds
+        assert "worker_crash" in kinds
+        assert any(r["kind"] == "evict" for r in rep_b["resizes"])
+        st = rep_b["rpc"]["stats"]
+        assert st["calls"] > 0 and st["timeouts"] > 0   # dead window hit
+        print("KILL9 OK", max(diffs), st)
+    """, devices=4)
+    assert "KILL9 OK" in out
+
+
+@pytest.mark.slow
+def test_trainer_kill9_then_resume_bit_identical():
+    """SIGKILL the trainer AFTER a safe point, ``Session.resume`` from the
+    directory: the resumed run's losses equal the never-crashed run's
+    bit-for-bit (same worlds, same loader stream, same RNG)."""
+    out = run_in_subprocess("""
+        import os, subprocess, sys, tempfile
+
+        from repro.api import RunSpec, Session
+
+        ck = tempfile.mkdtemp(prefix="safept_")
+        BASE = {
+            "steps": 12, "seed": 9, "log_every": 1000,
+            "ckpt_dir": ck, "ckpt_every": 4,
+            "model": {"arch": "smollm-360m", "layers": 8, "d_model": 64,
+                      "num_heads": 4, "num_kv_heads": 2, "d_ff": 256,
+                      "vocab_size": 512},
+            "parallel": {"stages": 4, "num_micro": 2, "mb_global": 2,
+                         "seq": 32, "remat": "none",
+                         "param_dtype": "float32"},
+        }
+        with Session(RunSpec.from_dict(dict(BASE))) as s:
+            rep_full = s.train()
+
+        # the doomed run in ITS OWN process (inherits PYTHONPATH and the
+        # forced-host XLA_FLAGS): chaos SIGKILLs it at step 9, two steps
+        # after the step-7 safe point landed on disk
+        doomed = dict(BASE, ckpt_dir=ck + "_killed",
+                      faults={"enabled": True, "kill_at": 9})
+        code = ("from repro.api import RunSpec, Session\\n"
+                "with Session(RunSpec.from_dict(" + repr(doomed)
+                + ")) as s:\\n"
+                "    s.train()\\n"
+                "raise SystemExit('unreachable: kill_at did not fire')")
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, timeout=600)
+        assert proc.returncode == -9, (proc.returncode, proc.stderr[-2000:])
+
+        with Session.resume(ck + "_killed") as s:
+            rep_res = s.train()
+        assert rep_res["start_step"] == 8            # newest safe point: 7
+        tail = rep_full["losses"][8:]
+        assert rep_res["losses"] == tail, (rep_res["losses"], tail)
+        print("RESUME OK", rep_res["losses"][-1])
+    """, devices=4)
+    assert "RESUME OK" in out
+
+
+@pytest.mark.slow
+def test_chaos_serve_token_identity():
+    """Crash a serving worker mid-flight: every in-flight request is
+    requeued with its generated prefix carried, the evicted world shrinks,
+    and the degraded run completes the EXACT same token set as the
+    fault-free run — zero lost requests."""
+    out = run_in_subprocess("""
+        from repro.api import RunSpec, Session
+
+        BASE = {
+            "seed": 3,
+            "model": {"arch": "smollm-360m", "layers": 8, "d_model": 64,
+                      "num_heads": 4, "num_kv_heads": 2, "d_ff": 256,
+                      "vocab_size": 512},
+            "parallel": {"stages": 4, "num_micro": 2, "mb_global": 2,
+                         "seq": 16, "remat": "none",
+                         "param_dtype": "float32"},
+            "serve": {"requests": 10, "prompt_len": 16, "gen": 12,
+                      "min_prompt": 4, "burst_period": 6, "burst_len": 2,
+                      "burst_rate": 3, "lull_rate": 1},
+            "cluster": {"job_manager": "inproc", "autoscale": False,
+                        "spares": 1},
+        }
+        with Session(RunSpec.from_dict(dict(BASE))) as s:
+            rep_a = s.serve()
+        tok_a = {c["rid"]: c["tokens"] for c in rep_a["completions"]}
+
+        chaos = dict(BASE)
+        chaos["faults"] = {"enabled": True, "seed": 7,
+                           "worker_crash": {4: 2}}
+        with Session(RunSpec.from_dict(chaos)) as s:
+            rep_b = s.serve()
+        tok_b = {c["rid"]: c["tokens"] for c in rep_b["completions"]}
+
+        assert set(tok_b) == set(tok_a), "lost requests"
+        bad = [rid for rid in tok_a if tok_a[rid] != tok_b[rid]]
+        assert not bad, f"token mismatch on rids {bad}"
+        assert rep_b["requeued_total"] > 0
+        assert any(c["requeues"] > 0 for c in rep_b["completions"])
+        assert any(r["kind"] == "evict" for r in rep_b["resizes"])
+        print("SERVE CHAOS OK", rep_b["requeued_total"])
+    """, devices=4)
+    assert "SERVE CHAOS OK" in out
