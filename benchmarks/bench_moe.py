@@ -1,0 +1,128 @@
+"""Expert-parallel MoE benchmark: grouped ragged matmul vs capacity einsum.
+
+On this CPU container, interpret-mode wall time is not TPU time; the
+*derived* column reports what matters for the expert-parallel roofline:
+
+  * ``gmm_{fwd,bwd}_work_<skew>``   — fraction of MXU row-tile work the
+    grouped kernel runs at each routed-load skew (active/total tiles from
+    ``grouped_tile_work``; the capacity einsum always pays 1.0).  Expert
+    FLOP work must track routed load: hotter skews with empty experts
+    skip more tiles.
+  * ``expert_skew_<skew>``          — the max/mean load ratio of that
+    routing pattern (what ``DynMoController`` watches against
+    ``expert_watermark`` to trigger a LAER re-layout).
+  * ``moe_ffn_{pallas,scan}``       — end-to-end block parity check: the
+    derived column is each impl's capacity-drop fraction, which must be
+    IDENTICAL (routing is shared; only expert compute differs).
+
+Interpret-mode wall time (fwd and fwd+bwd) rides along as a relative
+sanity check, as in bench_kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.scenarios import scenario
+from repro.configs import get_config, reduced_config
+from repro.kernels.grouped_matmul import (grouped_matmul, grouped_matmul_ref,
+                                          grouped_tile_work)
+from repro.models.blocks import moe_ffn
+
+
+def _time(fn, *args, reps=2, **kw):
+    jax.tree.leaves(fn(*args, **kw))[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _bench_spec():
+    """The exact RunSpec these numbers correspond to: the moe scenario on
+    the grouped pallas path with live expert re-layout enabled."""
+    sp = scenario("moe")
+    return dataclasses.replace(
+        sp,
+        parallel=dataclasses.replace(sp.parallel, kernel_impl="pallas"),
+        dynamics=dataclasses.replace(sp.dynamics, expert_relayout=True))
+
+
+def run(quick: bool = False):
+    rng = np.random.RandomState(0)
+    rows = []
+
+    # ---- grouped matmul: tile work vs routed-load skew -------------------
+    # G = b*E batch-major groups, E experts; counts are routed tokens kept
+    # per (batch row, physical expert) — exactly what moe_ffn dispatches.
+    b, E, cap, K, N = 2, 4, 64, 128, 128
+    G = b * E
+    skews = {
+        "uniform": np.full(G, cap // 2),
+        # one hot expert per batch row at capacity, the rest cold
+        "hot": np.asarray([cap, 8, 8, 8] * b),
+        # degenerate routing collapse: one expert takes every token
+        "one_expert_all": np.asarray([cap, 0, 0, 0] * b),
+        "half_empty": np.asarray([cap // 2, cap // 2, 0, 0] * b),
+    }
+    x = jnp.asarray(rng.randn(G, cap, K) * 0.2, jnp.float32)
+    w = jnp.asarray(rng.randn(E, K, N) * 0.2, jnp.float32)
+
+    def gm_loss(x, w, counts):
+        return jnp.sum(grouped_matmul(x, w, counts, interpret=True) ** 2)
+
+    gm_grad = jax.jit(jax.value_and_grad(gm_loss, argnums=(0, 1)))
+    for tag, counts_np in skews.items():
+        counts = jnp.asarray(counts_np, jnp.int32)
+        work = grouped_tile_work(counts_np, cap)
+        us_f = _time(grouped_matmul, x, w, counts, interpret=True)
+        us_b = _time(gm_grad, x, w, counts)
+        rows.append((f"gmm_fwd_work_{tag}", us_f,
+                     work["fwd_active"] / work["fwd_total"]))
+        rows.append((f"gmm_bwd_work_{tag}", us_b,
+                     work["bwd_active"] / work["bwd_total"]))
+        # per-logical-expert load (sum over batch rows), controller-style
+        load = counts_np.reshape(b, E).sum(axis=0).astype(np.float64)
+        rows.append((f"expert_skew_{tag}", 0.0,
+                     float(load.max() / max(load.mean(), 1e-9))))
+    # dense capacity-einsum baseline: always full-capacity FLOPs (ratio 1)
+    us_ref = _time(jax.jit(grouped_matmul_ref), x, w,
+                   jnp.asarray(skews["uniform"], jnp.int32))
+    rows.append(("capacity_einsum_fwd_work", us_ref, 1.0))
+
+    # ---- end-to-end moe_ffn: grouped path vs capacity oracle -------------
+    cfg = reduced_config(get_config("mixtral-8x7b"), num_layers=2,
+                         d_model=64, d_ff=128)
+    # tighten capacity so drops actually occur: the derived column must
+    # then agree between impls (routing is shared, drops are pre-dispatch)
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=1.0)
+    mb, s, d = (1, 16, 64) if quick else (2, 32, 64)
+    ff, Em = cfg.d_ff, cfg.num_experts
+    p = {
+        "router": jnp.asarray(rng.randn(d, Em) * 0.3, jnp.float32),
+        "ewi": jnp.asarray(rng.randn(Em, d, ff) * 0.2, jnp.float32),
+        "ewg": jnp.asarray(rng.randn(Em, d, ff) * 0.2, jnp.float32),
+        "ewo": jnp.asarray(rng.randn(Em, ff, d) * 0.2, jnp.float32),
+    }
+    xb = jnp.asarray(rng.randn(mb, s, d) * 0.5, jnp.float32)
+    for impl in ("scan", "pallas"):
+        fn = jax.jit(lambda p, xb, impl=impl: moe_ffn(
+            p, xb, cfg, kernel_impl=impl))
+        us = _time(fn, p, xb)
+        dropped = float(fn(p, xb)[3])
+        rows.append((f"moe_ffn_{impl}", us, dropped))
+    return rows, _bench_spec().to_dict()
+
+
+def main(quick: bool = False):
+    rows, spec = run(quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived:.4f}")
+    return rows, spec

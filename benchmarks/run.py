@@ -20,8 +20,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_elastic, bench_idleness, bench_kernels,
-                            bench_overhead, bench_repack, bench_roofline,
-                            bench_serve, bench_throughput)
+                            bench_moe, bench_overhead, bench_repack,
+                            bench_roofline, bench_serve, bench_throughput)
     benches = {
         "idleness": bench_idleness.main,        # Fig. 1
         "throughput": bench_throughput.main,    # Fig. 3 (+ bubble ratios)
@@ -29,6 +29,7 @@ def main() -> None:
         "overhead": bench_overhead.main,        # Fig. 4 right
         "controller": bench_overhead.main_controller,  # §3.3.1 async plane
         "kernels": bench_kernels.main,          # §4.2.2 / §4.2.4
+        "moe": bench_moe.main,                  # expert-parallel grouped mm
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
         "elastic": bench_elastic.main,          # §3.4 live shrink (engine)
         "serve": bench_serve.main,              # elastic continuous batching

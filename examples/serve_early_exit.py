@@ -62,12 +62,12 @@ def main():
                                             rebalance_every=1))
     with mesh:
         print(f"prefill {micro * mbg} requests of {seq} tokens ...")
-        ids, cache = prefill(params, assignment, dyn, cache,
-                             {"tokens": tokens})
+        ids, cache, _ = prefill(params, assignment, dyn, cache,
+                                {"tokens": tokens})
         outs = [np.asarray(ids)]
         for g in range(1, gen):
-            ids, lp, cache = decode(params, assignment, dyn, cache, ids,
-                                    jnp.int32(seq + g - 1))
+            ids, lp, cache, _ = decode(params, assignment, dyn, cache, ids,
+                                       jnp.int32(seq + g - 1))
             outs.append(np.asarray(ids))
             if g == gen // 2:
                 # serving-time rebalance from the early-exit survival curve

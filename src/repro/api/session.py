@@ -48,7 +48,8 @@ from repro.api.specs import RunSpec
 @dataclasses.dataclass
 class SessionEvent:
     """One telemetry record: ``kind`` in {"log", "rebalance", "resize",
-    "autoscale", "safepoint", "serve_summary", "train_summary"}."""
+    "autoscale", "safepoint", "relayout", "serve_summary",
+    "train_summary"}."""
     kind: str
     step: int
     data: Dict[str, Any]
@@ -311,7 +312,10 @@ class Session:
                                 .rebalance_every,
                                 repack=spec.controller.repack.enabled,
                                 repack_policy=spec.controller.repack.policy,
-                                repack_target=max(1, repack_target))
+                                repack_target=max(1, repack_target),
+                                expert_relayout=dyncfg.expert_relayout,
+                                expert_watermark=dyncfg.expert_watermark,
+                                expert_min_tokens=dyncfg.expert_min_tokens)
         if spec.controller.repack.enabled:
             # per-worker memory budget: capacity factor × the dtype-correct
             # per-stage footprint of the UNPRUNED model under a uniform
@@ -392,6 +396,8 @@ class Session:
                   f"{rz.ticks_before}->{rz.ticks_after} ticks")
 
         losses, events, step_times, stages_hist = [], [], [], []
+        relayouts: List[Dict[str, Any]] = []
+        expert_skew_last = moe_dropped_last = None
         last_measured = None
         t0 = time.perf_counter()
         for step, batch in enumerate(loader, start=start_step):
@@ -497,6 +503,9 @@ class Session:
             # rejected)
             plan = cp.poll(engine.epoch)
             if plan is not None:
+                if plan.event is not None:
+                    expert_skew_last = plan.event.expert_skew
+                    moe_dropped_last = plan.event.expert_dropped
                 if plan.event is not None and plan.event.rebalanced:
                     events.append(plan.event)
                     self._emit("rebalance", step,
@@ -516,6 +525,31 @@ class Session:
                     state.params, state.opt_state, state.dyn = p, o, d
                     state.assignment = new_assignment
                     state.lps = list(cp.ctrl.lps)
+                # ---- expert re-layout: orthogonal to the stage plans
+                # above (it only rewrites the expert_map dyn leaf, which
+                # survives a same-plan shrink because it is per-expert,
+                # not per-stage)
+                if (plan.expert_relayout is not None
+                        and "expert_map" in state.dyn):
+                    rl = plan.expert_relayout
+                    dyn = dict(state.dyn)
+                    em = dyn["expert_map"]
+                    # broadcast the [E] placement over the existing sharded
+                    # [S, L_max, E] leaf (em*0 + new keeps its placement;
+                    # a fresh jnp array would land unsharded)
+                    dyn["expert_map"] = em * 0 + jnp.asarray(
+                        rl.new.as_array())
+                    state.dyn = dyn
+                    cp.with_ctrl(lambda c: c.commit_relayout(rl))
+                    rec = {"step": step, "iteration": rl.iteration,
+                           "skew": rl.skew, "tokens": rl.total_tokens,
+                           "moved_experts": rl.moved_experts,
+                           "placement": list(rl.new.placement)}
+                    relayouts.append(rec)
+                    self._emit("relayout", step, **rec)
+                    print(f"step {step:4d} RELAYOUT skew "
+                          f"{rl.skew:.2f} moved {rl.moved_experts} "
+                          f"experts -> {list(rl.new.placement)}")
 
             # ---- autoscaler: heartbeat + watermark signals
             if scaler is not None:
@@ -601,6 +635,13 @@ class Session:
                 "published": cp.published, "decided": cp.decided,
                 "dropped": cp.dropped,
                 "stale_rejected": cp.stale_rejected},
+            # ---- expert-parallel telemetry (MoE archs; None otherwise)
+            "relayouts": relayouts,
+            "expert_skew_last": expert_skew_last,
+            "moe_dropped_last": moe_dropped_last,
+            "expert_layout": (list(cp.ctrl.expert_layout.placement)
+                              if cp.ctrl.expert_layout is not None
+                              else None),
             "autoscale_decisions": ([dataclasses.asdict(d)
                                      for d in scaler.decisions]
                                     if scaler is not None else []),

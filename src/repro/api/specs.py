@@ -144,6 +144,10 @@ class DynamicsSpec:
     # mixture of depths
     mod_capacity: float = 0.5
     mod_every: int = 1
+    # live expert re-layout (MoE archs, kernel_impl="pallas")
+    expert_relayout: bool = False
+    expert_watermark: float = 2.0
+    expert_min_tokens: int = 16
 
     def __post_init__(self):
         _check_choice(self.kind, DYNAMISM_KINDS, "dynamics.kind")
@@ -159,6 +163,14 @@ class DynamicsSpec:
         _check_frac(self.ee_min_layer_frac, "dynamics.ee_min_layer_frac")
         _check_frac(self.mod_capacity, "dynamics.mod_capacity")
         _check_pos(self.mod_every, "dynamics.mod_every")
+        _check(float(self.expert_watermark) >= 1.0,
+               "dynamics.expert_watermark",
+               f"must be >= 1.0 (it is a max/mean load ratio), "
+               f"got {self.expert_watermark!r}")
+        _check(isinstance(self.expert_min_tokens, int)
+               and self.expert_min_tokens >= 0,
+               "dynamics.expert_min_tokens",
+               f"must be a non-negative int, got {self.expert_min_tokens!r}")
 
     def to_config(self) -> DynamicsConfig:
         return DynamicsConfig(**{f.name: getattr(self, f.name)

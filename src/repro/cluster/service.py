@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.controller import (ControllerEvent, DynMoController,
                                    ResizePlan)
+from repro.core.expert_layout import ExpertRelayoutPlan
 from repro.core.profiler import profile_from_stats
 
 
@@ -60,13 +61,16 @@ class StatsSnapshot:
 class DecisionPlan:
     """One controller decision, fenced by the epoch of the world it was
     decided against.  Either ``new_lps`` (in-mesh migration) or ``resize``
-    (live shrink) is set — the controller never emits both."""
+    (live shrink) is set — the controller never emits both.
+    ``expert_relayout`` is orthogonal (it moves no stage state, only the
+    expert_map dyn leaf) and may accompany either."""
     epoch: int
     iteration: int
     new_lps: Optional[List[int]]
     resize: Optional[ResizePlan]
     event: ControllerEvent
     decide_s: float                     # worker-side profile+decide seconds
+    expert_relayout: Optional[ExpertRelayoutPlan] = None
 
 
 class ControlPlane:
@@ -199,10 +203,12 @@ class ControlPlane:
                 bytes_per_param=ctrl.dcfg.bytes_per_param)
             new_lps, ev = ctrl.decide(profile, snap.iteration)
             resize = ctrl.take_resize()
+            relayout = ctrl.take_expert_relayout()
         self.decided += 1
         return DecisionPlan(epoch=snap.epoch, iteration=snap.iteration,
                             new_lps=new_lps, resize=resize, event=ev,
-                            decide_s=time.perf_counter() - t0)
+                            decide_s=time.perf_counter() - t0,
+                            expert_relayout=relayout)
 
     # -- worker thread -----------------------------------------------------
     def _loop(self) -> None:

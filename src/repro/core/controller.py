@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import DistConfig, ModelConfig
 from repro.core import balancer as bal
+from repro.core import expert_layout as el
 from repro.core import migration as mig
 from repro.core import repack as rp
 from repro.core.cost_model import MEM_STATE_FACTOR
@@ -41,6 +42,10 @@ class ControllerConfig:
     repack_mem_cap: float = float("inf")
     repack_target: int = 1
     mem_cap: float = float("inf")
+    # live expert re-layout (MoE archs with the grouped pallas kernel)
+    expert_relayout: bool = False
+    expert_watermark: float = 2.0     # max/mean routed-load trigger
+    expert_min_tokens: int = 16       # ignore windows below this total
 
 
 @dataclasses.dataclass
@@ -52,6 +57,10 @@ class ControllerEvent:
     active_workers: int
     decision_s: float
     rebalanced: bool
+    # MoE telemetry (defaults keep non-MoE call sites untouched)
+    expert_skew: float = 0.0          # measured max/mean routed load
+    expert_dropped: float = 0.0       # capacity-overflow drop fraction
+    relayout: bool = False            # a re-layout plan was emitted
 
 
 @dataclasses.dataclass
@@ -93,6 +102,14 @@ class DynMoController:
         self.events: List[ControllerEvent] = []
         self.active_workers = dcfg.num_stages
         self.pending_resize: Optional[ResizePlan] = None
+        # expert placement: the controller owns the LOGICAL layout; the
+        # runtime mirrors it into dyn["expert_map"] at safe points.  The
+        # layout is only committed when a plan is actually applied
+        # (commit_relayout) so fenced-out plans never desync the two.
+        self.expert_layout = (el.ExpertLayout.identity(cfg.num_experts)
+                              if cfg.num_experts else None)
+        self.pending_relayout: Optional[el.ExpertRelayoutPlan] = None
+        self.relayouts: List[el.ExpertRelayoutPlan] = []
 
     # -- elastic runtime hooks --------------------------------------------
     def cadence(self, iteration: int) -> bool:
@@ -106,13 +123,29 @@ class DynMoController:
         plan, self.pending_resize = self.pending_resize, None
         return plan
 
+    def take_expert_relayout(self) -> "Optional[el.ExpertRelayoutPlan]":
+        """Consume the pending expert re-layout (safe-point apply)."""
+        plan, self.pending_relayout = self.pending_relayout, None
+        return plan
+
+    def commit_relayout(self, plan: "el.ExpertRelayoutPlan"):
+        """Record that a re-layout plan was actually applied to the model's
+        expert_map — only now does the controller's notion of the layout
+        advance (plans fenced out at a safe point never desync it)."""
+        self.expert_layout = plan.new
+        self.relayouts.append(plan)
+        return self
+
     def rebind(self, dcfg: DistConfig, layers_per_stage: Sequence[int]):
         """Re-anchor the controller after the engine rebuilt the execution
-        world (shrink/grow): new stage count, new split."""
+        world (shrink/grow): new stage count, new split.  The expert layout
+        survives — placement is per-expert, not per-stage, and the
+        expert_map dyn leaf rides the resize like every other leaf."""
         self.dcfg = dcfg
         self.lps = list(layers_per_stage)
         self.active_workers = dcfg.num_stages
         self.pending_resize = None
+        self.pending_relayout = None
         if self.straggler is not None:
             # per-stage EMAs are meaningless across a resize
             self.straggler.reset(dcfg.num_stages)
@@ -122,6 +155,16 @@ class DynMoController:
                ) -> Tuple[Optional[List[int]], ControllerEvent]:
         t0 = time.perf_counter()
         self.pending_resize = None      # stale unconsumed plans don't linger
+        self.pending_relayout = None
+        expert_skew = 0.0
+        if profile.expert_load is not None and self.expert_layout is not None:
+            expert_skew, _ = el.measure_skew(profile.expert_load)
+            if self.ccfg.expert_relayout:
+                self.pending_relayout = el.build_relayout(
+                    profile.expert_load, self.expert_layout,
+                    watermark=self.ccfg.expert_watermark,
+                    min_tokens=self.ccfg.expert_min_tokens,
+                    iteration=iteration)
         costs = (profile.time_per_layer if self.ccfg.cost_by == "time"
                  else profile.param_bytes)
         if (self.straggler is not None and self.ccfg.cost_by == "time"
@@ -210,7 +253,10 @@ class DynMoController:
             imbalance_after=imb_after, moved_layers=moved,
             active_workers=self.active_workers,
             decision_s=time.perf_counter() - t0,
-            rebalanced=new_lps is not None)
+            rebalanced=new_lps is not None,
+            expert_skew=expert_skew,
+            expert_dropped=profile.moe_drop_frac,
+            relayout=self.pending_relayout is not None)
         self.events.append(ev)
         return new_lps, ev
 

@@ -29,6 +29,12 @@ class LayerProfile:
     param_bytes: np.ndarray         # bytes
     mem_per_stage: np.ndarray       # bytes resident per stage
     dyn_states: List[LayerDynState]
+    # MoE routing signals, aggregated over every MoE slot in the window:
+    # per-expert routed-token counts [E] (None for non-MoE archs) and the
+    # mean capacity-drop fraction — the controller's expert re-layout and
+    # overflow telemetry read these.
+    expert_load: Optional[np.ndarray] = None
+    moe_drop_frac: float = 0.0
 
 
 def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
@@ -46,8 +52,11 @@ def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
     states: List[LayerDynState] = []
     order: List[int] = []
     expert = stats.get("expert_load")
+    dropped = stats.get("moe_dropped")
     dens = stats.get("attn_density")
     ffa = stats.get("ff_active")
+    expert_total: Optional[np.ndarray] = None
+    drop_sum, drop_n = 0.0, 0
     for s in range(S):
         for l in range(L_max):
             if tags[s, l] == BLOCK_PAD:
@@ -63,6 +72,12 @@ def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
                 e = np.asarray(expert[s, l], dtype=np.float64)
                 mean = e.mean() if e.mean() > 0 else 1.0
                 ds.expert_hot = float(np.clip(e.max() / mean, 1.0, 4.0))
+                if e.sum() > 0:   # an MoE slot that actually routed
+                    expert_total = (e if expert_total is None
+                                    else expert_total + e)
+                    if dropped is not None and np.ndim(dropped) >= 2:
+                        drop_sum += float(dropped[s, l]) / max(1, num_micro)
+                        drop_n += 1
             if frozen is not None:
                 ds.frozen = bool(frozen[s, l] > 0)
             states.append(ds)
@@ -76,7 +91,9 @@ def profile_from_stats(cfg: ModelConfig, stats: Dict[str, np.ndarray],
         n = int(np.sum(tags[s] != BLOCK_PAD))
         mem[s] = params[i:i + n].sum() * MEM_STATE_FACTOR
         i += n
-    return LayerProfile(times, params, mem, states)
+    return LayerProfile(times, params, mem, states,
+                        expert_load=expert_total,
+                        moe_drop_frac=drop_sum / drop_n if drop_n else 0.0)
 
 
 def measure_stage_times(step_fn: Callable[[], None], repeats: int = 3

@@ -35,6 +35,13 @@ class DynamicsConfig:
     # hybrid of Raposo et al. as used by the paper)
     mod_capacity: float = 0.5         # fraction of tokens processed
     mod_every: int = 1                # MoD routing on every k-th block
+    # live expert re-layout (LAER-style): when the controller measures
+    # hot/cold skew above the watermark it re-places logical experts over
+    # physical kernel groups at the next safe point.  Only meaningful for
+    # moe-family archs with kernel_impl="pallas".
+    expert_relayout: bool = False
+    expert_watermark: float = 2.0     # max(load)/mean(load) trigger
+    expert_min_tokens: int = 16       # ignore skew below this routed total
 
     @property
     def uses_sparse_attention(self) -> bool:

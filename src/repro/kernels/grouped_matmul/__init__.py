@@ -1,0 +1,11 @@
+from repro.kernels.grouped_matmul.backward import (grouped_matmul_bwd_p,
+                                                   grouped_tile_work)
+from repro.kernels.grouped_matmul.grouped_matmul import (grouped_matmul_dw_p,
+                                                         grouped_matmul_p)
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+
+__all__ = [
+    "grouped_matmul", "grouped_matmul_ref", "grouped_matmul_p",
+    "grouped_matmul_dw_p", "grouped_matmul_bwd_p", "grouped_tile_work",
+]

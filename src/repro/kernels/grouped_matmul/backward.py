@@ -1,0 +1,53 @@
+"""Backward pass for the grouped expert matmul + tile-work accounting.
+
+dx is the SAME forward kernel with per-expert transposed weights
+(dx_g = g_g @ w[e]^T, still row-ragged so the same count-gated tiles skip),
+dw runs the dedicated transposed-grid kernel (grouped_matmul_dw_p) that
+accumulates x^T @ g over each expert's batch groups with identical
+count gating — empty experts cost zero tile work in fwd AND bwd.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels.grouped_matmul.grouped_matmul import (grouped_matmul_dw_p,
+                                                         grouped_matmul_p)
+
+
+def grouped_matmul_bwd_p(x, w, counts, g, *, gpb: int, bm: int, bn: int,
+                         bk: int, interpret: bool = False):
+    """x: [G*cap, K], w: [E, K, N], counts: [G], g: [G*cap, N] upstream
+    cotangent.  Returns (dx [G*cap, K] in x.dtype, dw [E, K, N] f32).
+
+    Dead rows (>= count) of the cotangent are zeroed first: the forward
+    emits zeros there, so they carry no gradient — and the dw kernel's
+    partially-live row tiles must not accumulate their garbage."""
+    M = x.shape[0]
+    cap = gpb * bm
+    live = (jnp.arange(M) % cap) < jnp.repeat(counts, cap)
+    g = g * live[:, None].astype(g.dtype)
+    dx = grouped_matmul_p(g, w.transpose(0, 2, 1), counts, gpb=gpb,
+                          bm=bm, bn=bk, bk=bn, interpret=interpret)
+    dw = grouped_matmul_dw_p(x, g, counts, num_experts=w.shape[0], gpb=gpb,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return dx.astype(x.dtype), dw
+
+
+def grouped_tile_work(counts, cap: int, *, bm: int = 8
+                      ) -> Dict[str, float]:
+    """MXU row-tile accounting at measured routed load: active vs total
+    (group, row-tile) cells for the forward and the dx+dw backward.  The
+    fwd/bwd ratios are what BENCH_moe reports — on CPU interpret mode wall
+    time is not TPU time, but the skipped-tile fraction is exact."""
+    counts = np.asarray(counts)
+    gpb = max(1, -(-cap // bm))
+    active = int(np.sum(np.minimum(-(-counts // bm), gpb)))
+    total = int(counts.size * gpb)
+    return {
+        "fwd_active": active, "fwd_total": total,
+        "bwd_active": 2 * active, "bwd_total": 2 * total,
+    }

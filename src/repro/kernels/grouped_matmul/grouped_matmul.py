@@ -1,0 +1,127 @@
+"""Pallas grouped/ragged expert matmul (MoE sort -> matmul -> unsort path).
+
+Tokens are pre-sorted by (batch row, physical expert group) into a
+``[G, cap, K]`` buffer (G = b * E groups, each zero-padded to ``cap`` rows);
+``counts[g]`` is the number of live rows in group g.  The grid tiles
+(group, row-tile, n-tile, k-tile) and a row tile whose first row is past the
+group's count is **skipped entirely** (``pl.when`` on the count scalar —
+data-dependent, no recompile when routing changes), so an empty expert costs
+zero MXU tile work and a cold expert costs work proportional to its load,
+not to the capacity bound — unlike the dense GShard capacity einsum which
+pays full ``cap`` rows per expert unconditionally.
+
+Group g uses weight ``w[g % E]``: groups are batch-major (g = bi * E + e)
+so every batch row's expert-e tokens hit the same expert weights.
+
+The counts ride in as a 1-D array with a ``(1,)`` BlockSpec (same idiom as
+pruned_matmul's block mask) — proven on both interpret and compiled paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scratch(shape):
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _gm_kernel(x_ref, w_ref, c_ref, o_ref, acc_ref, *, nkb, bm):
+    """One (group, row-tile, n-tile, k-tile) cell; k innermost accumulates."""
+    i = pl.program_id(1)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # live-row tile test: rows are packed front-of-group, so a tile whose
+    # first row index reaches the count holds no live rows at all
+    @pl.when(i * bm < c_ref[0])
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nkb - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_p(x, w, counts, *, gpb: int, bm: int, bn: int, bk: int,
+                     interpret: bool = False):
+    """x: [G*cap, K] row-sorted groups (cap = gpb*bm rows each, dead rows
+    zero), w: [E, K, N] with G % E == 0, counts: [G].  Returns [G*cap, N].
+    K/N must be block multiples (pad outside)."""
+    M, K = x.shape
+    E, _, N = w.shape
+    G = M // (gpb * bm)
+    assert M == G * gpb * bm and G % E == 0, (M, G, gpb, bm, E)
+    assert K % bk == 0 and N % bn == 0, (K, bk, N, bn)
+    nkb = K // bk
+    grid = (G, gpb, N // bn, nkb)
+    return pl.pallas_call(
+        functools.partial(_gm_kernel, nkb=nkb, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda g, i, j, k: (g * gpb + i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g % E, k, j)),
+            pl.BlockSpec((1,), lambda g, i, j, k: (g,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda g, i, j, k: (g * gpb + i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[_scratch((bm, bn))],
+        interpret=interpret,
+    )(x, w, counts)
+
+
+def _gm_dw_kernel(x_ref, g_ref, c_ref, o_ref, acc_ref, *, nrb, bm, gpb):
+    """dw[e] = sum over batch groups of x_{b,e}^T @ g_{b,e}; the row-chunk
+    axis r (innermost) walks every (batch, row-tile) pair of expert e."""
+    r = pl.program_id(3)
+
+    @pl.when(r == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((r % gpb) * bm < c_ref[0])
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(r == nrb - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_dw_p(x, g, counts, *, num_experts: int, gpb: int,
+                        bm: int, bn: int, bk: int, interpret: bool = False):
+    """x: [G*cap, K], g: [G*cap, N] (dead rows zero in both), counts: [G].
+    Returns dw [E, K, N] summing each expert's groups across batch rows —
+    the same ragged tile skipping as the forward, transposed."""
+    M, K = x.shape
+    _, N = g.shape
+    E = num_experts
+    G = M // (gpb * bm)
+    assert G % E == 0, (G, E)
+    nrb = (G // E) * gpb
+    row = lambda e, r: ((r // gpb) * E + e) * gpb + (r % gpb)
+    grid = (E, K // bk, N // bn, nrb)
+    return pl.pallas_call(
+        functools.partial(_gm_dw_kernel, nrb=nrb, bm=bm, gpb=gpb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda e, kk, j, r: (row(e, r), kk)),
+            pl.BlockSpec((bm, bn), lambda e, kk, j, r: (row(e, r), j)),
+            pl.BlockSpec((1,), lambda e, kk, j, r: ((r // gpb) * E + e,)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, bn), lambda e, kk, j, r: (e, kk, j)),
+        out_shape=jax.ShapeDtypeStruct((E, K, N), jnp.float32),
+        scratch_shapes=[_scratch((bk, bn))],
+        interpret=interpret,
+    )(x, g, counts)

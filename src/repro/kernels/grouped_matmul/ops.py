@@ -1,0 +1,69 @@
+"""jit'd wrapper + custom-VJP for the grouped expert matmul.
+
+Shape/padding policy (all differentiable jnp ops OUTSIDE the vjp boundary,
+same layout as pruned_matmul.ops):
+  * per-group rows pad cap -> cap_g (next multiple of bm), K/N pad to
+    bk/bn multiples;
+  * dead rows (>= count) of x are zeroed before the kernel, so the public
+    semantics are "rows past the count are dead" no matter what the caller
+    left in the padding — the reference oracle masks identically;
+  * counts cross the custom_vjp as float32 (int leaves would need float0
+    cotangents); the kernels compare them against int row indices directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_matmul.backward import grouped_matmul_bwd_p
+from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_p
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _gm_flat(x, w, counts_f, gpb, bm, bn, bk, interpret):
+    """Flat pre-padded grouped matmul (x: [G*cap_g, K], w: [E, K, N],
+    counts_f: [G] float32)."""
+    return grouped_matmul_p(x, w, counts_f, gpb=gpb, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+
+
+def _gm_flat_fwd(x, w, counts_f, gpb, bm, bn, bk, interpret):
+    out = _gm_flat(x, w, counts_f, gpb, bm, bn, bk, interpret)
+    return out, (x, w, counts_f)
+
+
+def _gm_flat_bwd(gpb, bm, bn, bk, interpret, res, g):
+    x, w, counts_f = res
+    dx, dw = grouped_matmul_bwd_p(x, w, counts_f, g, gpb=gpb, bm=bm, bn=bn,
+                                  bk=bk, interpret=interpret)
+    return dx, dw.astype(w.dtype), jnp.zeros_like(counts_f)
+
+
+_gm_flat.defvjp(_gm_flat_fwd, _gm_flat_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_matmul(x, w, counts, *, bm: int = 8, bn: int = 128,
+                   bk: int = 128, interpret: bool = False):
+    """Ragged grouped matmul: x [G, cap, K] (G groups of up to ``counts[g]``
+    live rows each), w [E, K, N] with G % E == 0 (group g uses w[g % E]),
+    counts [G] int.  Returns [G, cap, N]; rows past each group's count are
+    zero.  Differentiable in x and w; empty groups skip all tile work in
+    forward and backward."""
+    G, cap, K = x.shape
+    E, _, N = w.shape
+    assert G % E == 0, (G, E)
+    cap_g = cap + (-cap) % bm
+    gpb = cap_g // bm
+    live = jnp.arange(cap)[None, :] < counts[:, None]
+    x = x * live[..., None].astype(x.dtype)
+    pk = (-K) % bk
+    pn = (-N) % bn
+    x = jnp.pad(x, ((0, 0), (0, cap_g - cap), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, 0), (0, pk), (0, pn)))
+    out = _gm_flat(x.reshape(G * cap_g, K + pk), w,
+                   counts.astype(jnp.float32), gpb, bm, bn, bk, interpret)
+    return out.reshape(G, cap_g, N + pn)[:, :cap, :N]

@@ -1,0 +1,23 @@
+"""fp32 reference oracle for the grouped expert matmul.
+
+Same semantics as the kernel: rows at or past a group's count are dead
+(treated as zero regardless of their contents), group g uses expert weight
+``w[g % E]``, accumulation in float32.  The MoE capacity-einsum path in
+``models.blocks.moe_ffn`` composes this per-projection contract; tests pin
+the kernel against it."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x, w, counts):
+    """x: [G, cap, K], w: [E, K, N] (G % E == 0), counts: [G] ->
+    [G, cap, N]."""
+    G, cap, _ = x.shape
+    E = w.shape[0]
+    live = jnp.arange(cap)[None, :] < counts[:, None]
+    xm = x * live[..., None].astype(x.dtype)
+    wg = w[jnp.arange(G) % E]
+    out = jnp.einsum("gck,gkn->gcn", xm.astype(jnp.float32),
+                     wg.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -141,6 +141,7 @@ class ElasticEngine:
         self.shapes = shapes
         self.opt_cfg = opt_cfg
         self.data = data
+        self.last_moe_drop = None   # serve telemetry (see _note_moe_drop)
         self.devices = (list(devices) if devices is not None
                         else list(jax.devices()))
         if job_manager is None:
@@ -403,21 +404,37 @@ class ElasticEngine:
     def prefill(self, state: EngineState, batch):
         """Run prefill in the state's world; returns (last_ids, new_cache).
         The caller owns cache merging (continuous batching overwrites only
-        admitted lanes)."""
+        admitted lanes).  ``self.last_moe_drop`` holds the call's mean MoE
+        capacity-drop fraction (device scalar; None for non-MoE archs)."""
         pf, _ = self.serve_fns(state.stages)
         with self.world(state.stages).mesh:
-            return pf(state.params, state.assignment, state.dyn, state.cache,
-                      batch)
+            ids, cache, drop = pf(state.params, state.assignment, state.dyn,
+                                  state.cache, batch)
+        self._note_moe_drop(drop)
+        return ids, cache
 
     def decode(self, state: EngineState, tokens, pos):
         """One decode step in the state's world; replaces ``state.cache``
-        (the jitted fn donates the old buffer) and returns (ids, logprobs)."""
+        (the jitted fn donates the old buffer) and returns (ids, logprobs).
+        ``self.last_moe_drop`` as in :meth:`prefill`."""
         _, dec = self.serve_fns(state.stages)
         with self.world(state.stages).mesh:
-            ids, lp, cache = dec(state.params, state.assignment, state.dyn,
-                                 state.cache, tokens, pos)
+            ids, lp, cache, drop = dec(state.params, state.assignment,
+                                       state.dyn, state.cache, tokens, pos)
         state.cache = cache
+        self._note_moe_drop(drop)
         return ids, lp
+
+    def _note_moe_drop(self, drop):
+        """Normalize a serve call's summed MoE drop signal to a mean
+        fraction.  Stays a device scalar — the server pays the host sync
+        only when it reads the telemetry."""
+        from repro.configs.base import BLOCK_MOE
+        n_moe = sum(1 for t in self.cfg.block_pattern() if t == BLOCK_MOE)
+        if n_moe == 0:
+            self.last_moe_drop = None
+            return
+        self.last_moe_drop = drop / float(n_moe * self.shapes.num_micro)
 
     # -- measured per-stage timers ----------------------------------------
     def measure_stage_times(self, state: EngineState, batch):

@@ -90,12 +90,12 @@ def run_serving(arch: str, *, stages: int = 4, micro: int = 2,
     outs = []
     t0 = time.perf_counter()
     with mesh:
-        ids, cache = prefill(params, assignment, dyn, cache,
-                             {"tokens": tokens})
+        ids, cache, _ = prefill(params, assignment, dyn, cache,
+                                {"tokens": tokens})
         outs.append(np.asarray(ids))
         for g in range(1, gen):
-            ids, lp, cache = decode(params, assignment, dyn, cache, ids,
-                                    jnp.int32(prompt_len + g - 1))
+            ids, lp, cache, _ = decode(params, assignment, dyn, cache, ids,
+                                       jnp.int32(prompt_len + g - 1))
             outs.append(np.asarray(ids))
             if rebalance_every and g % rebalance_every == 0:
                 # serving-time profile: survival-curve cost vector

@@ -109,6 +109,10 @@ def main(argv=None):
                     help="resume from the newest safe point in this "
                          "directory; the safe point carries the producing "
                          "RunSpec, so every other flag is ignored")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the session's structured telemetry stream "
+                         "(one JSON record per rebalance / resize / "
+                         "relayout / autoscale / log event) to this file")
     add_alias_flags(ap, TRAIN_ALIASES)
     add_spec_flags(ap)
     args = ap.parse_args(argv)
@@ -122,10 +126,18 @@ def main(argv=None):
         sess = Session(spec)
     with sess as s:
         out = s.train()
+    if args.events_out:
+        import dataclasses
+        import json
+        with open(args.events_out, "w") as f:
+            json.dump([dataclasses.asdict(ev) for ev in sess.events], f,
+                      indent=1)
+        print(f"wrote {len(sess.events)} events to {args.events_out}")
     ctl = out["controller"]
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
           f"in {out['wall_s']:.1f}s; rebalances={len(out['events'])}; "
           f"resizes={len(out['resizes'])}; "
+          f"relayouts={len(out['relayouts'])}; "
           f"final stages={out['final_stages']}; "
           f"controller[{ctl['mode']}] decided={ctl['decided']} "
           f"dropped={ctl['dropped']} stale={ctl['stale_rejected']}")

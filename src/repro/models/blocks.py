@@ -205,6 +205,7 @@ def slot_cache_spec(cfg: ModelConfig, mb: int, cache_len: int,
 def stats_spec(cfg: ModelConfig) -> Dict[str, Any]:
     E = max(1, cfg.num_experts)
     return dict(expert_load=_sds([E], jnp.float32),
+                moe_dropped=_sds([], jnp.float32),
                 ff_active=_sds([], jnp.float32),
                 attn_density=_sds([], jnp.float32))
 
@@ -392,9 +393,30 @@ def _attn_fwd(x, wq, wk, wv, wo, *, cfg, mode, cache, pos,
 # ---------------------------------------------------------------------------
 # MoE FFN (GShard-style capacity dispatch, cumsum position-in-expert)
 # ---------------------------------------------------------------------------
-def moe_ffn(p, x, cfg: ModelConfig):
-    """x: [mb, s, d] -> (y, expert_load [E]).  Top-k routing with capacity;
-    dispatch is vmapped per batch row to keep sorting/scatters shard-local."""
+def moe_ffn(p, x, cfg: ModelConfig, *, kernel_impl: str = "scan",
+            expert_map=None):
+    """x: [mb, s, d] -> (y, expert_load [E], aux_loss, dropped_frac).
+
+    Top-k routing with capacity; dispatch is vmapped per batch row to keep
+    sorting/scatters shard-local.  Routing (top-k, cumsum
+    position-in-expert, capacity drops) is IDENTICAL for every impl —
+    only the expert compute differs:
+
+      "reference"/"scan": the dense GShard capacity einsum over the
+        zero-padded [b, E, cap, d] buffer — every expert pays full
+        capacity-sized FLOPs (the numeric oracle).
+      "pallas": sort -> grouped ragged matmul -> unsort; each expert group
+        costs row tiles proportional to its measured routed load (empty
+        experts skip all tile work).  ``expert_map`` ([E] float, logical
+        expert -> physical group; None = identity) permutes only the
+        *physical group ordering* inside the kernel: per-token math is
+        row-wise, so y is bit-identical under any placement — a live expert
+        re-layout never perturbs training.  s == 1 (decode) takes the same
+        path: the PR 1 dense fallback does not apply here.
+
+    ``dropped_frac`` is the capacity-overflow drop fraction of routed
+    (token, expert) pairs this call — same routing ⇒ same drops on every
+    impl (asserted in tests)."""
     E, K = cfg.num_experts, cfg.experts_per_token
     b, s, d = x.shape
     cf = cfg.moe_capacity_factor or MOE_CAPACITY_FACTOR
@@ -406,8 +428,8 @@ def moe_ffn(p, x, cfg: ModelConfig):
     w, sel = jax.lax.top_k(probs, K)                           # [b,s,K]
     w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
 
-    def dispatch_row(xr, selr, wr):
-        # xr: [s,d]; selr, wr: [s,K]
+    def route_row(selr, wr):
+        # selr, wr: [s,K] -> flattened k-major routing decisions
         flat_e = selr.T.reshape(-1)                            # k-major [K*s]
         flat_t = jnp.tile(jnp.arange(s), (K,))
         flat_w = wr.T.reshape(-1)
@@ -415,16 +437,53 @@ def moe_ffn(p, x, cfg: ModelConfig):
         pos = jnp.cumsum(oh, axis=0) - oh                      # exclusive
         pos = jnp.sum(pos * oh, axis=-1)                       # [K*s]
         keep = pos < cap
-        slot = jnp.where(keep, flat_e * cap + pos, E * cap)
-        buf = jnp.zeros((E * cap + 1, d), xr.dtype)
-        buf = buf.at[slot].add(xr[flat_t])
-        buf = buf[:E * cap].reshape(E, cap, d)
-        return buf, (flat_t, flat_w, slot, keep)
+        return flat_e, flat_t, flat_w, pos, keep
 
-    buf, aux = jax.vmap(dispatch_row)(x, sel, w)               # [b,E,cap,d]
-    h = jnp.einsum("becd,edf->becf", buf, p["ewg"])
-    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf, p["ewi"])
-    out = jnp.einsum("becf,efd->becd", h, p["ewo"])            # [b,E,cap,d]
+    if kernel_impl == "pallas":
+        from repro.kernels.grouped_matmul import grouped_matmul
+        interpret = jax.default_backend() != "tpu"
+        if expert_map is None:
+            pm = jnp.arange(E, dtype=jnp.int32)
+        else:
+            pm = expert_map.astype(jnp.int32)                  # [E] perm
+
+        def dispatch_row(xr, selr, wr):
+            flat_e, flat_t, flat_w, pos, keep = route_row(selr, wr)
+            phys = pm[flat_e]
+            slot = jnp.where(keep, phys * cap + pos, E * cap)
+            buf = jnp.zeros((E * cap + 1, d), xr.dtype)
+            buf = buf.at[slot].add(xr[flat_t])
+            cnt = jnp.sum(jax.nn.one_hot(phys, E, dtype=jnp.int32)
+                          * keep[:, None], axis=0)             # [E] kept
+            return buf[:E * cap].reshape(E, cap, d), cnt, \
+                (flat_t, flat_w, slot, keep)
+
+        buf, cnt, aux = jax.vmap(dispatch_row)(x, sel, w)      # [b,E,cap,d]
+        xg = buf.reshape(b * E, cap, d)                        # batch-major
+        counts = cnt.reshape(b * E)
+        # physical group g (= bi*E + p) runs the LOGICAL expert mapped to
+        # it: gather weights through the inverse placement
+        inv = jnp.zeros((E,), jnp.int32).at[pm].set(
+            jnp.arange(E, dtype=jnp.int32))
+        gmm = lambda a, wg: grouped_matmul(a, wg, counts,
+                                           interpret=interpret)
+        h = gmm(xg, p["ewg"][inv])
+        h = jax.nn.silu(h) * gmm(xg, p["ewi"][inv])
+        out = gmm(h.astype(xg.dtype), p["ewo"][inv])
+        out = out.reshape(b, E, cap, d)
+    else:
+        def dispatch_row(xr, selr, wr):
+            flat_e, flat_t, flat_w, pos, keep = route_row(selr, wr)
+            slot = jnp.where(keep, flat_e * cap + pos, E * cap)
+            buf = jnp.zeros((E * cap + 1, d), xr.dtype)
+            buf = buf.at[slot].add(xr[flat_t])
+            buf = buf[:E * cap].reshape(E, cap, d)
+            return buf, (flat_t, flat_w, slot, keep)
+
+        buf, aux = jax.vmap(dispatch_row)(x, sel, w)           # [b,E,cap,d]
+        h = jnp.einsum("becd,edf->becf", buf, p["ewg"])
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf, p["ewi"])
+        out = jnp.einsum("becf,efd->becd", h, p["ewo"])        # [b,E,cap,d]
 
     def combine_row(outr, auxr):
         flat_t, flat_w, slot, keep = auxr
@@ -436,11 +495,16 @@ def moe_ffn(p, x, cfg: ModelConfig):
 
     y = jax.vmap(combine_row)(out, aux)
     load = jnp.sum(jax.nn.one_hot(sel, E), axis=(0, 1, 2))     # [E]
+    # capacity-overflow drops: routed (token, expert) pairs past each
+    # expert's cap (previously silent) — keep masks are identical across
+    # impls, so this is impl-independent by construction
+    keep_all = jax.vmap(lambda selr, wr: route_row(selr, wr)[4])(sel, w)
+    dropped = 1.0 - jnp.mean(keep_all.astype(jnp.float32))
     # auxiliary load-balancing loss (Mixtral-style), returned via stats
     me = jnp.mean(probs.reshape(-1, E), axis=0)
     ce = load / jnp.maximum(jnp.sum(load), 1.0)
     aux_loss = E * jnp.sum(me * ce)
-    return y, load, aux_loss
+    return y, load, aux_loss, dropped
 
 
 # ---------------------------------------------------------------------------
@@ -473,10 +537,13 @@ def _moe_block(p, x, *, cfg, mode, cache, pos, dyn, dyncfg,
         cache=cache, pos=pos, dyncfg=dyncfg, kernel_impl=kernel_impl)
     x = x + h
     hn = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
-    y, load, aux_loss = moe_ffn(p, hn, cfg)
+    y, load, aux_loss, dropped = moe_ffn(
+        p, hn, cfg, kernel_impl=kernel_impl,
+        expert_map=dyn.get("expert_map"))
     x = x + y
     stats = _zero_stats(cfg)
     stats["expert_load"] = load
+    stats["moe_dropped"] = dropped
     stats["ff_active"] = jnp.float32(1.0)
     stats["attn_density"] = density
     return x, cache, stats, aux_loss

@@ -143,6 +143,16 @@ def init_dyn(cfg: ModelConfig, dcfg: DistConfig,
         # enable MoD on every k-th slot is decided by the controller via
         # mod_on (tied to global layer index, migrates with the slot)
         dyn["mod_on"] = jnp.zeros((S, L_max), jnp.float32)
+    if dyncfg.expert_relayout and cfg.num_experts:
+        # logical expert -> physical kernel group, per slot (identity at
+        # init).  Stored float32 so the leaf rides `freezable`'s float-only
+        # operand rule; its [S, L_max] leading dims migrate/resize with
+        # every other dyn leaf.  Only the pallas grouped path reads it —
+        # and per-token math is placement-invariant, so a re-layout never
+        # changes the model function (bit-identity tested).
+        dyn["expert_map"] = jnp.tile(
+            jnp.arange(cfg.num_experts, dtype=jnp.float32),
+            (S, L_max, 1))
     return dyn
 
 

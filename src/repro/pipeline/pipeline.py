@@ -307,7 +307,9 @@ def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
 def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes):
     """Returns decode_fn(params, assignment, dyn, cache, tokens, pos)
-    -> (next_ids [m, B] i32, logprobs [m, B] f32, new_cache).
+    -> (next_ids [m, B] i32, logprobs [m, B] f32, new_cache,
+    moe_drop_sum f32 — MoE capacity-drop fractions summed over
+    (moe slot, microbatch) passes; 0 for non-MoE archs).
 
     tokens: [m, B] current token per request; pos: scalar position (every
     lane at the same point, the one-shot serving path) or [m, B] per-lane
@@ -339,6 +341,9 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
         buf = _init_carry(cfg, dyncfg, shapes, dt, decode=True)
         ids_out = jnp.zeros((m, shapes.mb_global), jnp.int32)
         lp_out = jnp.zeros((m, shapes.mb_global), jnp.float32)
+        drop_out = jnp.float32(0.0)   # MoE capacity-drop fraction, summed
+        #   over (moe slot, microbatch) passes — host side divides by the
+        #   pass count; zero for non-MoE archs
 
         def ingest(t):
             ti = jnp.clip(t, 0, m - 1)
@@ -352,7 +357,7 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
             return {"x": x[:, None, :].astype(dt)}
 
         def tick(state, t):
-            buf, cache_s, ids_out, lp_out = state
+            buf, cache_s, ids_out, lp_out, drop_out = state
             mi = jnp.clip(t - idx, 0, m - 1)
             mvalid = ((t - idx) >= 0) & ((t - idx) < m)
             fresh = jax.lax.cond(
@@ -363,9 +368,11 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
             cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
             pos_mb = (jax.lax.dynamic_index_in_dim(pos, mi, 0, False)
                       if per_lane else pos)
-            carry, new_cache_mb, _, _ = M.stage_forward(
+            carry, new_cache_mb, st, _ = M.stage_forward(
                 cfg, dcfg, dyncfg, "decode", stages, shared, tags, dyn_s,
                 carry, cache_mb, pos_mb, idx * tags.shape[0])
+            drop_out = drop_out + (jnp.sum(st["moe_dropped"])
+                                   * mvalid.astype(jnp.float32))
             cache_s = jax.tree.map(
                 lambda full, nc, old: jax.lax.dynamic_update_index_in_dim(
                     full, jnp.where(mvalid, nc, old), mi, 1),
@@ -394,24 +401,26 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
             carry = pin(carry)
             buf = jax.tree.map(
                 lambda a: jax.lax.ppermute(a, "model", _ring(n)), carry)
-            return (buf, cache_s, ids_out, lp_out), None
+            return (buf, cache_s, ids_out, lp_out, drop_out), None
 
         if dcfg.unroll_ticks:
-            state = (buf, cache_s, ids_out, lp_out)
+            state = (buf, cache_s, ids_out, lp_out, drop_out)
             for t in range(T):
                 state, _ = tick(state, jnp.int32(t))
-            (buf, cache_s, ids_out, lp_out) = state
+            (buf, cache_s, ids_out, lp_out, drop_out) = state
         else:
-            (buf, cache_s, ids_out, lp_out), _ = jax.lax.scan(
-                tick, (buf, cache_s, ids_out, lp_out), jnp.arange(T))
+            (buf, cache_s, ids_out, lp_out, drop_out), _ = jax.lax.scan(
+                tick, (buf, cache_s, ids_out, lp_out, drop_out),
+                jnp.arange(T))
         # ids live on the last stage; broadcast (tiny)
         ids_out = jax.lax.psum(
             jnp.where(idx == n - 1, ids_out, jnp.zeros_like(ids_out)),
             "model")
         lp_out = jax.lax.psum(
             jnp.where(idx == n - 1, lp_out, jnp.zeros_like(lp_out)), "model")
+        drop_out = jax.lax.psum(drop_out, "model")
         new_cache = jax.tree.map(lambda a: a[None], cache_s)
-        return ids_out, lp_out, new_cache
+        return ids_out, lp_out, new_cache, drop_out
 
     in_specs = (
         {"embed": P(), "final_norm": P(), "shared": P(),
@@ -420,7 +429,7 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
         P("model"), P("model"), P("model"), P(), P())
     return _shard_map(
         pipe, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(), P(), P("model")), axis_names={"model"})
+        out_specs=(P(), P(), P("model"), P()), axis_names={"model"})
 
 
 # ---------------------------------------------------------------------------
@@ -429,7 +438,7 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
 def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
                      dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes):
     """Returns prefill_fn(params, assignment, dyn, cache, batch)
-    -> (last_ids [m, B] i32, new_cache)."""
+    -> (last_ids [m, B] i32, new_cache, moe_drop_sum f32)."""
     S = dcfg.num_stages
     dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
 
@@ -449,6 +458,7 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
 
         buf = _init_carry(cfg, dyncfg, shapes, dt)
         ids_out = jnp.zeros((m, shapes.mb_global), jnp.int32)
+        drop_out = jnp.float32(0.0)   # MoE capacity drops, as in decode
 
         def ingest(t):
             ti = jnp.clip(t, 0, m - 1)
@@ -470,7 +480,7 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
             return carry
 
         def tick(state, t):
-            buf, cache_s, ids_out = state
+            buf, cache_s, ids_out, drop_out = state
             mi = jnp.clip(t - idx, 0, m - 1)
             mvalid = ((t - idx) >= 0) & ((t - idx) < m)
             fresh = jax.lax.cond(
@@ -479,9 +489,11 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
             carry = jax.tree.map(
                 lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
             cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
-            carry, new_cache_mb, _, _ = M.stage_forward(
+            carry, new_cache_mb, st, _ = M.stage_forward(
                 cfg, dcfg, dyncfg, "prefill", stages, shared, tags, dyn_s,
                 carry, cache_mb, pos, idx * tags.shape[0])
+            drop_out = drop_out + (jnp.sum(st["moe_dropped"])
+                                   * mvalid.astype(jnp.float32))
             cache_s = jax.tree.map(
                 lambda full, nc, old: jax.lax.dynamic_update_index_in_dim(
                     full, jnp.where(mvalid, nc, old), mi, 1),
@@ -499,20 +511,21 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
             carry = pin(carry)
             buf = jax.tree.map(
                 lambda a: jax.lax.ppermute(a, "model", _ring(n)), carry)
-            return (buf, cache_s, ids_out), None
+            return (buf, cache_s, ids_out, drop_out), None
 
         if dcfg.unroll_ticks:
-            state = (buf, cache_s, ids_out)
+            state = (buf, cache_s, ids_out, drop_out)
             for t in range(T):
                 state, _ = tick(state, jnp.int32(t))
-            (buf, cache_s, ids_out) = state
+            (buf, cache_s, ids_out, drop_out) = state
         else:
-            (buf, cache_s, ids_out), _ = jax.lax.scan(
-                tick, (buf, cache_s, ids_out), jnp.arange(T))
+            (buf, cache_s, ids_out, drop_out), _ = jax.lax.scan(
+                tick, (buf, cache_s, ids_out, drop_out), jnp.arange(T))
         ids_out = jax.lax.psum(
             jnp.where(idx == n - 1, ids_out, jnp.zeros_like(ids_out)),
             "model")
-        return ids_out, jax.tree.map(lambda a: a[None], cache_s)
+        drop_out = jax.lax.psum(drop_out, "model")
+        return ids_out, jax.tree.map(lambda a: a[None], cache_s), drop_out
 
     in_specs = (
         {"embed": P(), "final_norm": P(), "shared": P(),
@@ -521,4 +534,4 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
         P("model"), P("model"), P("model"), P())
     return _shard_map(
         pipe, mesh=mesh, in_specs=in_specs,
-        out_specs=(P(), P("model")), axis_names={"model"})
+        out_specs=(P(), P("model"), P()), axis_names={"model"})

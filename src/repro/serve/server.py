@@ -155,6 +155,7 @@ class ElasticServer:
         stages_hist: List[int] = []
         depth_hist: List[int] = []
         occ_hist: List[float] = []
+        moe_drops = []   # device scalars; synced once after the trace drains
         t_run = time.perf_counter()
         while tick < max_ticks and not sched.done:
             t0 = time.perf_counter()
@@ -167,6 +168,8 @@ class ElasticServer:
                                                 adm.admit_mask)
                 sched.note_prefill(adm, np.asarray(ids), tick)
                 emitted += len(adm.full_len_lanes)
+                if self.engine.last_moe_drop is not None:
+                    moe_drops.append(self.engine.last_moe_drop)
             dec = sched.plan_decode()
             if dec is not None:
                 ids, _lp = self.engine.decode(self.state,
@@ -174,6 +177,8 @@ class ElasticServer:
                                               jnp.asarray(dec.pos))
                 sched.note_decode(dec, np.asarray(ids), tick)
                 emitted += len(dec.lanes)
+                if self.engine.last_moe_drop is not None:
+                    moe_drops.append(self.engine.last_moe_drop)
             perm = sched.maybe_defrag(tick)
             if perm is not None:
                 self.state.cache = _permute_lanes(self.state.cache, perm,
@@ -250,5 +255,10 @@ class ElasticServer:
             "latency_p50_s": _pct(token_lat, 50),
             "latency_p95_s": _pct(token_lat, 95),
             "measured_stage_times": measured,
+            # MoE capacity-overflow telemetry: mean drop fraction over every
+            # prefill/decode call of the trace (None for non-MoE archs)
+            "moe_dropped_mean": (float(np.mean([float(d)
+                                                for d in moe_drops]))
+                                 if moe_drops else None),
         }
         return report

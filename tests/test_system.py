@@ -143,13 +143,13 @@ cache = M.init_cache(cfg, dcfg, micro, mbg, seq + gen)
 prefill = jax.jit(build_prefill_fn(cfg, dcfg, dyncfg, mesh, shapes))
 decode = jax.jit(build_decode_fn(cfg, dcfg, dyncfg, mesh, shapes))
 with mesh:
-    ids0, cache = prefill(params, assignment, dyn, cache,
-                          {"tokens": tokens})
+    ids0, cache, _ = prefill(params, assignment, dyn, cache,
+                             {"tokens": tokens})
     seqs = [np.asarray(ids0)]
     toks = ids0
     for g in range(1, gen):
-        ids, lp, cache = decode(params, assignment, dyn, cache, toks,
-                                jnp.int32(seq + g - 1))
+        ids, lp, cache, _ = decode(params, assignment, dyn, cache, toks,
+                                   jnp.int32(seq + g - 1))
         seqs.append(np.asarray(ids))
         toks = ids
 
