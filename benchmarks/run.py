@@ -19,9 +19,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_elastic, bench_idleness, bench_kernels,
-                            bench_moe, bench_overhead, bench_repack,
-                            bench_roofline, bench_serve, bench_throughput)
+    from benchmarks import (bench_cluster, bench_elastic, bench_idleness,
+                            bench_kernels, bench_moe, bench_overhead,
+                            bench_repack, bench_roofline, bench_serve,
+                            bench_throughput)
     benches = {
         "idleness": bench_idleness.main,        # Fig. 1
         "throughput": bench_throughput.main,    # Fig. 3 (+ bubble ratios)
@@ -33,6 +34,7 @@ def main() -> None:
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
         "elastic": bench_elastic.main,          # §3.4 live shrink (engine)
         "serve": bench_serve.main,              # elastic continuous batching
+        "cluster": bench_cluster.main,          # multi-tenant pool (§14)
     }
     names = (args.only.split(",") if args.only else list(benches))
     for name in names:

@@ -1,0 +1,138 @@
+"""Two-tenant HTTP contention smoke (CI gate for DESIGN.md §14).
+
+Spawns ONE HTTP job manager over a 6-worker pool, then a CLI trainer
+(tenant ``train``, priority 0, 4 stages) and a CLI elastic server (tenant
+``serve``, priority 10, 2..4 stages, bursty trace) as separate processes.
+The serve burst must steal training workers (the trainer shrinks at a safe
+point) and the lull must yield them back (the trainer absorbs) — asserted
+from both sides' ``--events-out`` streams.
+
+  PYTHONPATH=src python scripts/cluster_smoke.py
+
+Exit 0 = contention observed end-to-end; non-zero = a tenant died or the
+steal/yield never crossed the scheduler.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+from repro.cluster.http_rpc import HttpJobManager, spawn_http_manager  # noqa: E402
+
+ENV = {**os.environ, "PYTHONPATH": SRC, "REPRO_TRAIN_DEVICES": "4"}
+
+
+def _spawn_cli(module: str, args: list, log_path: str) -> subprocess.Popen:
+    log = open(log_path, "w")
+    return subprocess.Popen([sys.executable, "-m", module] + args,
+                            stdout=log, stderr=subprocess.STDOUT,
+                            text=True, env=ENV)
+
+
+def main() -> int:
+    run_dir = tempfile.mkdtemp(prefix="cluster_smoke_")
+    mgr, url = spawn_http_manager(run_dir, 6, spares=0, idle_timeout_s=900)
+    train_events = os.path.join(run_dir, "train_events.json")
+    serve_events = os.path.join(run_dir, "serve_events.json")
+    train_log = os.path.join(run_dir, "train.log")
+    serve_log = os.path.join(run_dir, "serve.log")
+    print(f"manager {url} (pool 6, journal {run_dir})")
+    children = []
+    try:
+        train = _spawn_cli("repro.launch.train", [
+            "--arch", "smollm-360m", "--layers", "8", "--d-model", "64",
+            "--stages", "4", "--steps", "120", "--seq", "32",
+            "--num-micro", "2", "--mb-global", "2", "--log-every", "1000",
+            "--rebalance-every", "4", "--job-manager", "http",
+            "--manager-url", url, "--tenant-id", "train", "--priority", "0",
+            "--set", "controller.repack.target=2",
+            "--events-out", train_events], train_log)
+        children.append(("train", train, train_log))
+        # let the trainer claim its 4 before the server joins, so the serve
+        # burst has to STEAL (a fresh pool would hand it free workers)
+        probe = HttpJobManager(url, client_id="smoke-probe")
+        for _ in range(600):
+            t = probe.cluster_metrics()["tenants"].get("train")
+            if t and len(t["granted"]) == 4:
+                break
+            time.sleep(0.1)
+        else:
+            raise RuntimeError("trainer never registered with the manager")
+        print("trainer registered: 4 workers granted")
+        serve = _spawn_cli("repro.launch.serve", [
+            "--elastic", "--autoscale", "--arch", "smollm-360m",
+            "--layers", "8", "--d-model", "64", "--stages", "4",
+            "--micro", "2", "--mb-global", "2", "--prompt-len", "8",
+            "--gen", "12", "--requests", "300", "--burst-period", "24",
+            "--burst-len", "6", "--burst-rate", "4", "--lull-rate", "0",
+            "--min-stages", "2", "--queue-high", "2",
+            "--occupancy-low", "0.6", "--patience", "2", "--cooldown", "3",
+            "--latency-slo-s", "0.5", "--log-every", "1000",
+            "--job-manager", "http", "--manager-url", url,
+            "--tenant-id", "serve", "--priority", "10",
+            "--events-out", serve_events], serve_log)
+        children.append(("serve", serve, serve_log))
+        for name, proc, log_path in children:
+            rc = proc.wait(timeout=1500)
+            if rc != 0:
+                with open(log_path) as f:
+                    print(f"--- {name} log tail ---\n{f.read()[-4000:]}")
+                raise RuntimeError(f"{name} tenant exited {rc}")
+            print(f"{name} tenant finished cleanly")
+        probe.close()
+    except Exception as e:
+        print(f"SMOKE FAILED: {e}", file=sys.stderr)
+        for name, proc, log_path in children:
+            if proc.poll() is None:
+                proc.kill()
+            if os.path.exists(log_path):
+                with open(log_path) as f:
+                    print(f"--- {name} log tail ---\n{f.read()[-2000:]}",
+                          file=sys.stderr)
+        return 1
+    finally:
+        try:
+            HttpJobManager(url, client_id="smoke-kill", timeout_s=10,
+                           shutdown_on_close=True).close()
+        except Exception:
+            pass
+        if mgr.poll() is None:
+            mgr.kill()
+
+    with open(train_events) as f:
+        train_kinds = [ev["kind"] for ev in json.load(f)]
+    with open(serve_events) as f:
+        serve_kinds = [ev["kind"] for ev in json.load(f)]
+    print(f"train events: {train_kinds}")
+    print(f"serve events: {serve_kinds}")
+    failures = []
+    if "steal" not in serve_kinds:
+        failures.append("serve never stole (no urgent grow)")
+    if "preempt" not in train_kinds:
+        failures.append("train never saw the preemption directive")
+    if "yield" not in serve_kinds:
+        failures.append("serve never yielded back")
+    if "absorb" not in train_kinds:
+        failures.append("train never absorbed the yielded workers")
+    if failures:
+        print("SMOKE FAILED: " + "; ".join(failures), file=sys.stderr)
+        for log_path in (train_log, serve_log):
+            with open(log_path) as f:
+                print(f"--- {log_path} ---\n{f.read()[-2500:]}",
+                      file=sys.stderr)
+        return 1
+    print("SMOKE OK: steal -> safe-point shrink -> yield -> absorb, "
+          "two processes, one pool")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -159,10 +159,20 @@ _COMMON: List[Alias] = [
           help="feed MEASURED per-stage wall times (engine stage probe) "
                "into the straggler detector / serve report"),
     Alias("--job-manager", "cluster.job_manager",
-          choices=["inproc", "file"],
+          choices=["inproc", "file", "http"],
           help="'file' puts the WorkerPool behind a file-RPC server in a "
-               "separate process"),
+               "separate process; 'http' behind the multi-tenant cluster "
+               "scheduler's HTTP job manager"),
     Alias("--job-manager-dir", "cluster.job_manager_dir"),
+    Alias("--tenant-id", "cluster.tenant_id",
+          help="register this run as a cluster tenant (multi-tenant "
+               "scheduling; requires --job-manager file|http)"),
+    Alias("--priority", "cluster.priority",
+          help="tenant priority — higher-priority tenants can steal "
+               "workers from lower ones at their next safe point"),
+    Alias("--manager-url", "cluster.manager_url",
+          help="attach to an already-running HTTP job manager "
+               "(http://host:port) instead of spawning one"),
     Alias("--chaos", "faults.enabled", flag=True,
           help="inject a seeded fault schedule (worker crashes, manager "
                "kills, RPC loss) — see faults.* fields and DESIGN.md §12"),

@@ -49,7 +49,9 @@ from repro.api.specs import RunSpec
 class SessionEvent:
     """One telemetry record: ``kind`` in {"log", "rebalance", "resize",
     "autoscale", "safepoint", "relayout", "serve_summary",
-    "train_summary"}."""
+    "train_summary", "tenant_register", "preempt", "absorb", "steal",
+    "yield"} — the last five are the multi-tenant cluster stream
+    (DESIGN.md §14)."""
     kind: str
     step: int
     data: Dict[str, Any]
@@ -143,18 +145,44 @@ class Session:
     def _connect_job_manager(self, plan=None, injector=None,
                              pool_state=None):
         """'file' spawns the WorkerPool server in a separate process and
-        returns a client speaking atomic req/resp JSON files to it; 'inproc'
-        returns None (the engine wraps its own pool).  ``pool_state`` (from
-        a safe point) is seeded into the fresh directory as the server's
-        journal, so the respawned server starts from the crashed run's pool
-        topology; with an RPC-chaos ``plan`` the client is the chaos
-        transport."""
+        returns a client speaking atomic req/resp JSON files to it; 'http'
+        connects to ``cluster.manager_url`` when set (two Sessions in two
+        processes contending over ONE manager — DESIGN.md §14) or spawns a
+        private HTTP manager; 'inproc' returns None (the engine wraps its
+        own pool).  ``pool_state`` (from a safe point) is seeded into the
+        fresh directory as the server's journal, so the respawned server
+        starts from the crashed run's pool topology; with an RPC-chaos
+        ``plan`` the client is the chaos transport."""
         import json
 
         from repro.cluster.rpc import FileJobManager, spawn_file_manager
         c = self.spec.cluster
         if c.job_manager == "inproc":
             return None
+        if c.job_manager == "http":
+            from repro.cluster.http_rpc import (HttpJobManager,
+                                                spawn_http_manager)
+            if c.manager_url:
+                # shared manager owned by someone else: never shut it down
+                self._jm = HttpJobManager(c.manager_url,
+                                          timeout_s=c.rpc_timeout_s,
+                                          shutdown_on_close=False)
+                return self._jm
+            if c.job_manager_dir:
+                os.makedirs(c.job_manager_dir, exist_ok=True)
+                run_dir = tempfile.mkdtemp(prefix="run_",
+                                           dir=c.job_manager_dir)
+            else:
+                run_dir = tempfile.mkdtemp(prefix="dynmo_jm_")
+            if pool_state is not None:
+                with open(os.path.join(run_dir, "state.json"), "w") as f:
+                    json.dump({"pool": pool_state, "answered": {}}, f)
+            self._jm_dir = run_dir
+            self._jm_proc, url = spawn_http_manager(
+                run_dir, self.spec.parallel.stages, spares=c.spares)
+            self._jm = HttpJobManager(url, timeout_s=c.rpc_timeout_s,
+                                      shutdown_on_close=True)
+            return self._jm
         # always a FRESH directory (a unique subdir when the caller names a
         # location): leftover req/resp files from a previous run would be
         # replayed by the new server and misread by the new client
@@ -177,11 +205,37 @@ class Session:
             self._jm = FileJobManager(jm_dir, timeout_s=c.rpc_timeout_s)
         return self._jm
 
+    def _register_tenant(self, jm, *, kind: str, workers: int,
+                         max_workers: int, min_workers: int):
+        """Register this Session with the cluster scheduler when the spec
+        names a tenant.  Returns the granted worker ids (to bind the engine
+        onto) or None when running single-tenant."""
+        c = self.spec.cluster
+        if jm is None or not c.tenant_id \
+                or not hasattr(jm, "register_tenant"):
+            return None
+        granted = jm.register_tenant(
+            c.tenant_id, priority=c.priority, kind=kind, workers=workers,
+            max_workers=max_workers, min_workers=min_workers)
+        if not granted:
+            raise RuntimeError(
+                f"cluster scheduler granted no workers to tenant "
+                f"{c.tenant_id!r} (pool exhausted?)")
+        self._emit("tenant_register", -1, tenant=c.tenant_id,
+                   priority=c.priority, tenant_kind=kind,
+                   granted=list(granted))
+        return granted
+
     # =======================================================================
     # Training
     # =======================================================================
-    def train(self, steps: Optional[int] = None) -> Dict[str, Any]:
+    def train(self, steps: Optional[int] = None, *,
+              shrink_at: Optional[Dict[int, int]] = None) -> Dict[str, Any]:
         """Run the DynMo training loop for ``steps`` (default: spec.steps).
+        ``shrink_at`` scripts {step: target_stages} voluntary safe-point
+        shrinks (tests/demos) through the same epoch-fenced injection an
+        external preemption directive uses — the bit-identity oracle for
+        the multi-tenant steal path (DESIGN.md §14).
         Returns the report dict (losses, events, resizes, telemetry)."""
         import jax
         import jax.numpy as jnp
@@ -305,7 +359,19 @@ class Session:
              _) = engine._place(w, p, o, d, state.assignment)
             engine.epoch = int(rmeta.get("epoch", 0))
         else:
-            state = engine.init_state(jax.random.PRNGKey(spec.seed))
+            tenant_min = max(1, repack_target)
+            granted = self._register_tenant(
+                jm, kind="train", workers=stages, max_workers=stages,
+                min_workers=tenant_min)
+            if granted is not None:
+                # train on exactly the granted workers (arbitrary global
+                # ids — another tenant may hold 0..k): same bind +
+                # sized-init path the checkpoint resume uses
+                engine.bind_workers([int(w) for w in granted])
+                state = engine.init_state(jax.random.PRNGKey(spec.seed),
+                                          stages=len(granted))
+            else:
+                state = engine.init_state(jax.random.PRNGKey(spec.seed))
 
         ccfg = ControllerConfig(method=spec.controller.balancer,
                                 rebalance_every=spec.controller
@@ -394,6 +460,15 @@ class Session:
                   f"{rz.to_stages} stages; workers {rz.workers}; "
                   f"pool active={engine.jm.num_active}; schedule "
                   f"{rz.ticks_before}->{rz.ticks_after} ticks")
+
+        # multi-tenant: poll the cluster scheduler's directive mailbox each
+        # step (preempt = shrink at this safe point; offer = absorb free
+        # workers back off-peak, DESIGN.md §14)
+        multi_tenant = (jm is not None and spec.cluster.tenant_id
+                        and getattr(jm, "tenant", None))
+        tenant_min = max(1, repack_target)
+        last_cluster_resize = start_step - 1
+        absorb_cooldown = max(1, spec.controller.rebalance_every)
 
         losses, events, step_times, stages_hist = [], [], [], []
         relayouts: List[Dict[str, Any]] = []
@@ -497,6 +572,51 @@ class Session:
                     stage_times=measured))
                 if spec.controller.async_drain:
                     cp.drain()
+
+            # ---- cluster-scheduler directives (multi-tenant): a steal by
+            # a higher-priority tenant arrives as a preemption directive
+            # and is turned into an externally-originated ResizePlan — the
+            # SAME epoch-fenced mailbox the controller uses, applied at
+            # this step's safe point just below.  Level-triggered: if a
+            # concurrent resize fences the injected plan off, the next poll
+            # re-delivers the directive.
+            if multi_tenant:
+                from repro.cluster.rpc import JobManagerUnavailable
+                try:
+                    directives = jm.poll_cluster()
+                except (JobManagerUnavailable, RuntimeError):
+                    directives = None
+                if directives and directives["preempt"] > 0:
+                    target = max(tenant_min,
+                                 state.stages - directives["preempt"])
+                    if target < state.stages:
+                        cp.inject_resize(engine.epoch, target)
+                        last_cluster_resize = step
+                        self._emit("preempt", step,
+                                   due=directives["preempt"],
+                                   target_stages=target)
+                elif (directives and directives["offer"] > 0
+                        and state.stages < stages
+                        and step - last_cluster_resize >= absorb_cooldown):
+                    prev = state.stages
+                    state = engine.grow(
+                        state, min(directives["offer"],
+                                   stages - state.stages), step=step)
+                    if state.stages > prev:   # scheduler may grant nothing
+                        cp.with_ctrl(
+                            lambda c: setattr(c.ccfg, "repack", False))
+                        after_resize(step, "absorb")
+                        self._emit("absorb", step,
+                                   workers=state.stages - prev)
+                        last_cluster_resize = step
+
+            # ---- scripted voluntary shrink (tests/demos): same injection
+            # point and mailbox as an external preemption, so a scripted
+            # run is the loss-trajectory oracle for a stolen one
+            if shrink_at and step in shrink_at \
+                    and shrink_at[step] < state.stages:
+                cp.inject_resize(engine.epoch, shrink_at[step],
+                                 policy="scripted")
 
             # ---- safe point: apply the newest finished plan (epoch-
             # fenced; a plan decided against a pre-resize world is
@@ -730,6 +850,11 @@ class Session:
                 queue_high=s.queue_high, occupancy_low=s.occupancy_low,
                 latency_slo_s=s.latency_slo_s))
         jm = self._connect_job_manager(plan=plan, injector=injector)
+        # multi-tenant: start on the scheduler's grant (usually min_stages
+        # — serve small, steal under load) instead of the spec's maximum
+        granted = self._register_tenant(
+            jm, kind="serve", workers=s.min_stages,
+            max_workers=spec.parallel.stages, min_workers=s.min_stages)
         if injector is not None and spec.cluster.job_manager == "file":
 
             def _kill_manager():
@@ -749,7 +874,8 @@ class Session:
                             scaler=scaler, min_stages=s.min_stages,
                             seed=spec.seed, defrag_every=s.defrag_every,
                             measure_stage_times=spec.controller
-                            .measure_stage_times)
+                            .measure_stage_times,
+                            initial_workers=granted)
         self._server = srv
         report = srv.serve(trace, autoscale=spec.cluster.autoscale,
                            resize_at=resize_at, max_ticks=s.max_ticks,
@@ -766,10 +892,21 @@ class Session:
                        from_stages=rz["from_stages"],
                        to_stages=rz["to_stages"],
                        workers=list(rz["workers"]))
+            if granted is not None and rz["kind"] == "shrink":
+                # tenant-scoped release IS a yield: the freed workers go
+                # back through the scheduler to whoever is owed/offered
+                self._emit("yield", rz["step"],
+                           workers=list(rz["workers"]),
+                           tenant=spec.cluster.tenant_id)
         for d in report["autoscale_decisions"]:
             self._emit("autoscale", d["step"], action=d["action"],
                        workers=d["workers"], reason=d["reason"],
                        ids=list(d["ids"]))
+            if (granted is not None and d["action"] == "grow"
+                    and d.get("urgent")):
+                self._emit("steal", d["step"], workers=d["workers"],
+                           reason=d["reason"],
+                           tenant=spec.cluster.tenant_id)
         self._emit("serve_summary", report["ticks"],
                    completions=len(report["completions"]),
                    total_tokens=report["total_tokens"],

@@ -30,14 +30,14 @@ from typing import Any, Dict, List, Optional
 from repro.configs.base import DTYPE_BYTES
 from repro.dynamics.config import DynamicsConfig
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 DYNAMISM_KINDS = ("none", "moe", "pruning", "freezing", "sparse_attention",
                   "early_exit", "mod")
 KERNEL_IMPLS = ("reference", "scan", "pallas")
 BALANCERS = ("diffusion", "partition")
 REPACK_POLICIES = ("adjacent", "first_fit")
-JOB_MANAGERS = ("inproc", "file")
+JOB_MANAGERS = ("inproc", "file", "http")
 
 
 class SpecError(ValueError):
@@ -245,9 +245,23 @@ class ClusterSpec:
     #   initial set — a post-crash grow can be granted a NEVER-seen process
     #   id instead of waiting for the dead machine to revive
     grow_back: Optional[int] = None   # DEPRECATED: fixed-step re-expansion
+    # ---- multi-tenant scheduling (schema v3; DESIGN.md §14) ----
+    tenant_id: Optional[str] = None   # register this Session as a tenant
+    #   of a shared cluster scheduler; unset = legacy single-Session pool
+    priority: int = 0   # steal arbitration rank: a steal only preempts
+    #   STRICTLY lower-priority tenants
+    manager_url: Optional[str] = None   # connect to an existing HTTP job
+    #   manager instead of spawning one (two Sessions contending over one
+    #   pool each point here); requires job_manager='http'
 
     def __post_init__(self):
         _check_choice(self.job_manager, JOB_MANAGERS, "cluster.job_manager")
+        if self.tenant_id is not None:
+            _check(isinstance(self.tenant_id, str) and self.tenant_id,
+                   "cluster.tenant_id",
+                   f"must be a non-empty string, got {self.tenant_id!r}")
+        _check(isinstance(self.priority, int), "cluster.priority",
+               f"must be an int, got {self.priority!r}")
         _check_choice(self.watermark_clock, ("wall", "logical"),
                       "cluster.watermark_clock")
         _check(self.heartbeat_timeout > 0, "cluster.heartbeat_timeout",
@@ -401,6 +415,16 @@ class RunSpec:
             _check(self.cluster.autoscale, "cluster.simulate_recover",
                    "requires cluster.autoscale=true (heartbeat recovery is "
                    "an autoscaler signal)")
+        if self.cluster.manager_url is not None:
+            _check(self.cluster.job_manager == "http",
+                   "cluster.manager_url",
+                   "connecting to an existing manager requires "
+                   "cluster.job_manager='http'")
+        if self.cluster.tenant_id is not None:
+            _check(self.cluster.job_manager != "inproc",
+                   "cluster.tenant_id",
+                   "tenant registration needs a shared manager process; "
+                   "cluster.job_manager must be 'file' or 'http'")
         if self.cluster.autoscale_watermark:
             _check(self.cluster.autoscale, "cluster.autoscale_watermark",
                    "requires cluster.autoscale=true")
@@ -522,7 +546,21 @@ def _upgrade_v1(d: Dict[str, Any]) -> Dict[str, Any]:
     return d
 
 
-_UPGRADERS = {1: _upgrade_v1}
+def _upgrade_v2(d: Dict[str, Any]) -> Dict[str, Any]:
+    """v2 -> v3: multi-tenant cluster scheduling (DESIGN.md §14) — adds
+    ``cluster.tenant_id`` / ``cluster.priority`` / ``cluster.manager_url``
+    and the 'http' job-manager choice.  All inert by default (no tenant id
+    = legacy single-Session pool), so the upgrade is purely additive."""
+    d["schema_version"] = 3
+    c = d.setdefault("cluster", {})
+    if isinstance(c, dict):
+        c.setdefault("tenant_id", None)
+        c.setdefault("priority", 0)
+        c.setdefault("manager_url", None)
+    return d
+
+
+_UPGRADERS = {1: _upgrade_v1, 2: _upgrade_v2}
 
 
 # ---------------------------------------------------------------------------

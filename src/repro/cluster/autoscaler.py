@@ -63,6 +63,9 @@ class ScaleDecision:
     ids: List[int] = dataclasses.field(default_factory=list)
     # concrete worker ids, when the signal names them (evict: the dead
     # workers; grow: the recovered ones) — empty for watermark decisions
+    urgent: bool = False
+    # hard pressure (SLO breach / deep queue): on a multi-tenant manager a
+    # grow may escalate to a cluster-scheduler *steal* (DESIGN.md §14)
 
 
 _NONE = "none"
@@ -279,10 +282,16 @@ class Autoscaler:
         if (self._pressure_streak >= self.cfg.patience
                 and stages < self.cfg.max_stages):
             self._pressure_streak = 0
+            # urgent = SLO actually breached, or the queue runs at twice
+            # the grow watermark — worth preempting a lower-priority
+            # tenant for, not just waiting on free capacity
+            urgent = (self.cfg.latency_slo_s > 0
+                      and latency_s > self.cfg.latency_slo_s) or (
+                          queue_depth >= 2 * self.cfg.queue_high)
             decision = ScaleDecision(
                 step, "grow", 1,
                 f"load: queue={queue_depth} latency={latency_s * 1e3:.0f}ms "
-                f"at occupancy {occupancy:.0%}")
+                f"at occupancy {occupancy:.0%}", urgent=urgent)
         elif (self._drain_streak >= self.cfg.patience
                 and stages > self.cfg.min_stages):
             self._drain_streak = 0

@@ -118,6 +118,78 @@ class JobManagerClient(Protocol):
     def close(self) -> None: ...
 
 
+class TenantVerbsMixin:
+    """Multi-tenant verbs shared by the file and HTTP clients (DESIGN.md
+    §14).  Once ``register_tenant`` has run, the plain ``release``/
+    ``request`` verbs become tenant-scoped automatically (the payload
+    carries the tenant id), so the elastic engine's existing release/grant
+    hooks participate in scheduler arbitration without knowing it."""
+
+    tenant: Optional[str] = None
+
+    def _call(self, op: str, **payload) -> dict:  # provided by the client
+        raise NotImplementedError
+
+    def _tenant_kw(self) -> dict:
+        return {"tenant": self.tenant} if self.tenant else {}
+
+    def register_tenant(self, tenant_id: str, *, priority: int = 0,
+                        kind: str = "train", workers: int = 0,
+                        max_workers: Optional[int] = None,
+                        min_workers: int = 1) -> List[int]:
+        """Join the cluster; returns the initial grant.  Idempotent — a
+        retried registration sees the tenant's current grant."""
+        out = self._call("register", tenant=tenant_id,
+                         priority=int(priority), kind=kind,
+                         workers=int(workers),
+                         max_workers=max_workers,
+                         min_workers=int(min_workers))
+        self.tenant = tenant_id
+        return [int(w) for w in out["granted"]]
+
+    def steal(self, n: int) -> List[int]:
+        """Demand ``n`` workers NOW: whatever free capacity allows is
+        granted immediately; the shortfall becomes a preemption directive
+        against lower-priority tenants, and the victims' workers arrive
+        reserved-for-us (collect with a later ``request``)."""
+        out = self._call("steal", n=int(n), **self._tenant_kw())
+        granted = [int(w) for w in out["granted"]]
+        if hasattr(self, "log"):
+            self.log.extend(f"grant:{w}" for w in granted)
+        return granted
+
+    def yield_workers(self, workers: Sequence[int]) -> List[int]:
+        """Voluntarily hand workers back (load dropped) — a tenant-scoped
+        release; freed workers settle pending steals first, then become
+        offers to tenants below their ceiling."""
+        out = self._call("yield", workers=[int(w) for w in workers],
+                         **self._tenant_kw())
+        released = [int(w) for w in out["released"]]
+        if hasattr(self, "log"):
+            self.log.extend(f"release:{w}" for w in released)
+        return released
+
+    def poll_cluster(self) -> Dict[str, int]:
+        """Directive mailbox: ``{"preempt": k, "offer": m}`` — this tenant
+        must release ``k`` workers at its next safe point / could absorb
+        ``m`` free ones.  Level-triggered: re-delivered until acted on."""
+        out = self._call("poll", **self._tenant_kw())
+        return {"preempt": int(out.get("preempt", 0)),
+                "offer": int(out.get("offer", 0))}
+
+    def cluster_metrics(self) -> dict:
+        """Scheduler event timeline + per-tenant grants (bench telemetry)."""
+        return self._call("metrics")
+
+    def deregister(self) -> List[int]:
+        """Leave the cluster, releasing everything this tenant holds."""
+        if not self.tenant:
+            return []
+        out = self._call("deregister", tenant=self.tenant)
+        self.tenant = None
+        return [int(w) for w in out.get("released", [])]
+
+
 class InProcessJobManager:
     """The seed's job manager: a ``WorkerPool`` in this process.  The
     engine's existing subscribe hooks and logs keep working unchanged."""
@@ -160,7 +232,7 @@ def _read_json(path: str):
         return json.load(f)
 
 
-class FileJobManager:
+class FileJobManager(TenantVerbsMixin):
     """File-backed ``JobManagerClient``; the pool lives in the server
     process.  Calls are synchronous RPCs with a poll-for-response loop —
     release/grant are rare (resize-time only), so latency is irrelevant and
@@ -169,8 +241,11 @@ class FileJobManager:
     def __init__(self, root: str, timeout_s: float = 30.0,
                  poll_s: float = 0.01, *, retries: int = 3,
                  backoff_s: float = 0.05, jitter_seed: int = 0,
-                 breaker_after: int = 2, breaker_probe_every: int = 4):
+                 breaker_after: int = 2, breaker_probe_every: int = 4,
+                 shutdown_on_close: bool = True):
         self.root = root
+        self.tenant = None
+        self.shutdown_on_close = shutdown_on_close
         self.timeout_s = timeout_s       # TOTAL budget, split over retries
         self.poll_s = poll_s
         self.retries = max(1, retries)
@@ -257,19 +332,20 @@ class FileJobManager:
 
     # -- JobManagerClient --------------------------------------------------
     def release(self, workers: Sequence[int]) -> List[int]:
-        out = self._call("release", workers=[int(w) for w in workers])
+        out = self._call("release", workers=[int(w) for w in workers],
+                         **self._tenant_kw())
         released = [int(w) for w in out["released"]]
         self.log.extend(f"release:{w}" for w in released)
         return released
 
     def request(self, n: int) -> List[int]:
-        out = self._call("request", n=int(n))
+        out = self._call("request", n=int(n), **self._tenant_kw())
         granted = [int(w) for w in out["granted"]]
         self.log.extend(f"grant:{w}" for w in granted)
         return granted
 
     def fail(self, worker: int) -> None:
-        self._call("fail", worker=int(worker))
+        self._call("fail", worker=int(worker), **self._tenant_kw())
         self.log.append(f"fail:{worker}")
 
     @property
@@ -290,8 +366,13 @@ class FileJobManager:
         prev = self.timeout_s
         self.timeout_s = min(prev, 2.0)
         try:
-            self._call("shutdown")
-        except (TimeoutError, OSError):
+            if self.tenant:
+                self.deregister()        # grants flow back to the pool
+            if self.shutdown_on_close:
+                # only the Session that owns the manager process tears it
+                # down; tenants of a shared manager just deregister
+                self._call("shutdown")
+        except (TimeoutError, OSError, RuntimeError):
             pass                         # server already gone — fine
         finally:
             self.timeout_s = prev
@@ -311,18 +392,24 @@ def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
     exactly where the dead one left it and re-serves journaled responses
     for retried sequence numbers — ops are executed at most once even
     across a ``kill -9`` (DESIGN.md §12)."""
+    from repro.cluster.scheduler import ClusterScheduler
+
     state_path = os.path.join(root, "state.json")
     answered: Dict[str, dict] = {}
-    pool: Optional[WorkerPool] = None
+    sched: Optional[ClusterScheduler] = None
     if os.path.exists(state_path):
         try:
             js = _read_json(state_path)
-            pool = WorkerPool.from_state(js["pool"])
+            # journal keeps the PR-6 "pool" key (old journals restore with
+            # zero tenants) plus the tenant ledger alongside
+            sched = ClusterScheduler.from_state(
+                {"pool": js["pool"], "tenants": js.get("tenants", [])})
             answered = dict(js["answered"])
         except (json.JSONDecodeError, OSError, KeyError):
-            pool = None                  # torn/old journal: start fresh
-    if pool is None:
-        pool = WorkerPool(workers, spares=spares)
+            sched = None                 # torn/old journal: start fresh
+    if sched is None:
+        sched = ClusterScheduler(WorkerPool(workers, spares=spares))
+    pool = sched.pool
     done: set = set(answered)
     last_traffic = time.monotonic()
     while True:
@@ -351,27 +438,19 @@ def serve_file_manager(root: str, workers: int, poll_s: float = 0.01,
             done.add(seq)
             last_traffic = time.monotonic()
             op = req.get("op")
-            out: dict = {"op": op, "seq": req.get("seq")}
-            if op == "release":
-                out["released"] = [
-                    int(w) for w in req["workers"] if w in pool.active]
-                pool.release(req["workers"])
-            elif op == "request":
-                out["granted"] = pool.request(int(req["n"]))
-            elif op == "fail":
-                pool.fail(int(req["worker"]))
-            elif op in ("status", "shutdown"):
-                pass
-            else:
-                out["error"] = f"unknown op {op!r}"
-            out["active"] = pool.num_active
+            # op execution lives in ClusterScheduler.handle — the SAME
+            # dispatch the HTTP transport serves, so tenant semantics
+            # can't drift between transports
+            out = sched.handle(req)
             # journal BEFORE publishing: if we die in between, the respawn
             # finds the executed op in the journal and re-serves it; if we
             # die before journaling, the resp was never visible and the
             # retried op re-executes against the pre-op pool state —
             # either way the op takes effect exactly once
             answered[seq] = out
-            _atomic_write_json(state_path, {"pool": pool.state_dict(),
+            sd = sched.state_dict()
+            _atomic_write_json(state_path, {"pool": sd["pool"],
+                                            "tenants": sd["tenants"],
                                             "answered": answered})
             _atomic_write_json(resp_path, out)
             if op == "shutdown":

@@ -139,6 +139,25 @@ class ControlPlane:
             return None
         return plan
 
+    def inject_resize(self, epoch: int, target_stages: int, *,
+                      policy: str = "preempt") -> DecisionPlan:
+        """Put an externally-originated shrink into the outbox (DESIGN.md
+        §14): a cluster-scheduler preemption arrives through the SAME
+        epoch-fenced mailbox as controller decisions, so the training loop
+        applies it at its next safe point with zero new machinery — and a
+        plan fenced off by a concurrent resize is simply re-injected at the
+        next directive poll (the scheduler's directives are level-
+        triggered), never lost.  Latest-wins like any other plan."""
+        plan = DecisionPlan(
+            epoch=epoch, iteration=-1, new_lps=None,
+            resize=ResizePlan(iteration=-1, target_stages=target_stages,
+                              layers_per_stage=None, released_stages=[],
+                              policy=policy, mem_per_stage=[]),
+            event=None, decide_s=0.0)
+        with self._cv:
+            self._outbox = plan
+        return plan
+
     def drain(self, timeout: float = 60.0) -> None:
         """Block until the worker has consumed the inbox and finished any
         in-flight decision.  Deterministic mode: publish → drain → poll is

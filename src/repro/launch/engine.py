@@ -572,22 +572,30 @@ class ElasticEngine:
         return new_state
 
     def grow(self, state: EngineState, n_workers: int,
-             step: int = -1) -> EngineState:
+             step: int = -1, steal: bool = False) -> EngineState:
         """Re-expansion: request workers back from the pool and rebuild the
         pipeline over the larger device subset.  Grows by however many the
         pool actually grants (possibly zero).  An unreachable manager
         degrades to "no grant, training continues"; a granted id with no
-        free device column behind it is handed back."""
+        free device column behind it is handed back.
+
+        ``steal=True`` escalates the ask through the cluster scheduler's
+        steal verb (DESIGN.md §14): free capacity is granted immediately
+        and the shortfall preempts a lower-priority tenant — only
+        meaningful on a tenant-registered multi-tenant manager; falls back
+        to a plain request otherwise."""
         t0 = time.perf_counter()
         self._flush_pending_jm()
+        ask = (self.jm.steal if steal and hasattr(self.jm, "steal")
+               else self.jm.request)
         try:
-            granted = self.jm.request(n_workers)
+            granted = ask(n_workers)
             if not granted and self._pending_jm and self._flush_pending_jm():
                 # the request got through, so the manager is back — but its
                 # pool hadn't heard our deferred releases yet (the breaker
                 # blocked the flush, the request was the probe that closed
                 # it).  Bookkeeping is settled now; ask once more.
-                granted = self.jm.request(n_workers)
+                granted = ask(n_workers)
         except JobManagerUnavailable:
             self.degraded_events.append(
                 f"grow denied at step {step}: manager unreachable")

@@ -131,6 +131,9 @@ def serve_spec(arch: str, *, stages: int = 4, micro: int = 2,
                patience: int = 2, cooldown: int = 4,
                defrag_every: int = 0, job_manager: str = "inproc",
                job_manager_dir: Optional[str] = None,
+               tenant_id: Optional[str] = None, priority: int = 0,
+               manager_url: Optional[str] = None,
+               latency_slo_s: float = 0.0,
                kernel_impl: str = "scan",
                measure_stage_times: bool = False,
                max_ticks: int = 100000) -> RunSpec:
@@ -145,7 +148,8 @@ def serve_spec(arch: str, *, stages: int = 4, micro: int = 2,
         controller=ControllerSpec(measure_stage_times=measure_stage_times),
         cluster=ClusterSpec(job_manager=job_manager,
                             job_manager_dir=job_manager_dir,
-                            autoscale=autoscale),
+                            autoscale=autoscale, tenant_id=tenant_id,
+                            priority=priority, manager_url=manager_url),
         serve=ServeSpec(requests=requests, prompt_len=prompt_len, gen=gen,
                         min_prompt=min_prompt, burst_period=burst_period,
                         burst_len=burst_len, burst_rate=burst_rate,
@@ -155,7 +159,8 @@ def serve_spec(arch: str, *, stages: int = 4, micro: int = 2,
                         min_stages=max(1, min_stages),
                         queue_high=queue_high,
                         occupancy_low=occupancy_low, patience=patience,
-                        cooldown=cooldown, max_ticks=max_ticks),
+                        cooldown=cooldown, latency_slo_s=latency_slo_s,
+                        max_ticks=max_ticks),
         seed=seed)
 
 
@@ -184,6 +189,11 @@ def main(argv=None):
     ap.add_argument("--rebalance-every", type=int, default=0,
                     help="legacy one-shot path only: DynMo rebalance "
                          "between decode rounds")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the session's structured telemetry stream "
+                         "(one JSON record per resize / autoscale / "
+                         "tenant_register / steal / yield event) to this "
+                         "file")
     add_config_args(ap)
     add_alias_flags(ap, SERVE_ALIASES)
     add_spec_flags(ap)
@@ -194,6 +204,13 @@ def main(argv=None):
     if args.elastic or args.config:
         with Session(spec) as s:
             rep = s.serve()
+        if args.events_out:
+            import dataclasses
+            import json
+            with open(args.events_out, "w") as f:
+                json.dump([dataclasses.asdict(ev) for ev in s.events], f,
+                          indent=1)
+            print(f"wrote {len(s.events)} events to {args.events_out}")
         kinds = [r["kind"] for r in rep["resizes"]]
         print(f"served {len(rep['completions'])} requests / "
               f"{rep['total_tokens']} tokens in {rep['wall_s']:.1f}s "

@@ -58,6 +58,8 @@ def train_spec(arch: str, *, steps: int = 50, stages: int = 4,
                simulate_recover: Optional[int] = None,
                job_manager: str = "inproc",
                job_manager_dir: Optional[str] = None,
+               tenant_id: Optional[str] = None, priority: int = 0,
+               manager_url: Optional[str] = None,
                straggler: Optional[Dict[int, float]] = None,
                measure_stage_times: bool = False) -> RunSpec:
     """The ``RunSpec`` equivalent of the legacy ``run_training`` kwargs —
@@ -78,6 +80,8 @@ def train_spec(arch: str, *, steps: int = 50, stages: int = 4,
             measure_stage_times=measure_stage_times),
         cluster=ClusterSpec(job_manager=job_manager,
                             job_manager_dir=job_manager_dir,
+                            tenant_id=tenant_id, priority=priority,
+                            manager_url=manager_url,
                             autoscale=autoscale,
                             autoscale_watermark=autoscale_watermark,
                             heartbeat_timeout=heartbeat_timeout,

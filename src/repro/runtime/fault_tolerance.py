@@ -180,15 +180,37 @@ class WorkerPool:
                 self._notify("release", w)
 
     def fail(self, worker: int) -> None:
+        # a machine can die while idle too: scrub it from *every* live set,
+        # not just active, or a later request() would re-grant a dead id
+        # (the double-grant bug — see check_consistent)
         self.active.discard(worker)
+        self.released.discard(worker)
         self.dead.add(worker)
         self._notify("fail", worker)
 
-    def request(self, n: int) -> List[int]:
+    def grant(self, workers) -> List[int]:
+        """Promote specific *released* worker ids back to active — the
+        cluster scheduler hands a preemption victim's workers to the
+        stealing tenant by id, not by count."""
+        granted = []
+        for w in workers:
+            if w in self.released:
+                self.released.discard(w)
+                self.active.add(w)
+                granted.append(w)
+                self._notify("grant", w)
+            elif w not in self.active:
+                raise ValueError(f"grant of unknown/dead worker {w}")
+        return granted
+
+    def request(self, n: int, exclude=()) -> List[int]:
         grant = []
+        skip = set(exclude)
         for w in sorted(self.released):
             if len(grant) == n:
                 break
+            if w in skip:  # reserved for another tenant's pending steal
+                continue
             grant.append(w)
         for w in grant:
             self.released.discard(w)
@@ -204,6 +226,18 @@ class WorkerPool:
             grant.append(w)
             self._notify("grant", w)
         return grant
+
+    def check_consistent(self) -> None:
+        """Every worker id lives in exactly one of active/released/dead —
+        overlap means some path can hand the same machine to two owners.
+        Cheap (sets are small); callers with correctness at stake run it
+        after every transition."""
+        for a, b in (("active", "released"), ("active", "dead"),
+                     ("released", "dead")):
+            both = getattr(self, a) & getattr(self, b)
+            if both:
+                raise AssertionError(
+                    f"worker(s) {sorted(both)} in both {a} and {b}")
 
     @property
     def num_active(self) -> int:

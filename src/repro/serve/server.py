@@ -68,12 +68,23 @@ class ElasticServer:
                  data: int = 1, job_manager: Optional[JobManagerClient] = None,
                  scaler: Optional[Autoscaler] = None, min_stages: int = 1,
                  eos_id: Optional[int] = None, defrag_every: int = 0,
-                 seed: int = 0, measure_stage_times: bool = False):
+                 seed: int = 0, measure_stage_times: bool = False,
+                 initial_workers: Optional[Sequence[int]] = None):
         assert shapes.cache_len >= shapes.seq, "cache must hold the prompt"
         self.engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=data,
                                     job_manager=job_manager)
-        self.state = self.engine.init_state(
-            jax.random.PRNGKey(seed), with_opt=False, with_cache=True)
+        if initial_workers is not None:
+            # multi-tenant start: serve on exactly the workers the cluster
+            # scheduler granted (arbitrary global ids, possibly fewer than
+            # the spec's max stages) — same bind + sized-init path the
+            # checkpoint resume uses
+            self.engine.bind_workers([int(w) for w in initial_workers])
+            self.state = self.engine.init_state(
+                jax.random.PRNGKey(seed), with_opt=False, with_cache=True,
+                stages=len(list(initial_workers)))
+        else:
+            self.state = self.engine.init_state(
+                jax.random.PRNGKey(seed), with_opt=False, with_cache=True)
         self.shapes = shapes
         self.scaler = scaler
         self.min_stages = max(1, min_stages)
@@ -110,16 +121,19 @@ class ElasticServer:
               f"{self.state.stages} stages")
 
     # -- safe-point resize -------------------------------------------------
-    def resize(self, target_stages: int, tick: int, reason: str) -> bool:
+    def resize(self, target_stages: int, tick: int, reason: str,
+               steal: bool = False) -> bool:
         """Shrink/grow between decode ticks.  Returns True if the world
-        changed (grow may be denied by the job manager)."""
+        changed (grow may be denied by the job manager).  ``steal`` lets an
+        urgent grow preempt a lower-priority tenant through the cluster
+        scheduler (no-op on single-tenant managers)."""
         st = self.state
         prev = st.stages
         if target_stages < prev:
             self.state = self.engine.shrink(st, target_stages, step=tick)
         elif target_stages > prev:
             self.state = self.engine.grow(st, target_stages - prev,
-                                          step=tick)
+                                          step=tick, steal=steal)
         changed = self.state.stages != prev
         if changed:
             rz = self.engine.resizes[-1]
@@ -210,7 +224,7 @@ class ElasticServer:
                 elif d.action == "grow":
                     self.resize(min(self.max_stages,
                                     self.state.stages + d.workers),
-                                tick, d.reason)
+                                tick, d.reason, steal=d.urgent)
             if injector is not None:
                 # scheduled faults fire at the same safe point resizes do:
                 # the tick's flight is fully retired, so a crash loses KV

@@ -27,8 +27,9 @@ from repro.api.cli import (SERVE_ALIASES, TRAIN_ALIASES, TRAIN_CLI_DEFAULTS,
 from repro.api.specs import SCHEMA_VERSION
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
-GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v2.json")
+GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v3.json")
 GOLDEN_V1 = os.path.join(GOLDEN_DIR, "runspec_default_v1.json")
+GOLDEN_V2 = os.path.join(GOLDEN_DIR, "runspec_default_v2.json")
 
 
 # ---------------------------------------------------------------------------
@@ -200,8 +201,8 @@ def test_golden_default_spec():
     fails you changed the spec schema: bump SCHEMA_VERSION if the change
     is breaking, add an upgrader for the old version, then regenerate the
     fixture with ``PYTHONPATH=src python -c "from repro.api import RunSpec;
-    RunSpec().save('tests/golden/runspec_default_v2.json')"`` (keep the
-    old-version golden — it pins the upgrader's input forever)."""
+    RunSpec().save('tests/golden/runspec_default_v3.json')"`` (keep the
+    old-version goldens — they pin the upgraders' inputs forever)."""
     with open(GOLDEN) as f:
         golden = json.load(f)
     assert RunSpec().to_dict() == golden
@@ -223,6 +224,25 @@ def test_v1_config_loads_via_upgrader():
     up = RunSpec.from_dict(v1b)
     assert up.steps == 7 and up.cluster.autoscale
     assert up.faults.enabled is False and up.ckpt_every == 0
+
+
+def test_v2_config_loads_via_upgrader():
+    """A v2 config (the frozen v2 golden) still loads: the v2->v3 upgrader
+    stamps the multi-tenant cluster defaults (tenant_id, priority,
+    manager_url) and the result equals the default v3 spec."""
+    with open(GOLDEN_V2) as f:
+        v2 = json.load(f)
+    assert v2["schema_version"] == 2
+    assert "tenant_id" not in v2["cluster"]
+    spec = RunSpec.from_dict(v2)
+    assert spec == RunSpec()
+    assert spec.cluster.tenant_id is None and spec.cluster.priority == 0
+    # a populated v2 config keeps its values through the upgrade
+    v2b = dict(v2, seed=5,
+               cluster=dict(v2["cluster"], job_manager="file"))
+    up = RunSpec.from_dict(v2b)
+    assert up.seed == 5 and up.cluster.job_manager == "file"
+    assert up.to_dict()["schema_version"] == SCHEMA_VERSION
 
 
 def test_chaos_flags_resolve_faults_spec():

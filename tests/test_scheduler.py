@@ -1,0 +1,470 @@
+"""Multi-tenant cluster scheduler tests (DESIGN.md §14): arbitration
+(register/request/steal/yield/poll), the double-grant guard, preemption
+riding the epoch-fenced plan mailbox (fence-rejected directives retried,
+steal shrink bit-identical to a voluntary shrink), and two processes
+contending over one HTTP job manager."""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from conftest import SRC, run_in_subprocess
+
+from repro.cluster.scheduler import (ClusterScheduler,
+                                     SchedulerInvariantError, Tenant)
+from repro.runtime.fault_tolerance import WorkerPool
+
+
+def _sched(total=6, spares=0):
+    return ClusterScheduler(WorkerPool(total, spares=spares))
+
+
+def _two_tenants(sched):
+    """The canonical contention setup: train holds 4 of 6, serve 2 of 6
+    with headroom up to 4."""
+    train = sched.register("train", priority=0, kind="train", workers=4,
+                           max_workers=4, min_workers=1)
+    serve = sched.register("serve", priority=10, kind="serve", workers=2,
+                           max_workers=4, min_workers=1)
+    return train, serve
+
+
+# ---------------------------------------------------------------------------
+# arbitration
+# ---------------------------------------------------------------------------
+def test_register_grants_disjoint_workers():
+    sched = _sched()
+    train, serve = _two_tenants(sched)
+    assert len(train) == 4 and len(serve) == 2
+    assert not set(train) & set(serve)
+    assert sched.pool.num_active == 6
+
+
+def test_register_is_idempotent():
+    sched = _sched()
+    first = sched.register("train", priority=0, workers=4, max_workers=4)
+    again = sched.register("train", priority=0, workers=4, max_workers=4)
+    assert first == again                   # a client retry sees the same
+    assert len(sched.tenants["train"].granted) == 4     # grant, not two
+
+
+def test_request_never_preempts():
+    sched = _sched()
+    _two_tenants(sched)                     # pool fully granted
+    assert sched.request("serve", 2) == []  # no free capacity: nothing
+    assert sched.tenants["train"].preempt_due == 0
+
+
+def test_steal_takes_free_capacity_first():
+    sched = _sched(total=6)
+    sched.register("train", priority=0, workers=3, max_workers=3)
+    sched.register("serve", priority=10, workers=2, max_workers=5)
+    out = sched.steal("serve", 1)           # one unassigned-active worker
+    assert len(out["granted"]) == 1 and out["pending"] == 0
+    assert sched.tenants["train"].preempt_due == 0
+
+
+def test_steal_preempt_reserve_collect_pipeline():
+    """The full preemption ride: steal posts a directive, the victim sees
+    it at poll, its release parks the workers on the thief's reservation,
+    and a later request collects them — free capacity never leaks to a
+    third party in between."""
+    sched = _sched()
+    train, _ = _two_tenants(sched)
+    out = sched.steal("serve", 2)
+    assert out["granted"] == [] and out["pending"] == 2
+    assert sched.poll("train") == {"preempt": 2, "offer": 0}
+    victims = train[-2:]
+    assert sched.release("train", victims) == victims
+    assert sched.poll("train")["preempt"] == 0          # debt settled
+    assert sorted(sched.tenants["serve"].reserved) == sorted(victims)
+    # the reserved workers are NOT free for anyone else
+    late = sched.register("late", priority=0, workers=2, max_workers=2)
+    assert late == []
+    got = sched.request("serve", 2)
+    assert sorted(got) == sorted(victims)
+    assert sched.tenants["serve"].steal_owed == 0
+    assert len(sched.tenants["serve"].granted) == 4
+
+
+def test_steal_only_preempts_strictly_lower_priority():
+    sched = _sched(total=4)
+    sched.register("a", priority=5, workers=2, max_workers=4)
+    sched.register("b", priority=5, workers=2, max_workers=4)
+    out = sched.steal("a", 2)               # same priority: no victims
+    assert out["granted"] == [] and out["pending"] == 0
+    assert sched.tenants["b"].preempt_due == 0
+
+
+def test_steal_respects_min_workers_floor():
+    sched = _sched(total=4)
+    sched.register("train", priority=0, workers=2, max_workers=2,
+                   min_workers=2)
+    sched.register("serve", priority=10, workers=2, max_workers=4,
+                   min_workers=1)
+    out = sched.steal("serve", 2)           # train is already at its floor
+    assert out["granted"] == [] and out["pending"] == 0
+    assert sched.poll("train")["preempt"] == 0
+
+
+def test_victim_selection_is_lowest_priority_most_headroom():
+    sched = _sched(total=9)
+    sched.register("low", priority=0, workers=2, max_workers=2)    # 1 spare
+    sched.register("mid", priority=1, workers=4, max_workers=4)    # 3 spare
+    sched.register("hi", priority=10, workers=3, max_workers=9)
+    sched.steal("hi", 2)
+    # priority 0 loses first even though priority 1 has more headroom
+    assert sched.tenants["low"].preempt_due == 1
+    assert sched.tenants["mid"].preempt_due == 1
+
+
+def test_poll_is_level_triggered():
+    """A directive lost to an epoch fence on the tenant side is simply
+    re-delivered: poll recomputes from live state, there is no ack."""
+    sched = _sched()
+    train, _ = _two_tenants(sched)
+    sched.steal("serve", 2)
+    assert sched.poll("train")["preempt"] == 2
+    assert sched.poll("train")["preempt"] == 2      # still due
+    sched.release("train", train[-1:])              # partial compliance
+    assert sched.poll("train")["preempt"] == 1
+
+
+def test_yield_becomes_offer_to_below_ceiling_tenant():
+    sched = _sched()
+    _, serve = _two_tenants(sched)
+    sched.release("train", sched.tenants["train"].granted[2:])  # train at 2
+    assert sched.poll("train")["offer"] == 2        # its own yield offered
+    sched.request("train", 2)                       # absorb back
+    assert len(sched.tenants["train"].granted) == 4
+    assert sched.poll("train") == {"preempt": 0, "offer": 0}
+    assert sched.poll("serve")["offer"] == 0        # nothing left over
+
+
+def test_offer_capped_by_ceiling():
+    sched = _sched(total=8)
+    sched.register("train", priority=0, workers=4, max_workers=5)
+    # 4 unassigned-active workers exist, but only 1 fits under the ceiling
+    sched.pool.release([4, 5, 6, 7])
+    assert sched.poll("train")["offer"] == 1
+
+
+def test_worker_death_settles_preemption_debt():
+    """Capacity lost to a crash must not be charged again as preemption —
+    the victim would shrink twice."""
+    sched = _sched()
+    train, _ = _two_tenants(sched)
+    sched.steal("serve", 2)
+    assert sched.poll("train")["preempt"] == 2
+    sched.fail("train", train[-1])
+    assert sched.poll("train")["preempt"] == 1
+
+
+def test_death_scrubs_reservations():
+    sched = _sched()
+    train, _ = _two_tenants(sched)
+    sched.steal("serve", 2)
+    sched.release("train", train[-2:])
+    dead = sched.tenants["serve"].reserved[0]
+    sched.fail(None, dead)
+    assert dead not in sched.tenants["serve"].reserved
+    assert dead in sched.pool.dead
+
+
+def test_deregister_frees_the_grant():
+    sched = _sched()
+    _, serve = _two_tenants(sched)
+    freed = sched.deregister("serve")
+    assert sorted(freed) == sorted(serve)
+    assert sched.poll("train")["offer"] == 0        # train at its ceiling
+    sched.register("bigger", priority=0, workers=0, max_workers=6)
+    assert sched.poll("bigger")["offer"] == 2
+
+
+def test_state_roundtrip_preserves_tenancy():
+    sched = _sched()
+    train, _ = _two_tenants(sched)
+    sched.steal("serve", 2)
+    sched.release("train", train[-1:])
+    back = ClusterScheduler.from_state(
+        json.loads(json.dumps(sched.state_dict())))
+    assert back.poll("train") == sched.poll("train")
+    assert back.tenants["serve"].steal_owed == \
+        sched.tenants["serve"].steal_owed
+    assert back.tenants["serve"].reserved == \
+        sched.tenants["serve"].reserved
+
+
+# ---------------------------------------------------------------------------
+# transport dispatch
+# ---------------------------------------------------------------------------
+def test_handle_legacy_ops_match_plain_pool():
+    """Requests without a tenant field keep the single-Session pool
+    semantics bit-for-bit (the pre-§14 contract)."""
+    sched = _sched(total=4)
+    plain = WorkerPool(4)
+    out = sched.handle({"op": "release", "seq": 1, "workers": [2, 3]})
+    plain.release([2, 3])
+    assert out["released"] == [2, 3] and out["active"] == plain.num_active
+    out = sched.handle({"op": "request", "seq": 2, "n": 5})
+    assert out["granted"] == plain.request(5)
+    sched.handle({"op": "fail", "seq": 3, "worker": 0})
+    plain.fail(0)
+    assert sched.pool.state_dict() == plain.state_dict()
+
+
+def test_handle_unknown_tenant_is_an_error_not_a_crash():
+    sched = _sched()
+    out = sched.handle({"op": "steal", "seq": 1, "tenant": "ghost", "n": 1})
+    assert "register first" in out["error"]
+    assert out["active"] == 6
+
+
+def test_handle_metrics_reports_tenants_and_events():
+    sched = _sched()
+    _two_tenants(sched)
+    out = sched.handle({"op": "metrics", "seq": 1})
+    assert set(out["tenants"]) == {"train", "serve"}
+    assert out["total"] == 6
+    assert any(e["ev"] == "grant" for e in out["events"])
+
+
+# ---------------------------------------------------------------------------
+# the double-grant guard
+# ---------------------------------------------------------------------------
+def test_pool_guard_catches_active_released_overlap():
+    pool = WorkerPool(4)
+    pool.released.add(1)                    # corrupt: 1 is also active
+    with pytest.raises(AssertionError, match="active and released"):
+        pool.check_consistent()
+
+
+def test_pool_fail_scrubs_released_workers_too():
+    """A machine dying while idle must leave the released set — or a later
+    request() re-grants a dead id (the original double-grant bug)."""
+    pool = WorkerPool(4)
+    pool.release([2])
+    pool.fail(2)
+    pool.check_consistent()
+    assert pool.request(1) == []            # never re-granted
+    assert 2 in pool.dead and 2 not in pool.released
+
+
+def test_guard_catches_worker_held_by_two_tenants():
+    sched = _sched()
+    _two_tenants(sched)
+    w = sched.tenants["train"].granted[0]
+    sched.tenants["serve"].granted.append(w)        # corrupt the books
+    with pytest.raises(SchedulerInvariantError, match="held by both"):
+        sched._check()
+
+
+def test_guard_catches_grant_of_inactive_worker():
+    sched = _sched()
+    _two_tenants(sched)
+    sched.tenants["train"].granted.append(99)
+    with pytest.raises(SchedulerInvariantError, match="not\\s+active"):
+        sched._check()
+
+
+def test_guard_holds_through_evict_revive_and_spare_promotion():
+    """The invariant survives the full fault choreography: a granted
+    worker dies (evict), its replacement is minted from the spare budget,
+    a released worker is re-granted (revive), and reservations never
+    overlap any of it — _check() runs inside every op and stays quiet."""
+    sched = _sched(total=4, spares=2)
+    train = sched.register("train", priority=0, workers=4, max_workers=6)
+    sched.fail("train", train[0])                       # evict
+    assert len(sched.tenants["train"].granted) == 3
+    got = sched.request("train", 1)                     # spare promotion:
+    assert got == [4]                                   # a NEVER-seen id
+    sched.release("train", [train[1]])                  # park one worker
+    assert sched.request("train", 1) == [train[1]]      # revive it
+    sched.handle({"op": "metrics", "seq": 1})
+    sched._check()
+    # and the guard still has teeth after all that churn
+    sched.tenants["train"].reserved.append(train[2])
+    with pytest.raises(SchedulerInvariantError, match="held by both"):
+        sched._check()
+
+
+# ---------------------------------------------------------------------------
+# preemption rides the epoch-fenced plan mailbox
+# ---------------------------------------------------------------------------
+def _control_plane():
+    from repro.cluster.service import ControlPlane
+    from repro.configs import DistConfig, get_config, reduced_config
+    from repro.core.controller import ControllerConfig, DynMoController
+    from repro.dynamics.config import DynamicsConfig
+    cfg = reduced_config(get_config("smollm-360m"), num_layers=8,
+                         d_model=64)
+    dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                      param_dtype="float32")
+    ctrl = DynMoController(cfg, dcfg, DynamicsConfig(kind="none"),
+                           ControllerConfig(method="partition"))
+    return ControlPlane(ctrl, async_mode=False)
+
+
+def test_injected_preempt_plan_is_epoch_fenced_and_retried():
+    """A steal directive injected mid-decide against a world that resizes
+    concurrently must be fence-REJECTED (never applied to the wrong
+    world) — and because directives are level-triggered, the re-injection
+    at the new epoch goes through.  Nothing is lost."""
+    cp = _control_plane()
+    cp.inject_resize(0, 2)                  # decided against epoch 0
+    assert cp.poll(1) is None               # world moved to epoch 1: fenced
+    assert cp.stale_rejected == 1
+    # next tenant poll re-delivers the directive; re-inject at the live
+    # epoch and it applies
+    plan = cp.inject_resize(1, 2)
+    assert plan.resize.policy == "preempt"
+    out = cp.poll(1)
+    assert out is not None
+    assert out.resize.target_stages == 2
+    assert out.resize.layers_per_stage is None      # uniform re-split
+    assert cp.stale_rejected == 1
+
+
+def test_injected_plan_is_latest_wins():
+    cp = _control_plane()
+    cp.inject_resize(0, 3)
+    cp.inject_resize(0, 2)                  # deeper preemption supersedes
+    assert cp.poll(0).resize.target_stages == 2
+    assert cp.poll(0) is None               # consumed
+
+
+# ---------------------------------------------------------------------------
+# end-to-end (subprocess, multi-device)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_steal_shrink_is_bit_identical_to_voluntary_shrink():
+    """The acceptance criterion: an externally-originated preemption (HTTP
+    steal by a higher-priority tenant) shrinks the trainer 4->2 through
+    the SAME safe-point machinery as a voluntary shrink — the loss
+    trajectories match float-for-float."""
+    out = run_in_subprocess("""
+import threading, time, tempfile
+from repro.api.session import Session
+from repro.cluster.http_rpc import HttpJobManager, spawn_http_manager
+from repro.launch.train import train_spec
+
+run_dir = tempfile.mkdtemp()
+proc, url = spawn_http_manager(run_dir, 4, spares=0)
+kw = dict(steps=12, stages=4, layers=8, d_model=64, seq=32, num_micro=2,
+          mb_global=2, dynamism="none", rebalance_every=1000, log_every=1000)
+stolen = []
+def thief():
+    ext = HttpJobManager(url, client_id="ext", shutdown_on_close=False)
+    ext.register_tenant("ext", priority=10, kind="serve", workers=0,
+                        max_workers=2, min_workers=1)
+    for _ in range(1200):        # wait for the trainer to hold its 4
+        t = ext.cluster_metrics()["tenants"].get("train")
+        if t and len(t["granted"]) == 4:
+            break
+        time.sleep(0.05)
+    got = list(ext.steal(2))
+    for _ in range(2400):        # collect as the victim frees them
+        if len(got) >= 2:
+            break
+        got.extend(ext.request(2 - len(got)))
+        time.sleep(0.05)
+    stolen.extend(got)
+    ext.close()
+
+th = threading.Thread(target=thief)
+th.start()
+spec_a = train_spec("smollm-360m", job_manager="http", manager_url=url,
+                    tenant_id="train", priority=0, **kw)
+with Session(spec_a) as sa:
+    a = sa.train()
+th.join(timeout=60)
+try:
+    HttpJobManager(url, client_id="kill", shutdown_on_close=True).close()
+except Exception:
+    pass
+proc.wait(timeout=30)
+
+assert len(stolen) == 2, stolen
+shr = [r for r in a["resizes"] if r["kind"] == "shrink"]
+assert len(shr) == 1 and shr[0]["from_stages"] == 4 \\
+    and shr[0]["to_stages"] == 2, a["resizes"]
+assert sorted(shr[0]["workers"]) == sorted(stolen)
+assert any(ev.kind == "preempt" for ev in sa.events)
+k = shr[0]["step"]
+
+# the oracle: single-tenant run, VOLUNTARY shrink scripted at the same step
+spec_b = train_spec("smollm-360m", **kw)
+with Session(spec_b) as sb:
+    b = sb.train(shrink_at={k: 2})
+shr_b = [r for r in b["resizes"] if r["kind"] == "shrink"]
+assert len(shr_b) == 1 and shr_b[0]["step"] == k, b["resizes"]
+assert a["losses"] == b["losses"], (k, a["losses"], b["losses"])
+assert a["stages_history"] == b["stages_history"]
+print("PASS shrink@", k, a["losses"][0], "->", a["losses"][-1])
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_two_processes_contend_over_one_http_manager(tmp_path):
+    """Separate-process contention: a CLI trainer (tenant, priority 0) and
+    this test (tenant, priority 10) share one HTTP job manager.  The steal
+    shrinks the trainer at a safe point; the later yield is absorbed back
+    (grow) — both visible in the trainer's --events-out stream."""
+    from repro.cluster.http_rpc import HttpJobManager, spawn_http_manager
+
+    run_dir = str(tmp_path)
+    proc, url = spawn_http_manager(run_dir, 4, spares=0)
+    events_path = os.path.join(run_dir, "events.json")
+    child = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "smollm-360m", "--layers", "8", "--d-model", "64",
+         "--stages", "4", "--steps", "40", "--seq", "32",
+         "--num-micro", "2", "--mb-global", "2", "--log-every", "1000",
+         "--job-manager", "http", "--manager-url", url,
+         "--tenant-id", "train", "--priority", "0",
+         "--rebalance-every", "3", "--events-out", events_path],
+        env={**os.environ, "PYTHONPATH": SRC, "REPRO_TRAIN_DEVICES": "4"},
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    ext = HttpJobManager(url, client_id="ext", shutdown_on_close=False)
+    try:
+        ext.register_tenant("ext", priority=10, kind="serve", workers=0,
+                            max_workers=2, min_workers=1)
+        deadline = time.time() + 300
+        while time.time() < deadline:       # trainer up and holding 4
+            t = ext.cluster_metrics()["tenants"].get("train")
+            if t and len(t["granted"]) == 4:
+                break
+            time.sleep(0.1)
+        else:
+            pytest.fail("trainer never registered")
+        got = list(ext.steal(2))
+        while len(got) < 2 and time.time() < deadline:
+            got.extend(ext.request(2 - len(got)))
+            time.sleep(0.1)
+        assert len(got) == 2, got           # preemption crossed processes
+        ext.yield_workers(got)              # load dropped: hand them back
+        out, _ = child.communicate(timeout=600)
+        assert child.returncode == 0, out[-4000:]
+    finally:
+        ext.close()
+        if child.poll() is None:
+            child.kill()
+        try:
+            HttpJobManager(url, client_id="kill", timeout_s=10,
+                           shutdown_on_close=True).close()
+        except Exception:
+            pass
+        if proc.poll() is None:
+            proc.kill()
+    with open(events_path) as f:
+        kinds = [ev["kind"] for ev in json.load(f)]
+    assert "tenant_register" in kinds
+    assert "preempt" in kinds, kinds        # the steal arrived
+    assert "absorb" in kinds, kinds         # the yield flowed back
+    assert "SHRINK[PREEMPT] 4->2" in out, out[-4000:]
+    assert "ABSORB 2->4" in out, out[-4000:]
