@@ -29,6 +29,7 @@ def main() -> None:
         "repack": bench_repack.main,            # Fig. 4 left
         "overhead": bench_overhead.main,        # Fig. 4 right
         "controller": bench_overhead.main_controller,  # §3.3.1 async plane
+        "obs": bench_overhead.main_obs,         # §15 observability overhead
         "kernels": bench_kernels.main,          # §4.2.2 / §4.2.4
         "moe": bench_moe.main,                  # expert-parallel grouped mm
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline

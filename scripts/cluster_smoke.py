@@ -1,4 +1,4 @@
-"""Two-tenant HTTP contention smoke (CI gate for DESIGN.md §14).
+"""Two-tenant HTTP contention smoke (CI gate for DESIGN.md §14 + §15).
 
 Spawns ONE HTTP job manager over a 6-worker pool, then a CLI trainer
 (tenant ``train``, priority 0, 4 stages) and a CLI elastic server (tenant
@@ -7,19 +7,33 @@ The serve burst must steal training workers (the trainer shrinks at a safe
 point) and the lull must yield them back (the trainer absorbs) — asserted
 from both sides' ``--events-out`` streams.
 
+Observability gates (DESIGN.md §15), both tenants run with ``obs.trace``:
+
+  * the manager's ``GET /metrics`` Prometheus page is scraped before
+    shutdown and its ``dynmo_scheduler_events_total`` counters must equal
+    the per-(tenant, event) counts in the scheduler's own events stream —
+    the two views are derived from one list, disagreement is a bug;
+  * the two trace files must hold ONE causally-linked cross-process chain
+    ``rpc.steal -> cluster.preempt -> resize.shrink`` (serve's steal RPC
+    parents train's preemption directive parents train's safe-point
+    shrink), validated by ``scripts/check_trace.py``.
+
   PYTHONPATH=src python scripts/cluster_smoke.py
 
-Exit 0 = contention observed end-to-end; non-zero = a tenant died or the
-steal/yield never crossed the scheduler.
+Exit 0 = contention + observability verified end-to-end; non-zero = a
+tenant died, the steal/yield never crossed the scheduler, the metrics
+page drifted from the events stream, or the trace chain broke.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import subprocess
 import sys
 import tempfile
 import time
+import urllib.request
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
@@ -37,11 +51,51 @@ def _spawn_cli(module: str, args: list, log_path: str) -> subprocess.Popen:
                             text=True, env=ENV)
 
 
+# label order is the registry's sorted-label identity: event < tenant
+_PROM_LINE = re.compile(
+    r'^dynmo_scheduler_events_total\{event="([^"]*)",tenant="([^"]*)"\} '
+    r'(\d+(?:\.\d+)?)$')
+
+
+def _check_metrics_page(url: str, events: list) -> list:
+    """Scrape GET /metrics and diff the scheduler-event counters against
+    the events stream the ``metrics`` RPC verb returned."""
+    with urllib.request.urlopen(url + "/metrics", timeout=10) as r:
+        assert "version=0.0.4" in r.headers.get("Content-Type", "")
+        page = r.read().decode()
+    scraped = {}
+    for line in page.splitlines():
+        m = _PROM_LINE.match(line)
+        if m:
+            scraped[(m.group(2), m.group(1))] = float(m.group(3))
+    expected = {}
+    for ev in events:
+        key = (str(ev.get("tenant")), ev["ev"])
+        expected[key] = expected.get(key, 0.0) + 1.0
+    failures = []
+    if not scraped:
+        failures.append("metrics page had no dynmo_scheduler_events_total")
+    if scraped != expected:
+        failures.append(f"metrics page drifted from the events stream: "
+                        f"scraped={scraped} expected={expected}")
+    for ev in events:
+        if ev.get("schema") != "obs.event/1" or ev.get("kind") != ev["ev"]:
+            failures.append(f"scheduler event missing unified fields: {ev}")
+            break
+    steals = [ev for ev in events if ev["ev"] == "steal"]
+    if steals and not any(ev.get("trace_id") for ev in steals):
+        failures.append("no steal event carried a propagated trace_id "
+                        "(RPC trace context never reached the scheduler)")
+    return failures
+
+
 def main() -> int:
     run_dir = tempfile.mkdtemp(prefix="cluster_smoke_")
     mgr, url = spawn_http_manager(run_dir, 6, spares=0, idle_timeout_s=900)
     train_events = os.path.join(run_dir, "train_events.json")
     serve_events = os.path.join(run_dir, "serve_events.json")
+    train_trace = os.path.join(run_dir, "train.trace.json")
+    serve_trace = os.path.join(run_dir, "serve.trace.json")
     train_log = os.path.join(run_dir, "train.log")
     serve_log = os.path.join(run_dir, "serve.log")
     print(f"manager {url} (pool 6, journal {run_dir})")
@@ -54,6 +108,8 @@ def main() -> int:
             "--rebalance-every", "4", "--job-manager", "http",
             "--manager-url", url, "--tenant-id", "train", "--priority", "0",
             "--set", "controller.repack.target=2",
+            "--set", "obs.trace=true",
+            "--set", f"obs.trace_out={train_trace}",
             "--events-out", train_events], train_log)
         children.append(("train", train, train_log))
         # let the trainer claim its 4 before the server joins, so the serve
@@ -78,6 +134,8 @@ def main() -> int:
             "--latency-slo-s", "0.5", "--log-every", "1000",
             "--job-manager", "http", "--manager-url", url,
             "--tenant-id", "serve", "--priority", "10",
+            "--set", "obs.trace=true",
+            "--set", f"obs.trace_out={serve_trace}",
             "--events-out", serve_events], serve_log)
         children.append(("serve", serve, serve_log))
         for name, proc, log_path in children:
@@ -87,6 +145,12 @@ def main() -> int:
                     print(f"--- {name} log tail ---\n{f.read()[-4000:]}")
                 raise RuntimeError(f"{name} tenant exited {rc}")
             print(f"{name} tenant finished cleanly")
+        # scrape while the manager is still up: the Prometheus page must
+        # agree with the events stream it is derived from
+        sched_events = probe.cluster_metrics()["events"]
+        metrics_failures = _check_metrics_page(url, sched_events)
+        print(f"scraped /metrics: {len(sched_events)} scheduler events, "
+              f"{len(metrics_failures)} failure(s)")
         probe.close()
     except Exception as e:
         print(f"SMOKE FAILED: {e}", file=sys.stderr)
@@ -113,7 +177,7 @@ def main() -> int:
         serve_kinds = [ev["kind"] for ev in json.load(f)]
     print(f"train events: {train_kinds}")
     print(f"serve events: {serve_kinds}")
-    failures = []
+    failures = list(metrics_failures)
     if "steal" not in serve_kinds:
         failures.append("serve never stole (no urgent grow)")
     if "preempt" not in train_kinds:
@@ -122,6 +186,13 @@ def main() -> int:
         failures.append("serve never yielded back")
     if "absorb" not in train_kinds:
         failures.append("train never absorbed the yielded workers")
+    # the two trace files must hold the causally-linked cross-process
+    # steal chain (and pass structural validation)
+    import check_trace
+    rc = check_trace.main([serve_trace, train_trace, "--expect-chain",
+                           "rpc.steal,cluster.preempt,resize.shrink"])
+    if rc != 0:
+        failures.append("trace validation failed (see check_trace output)")
     if failures:
         print("SMOKE FAILED: " + "; ".join(failures), file=sys.stderr)
         for log_path in (train_log, serve_log):
@@ -130,7 +201,8 @@ def main() -> int:
                       file=sys.stderr)
         return 1
     print("SMOKE OK: steal -> safe-point shrink -> yield -> absorb, "
-          "two processes, one pool")
+          "two processes, one pool; /metrics == events; trace chain "
+          "causally linked across processes")
     return 0
 
 

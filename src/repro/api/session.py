@@ -43,6 +43,8 @@ import warnings
 from typing import Any, Dict, List, Optional
 
 from repro.api.specs import RunSpec
+from repro.obs.events import EVENT_SCHEMA, stamp_record
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -51,10 +53,23 @@ class SessionEvent:
     "autoscale", "safepoint", "relayout", "serve_summary",
     "train_summary", "tenant_register", "preempt", "absorb", "steal",
     "yield"} — the last five are the multi-tenant cluster stream
-    (DESIGN.md §14)."""
+    (DESIGN.md §14).
+
+    Since schema v4 every record also carries the unified event fields
+    (DESIGN.md §15): ``schema``/``source``/``wall`` plus tracing identity
+    when the session has a tracer.  The legacy ``kind``/``step``/``data``
+    triple is unchanged — old consumers keep working."""
     kind: str
     step: int
     data: Dict[str, Any]
+    schema: str = EVENT_SCHEMA
+    source: str = "session"
+    wall: Optional[float] = None
+    trace_id: Optional[str] = None
+    span_id: Optional[str] = None
+    parent_id: Optional[str] = None
+    lc: Optional[int] = None
+    cause_trace_id: Optional[str] = None
 
 
 class Session:
@@ -73,6 +88,10 @@ class Session:
         self.injector = None     # faults.ChaosInjector when chaos is on
         self._resume_dir: Optional[str] = None
         self._resume_step: Optional[int] = None
+        # ---- observability (DESIGN.md §15) --------------------------------
+        self.metrics = MetricsRegistry()   # always live; ~free when unread
+        self.tracer = None                 # obs.trace.Tracer when obs.trace
+        self._metrics_srv = None           # http server when obs.metrics_port
 
     @classmethod
     def resume(cls, ckpt_dir: str, *,
@@ -102,6 +121,7 @@ class Session:
         if self._closed:
             return
         self._closed = True
+        self._obs_end()
         if self._cp is not None:
             self._cp.close()
         if self._server is not None:
@@ -119,8 +139,56 @@ class Session:
             except Exception:
                 self._jm_proc.kill()
 
-    def _emit(self, kind: str, step: int, **data) -> None:
-        self.events.append(SessionEvent(kind, step, data))
+    def _emit(self, kind: str, step: int, *, cause_ctx=None,
+              **data) -> SessionEvent:
+        rec: Dict[str, Any] = {}
+        stamp_record(rec, source="session", kind=kind, tracer=self.tracer,
+                     ctx=cause_ctx)
+        ev = SessionEvent(kind, step, data, wall=rec.get("wall"),
+                          trace_id=rec.get("trace_id"),
+                          span_id=rec.get("span_id"),
+                          parent_id=rec.get("parent_id"), lc=rec.get("lc"),
+                          cause_trace_id=rec.get("cause_trace_id"))
+        self.events.append(ev)
+        return ev
+
+    # -- observability lifecycle (DESIGN.md §15) ---------------------------
+    def _obs_begin(self, mode: str):
+        """Build the tracer / metrics endpoint per ``spec.obs``.  The
+        trace id derives from run identity (mode + tenant + seed), never
+        pids or clocks, so a fixed-seed run's logical event sequence is
+        reproducible (tested)."""
+        obs = self.spec.obs
+        if obs.trace:
+            from repro.obs.trace import Tracer, set_current_tracer
+            if self.tracer is None:
+                tenant = self.spec.cluster.tenant_id or "solo"
+                self.tracer = Tracer(
+                    f"{mode}-{tenant}-s{self.spec.seed}",
+                    meta={"mode": mode, "tenant": tenant,
+                          "seed": self.spec.seed})
+            # deep layers (RPC clients, control plane, injector) find the
+            # tracer here instead of via constructor threading
+            set_current_tracer(self.tracer)
+        if obs.metrics_port and self._metrics_srv is None:
+            from repro.obs.metrics import serve_metrics
+            self._metrics_srv = serve_metrics(self.metrics,
+                                              obs.metrics_port)
+        return self.tracer
+
+    def _obs_end(self) -> None:
+        obs = self.spec.obs
+        if self._metrics_srv is not None:
+            self._metrics_srv.shutdown()
+            self._metrics_srv = None
+        if self.tracer is not None:
+            if obs.trace_out:
+                self.tracer.export(obs.trace_out)
+            from repro.obs.trace import current_tracer, set_current_tracer
+            if current_tracer() is self.tracer:
+                set_current_tracer(None)
+        if obs.metrics_out:
+            self.metrics.save(obs.metrics_out)
 
     # -- shared assembly ---------------------------------------------------
     def _model_config(self):
@@ -254,6 +322,9 @@ class Session:
                                                    StragglerDetector)
 
         spec = self.spec
+        obs = spec.obs
+        tracer = self._obs_begin("train")
+        mreg = self.metrics
         steps = steps if steps is not None else spec.steps
         stages = spec.parallel.stages
         seq = spec.parallel.seq
@@ -318,7 +389,8 @@ class Session:
                 pool = WorkerPool(stages, spares=spec.cluster.spares)
         engine = ElasticEngine(cfg, dcfg, dyncfg, shapes,
                                data=spec.parallel.data, pool=pool,
-                               job_manager=jm)
+                               job_manager=jm,
+                               in_step_timing=obs.in_step_timing)
         self._engine = engine
         if injector is not None:
             import signal
@@ -474,6 +546,18 @@ class Session:
         relayouts: List[Dict[str, Any]] = []
         expert_skew_last = moe_dropped_last = None
         last_measured = None
+        # ---- step-time accounting (DESIGN.md §15): warm-up steps (the
+        # first step on each freshly-built world pays the jit compile) and
+        # controller-cadence decide time are tracked SEPARATELY from the
+        # steady-state step times, so tok/s and per-step histograms are
+        # not skewed by one 30 s compile
+        stage_time_source = None
+        preempt_ctx = None
+        warmup_steps, warmup_s, decide_s = 0, 0.0, 0.0
+        steady_times: List[float] = []
+        root_span = (tracer.span("train", cat="session", steps=steps,
+                                 stages=stages) if tracer is not None
+                     else None)
         t0 = time.perf_counter()
         for step, batch in enumerate(loader, start=start_step):
             if step >= steps:
@@ -481,12 +565,29 @@ class Session:
             t_step = time.perf_counter()
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             lr = cosine_schedule(jnp.float32(step), steps, 3e-4, warmup=10)
+            sp_step = (tracer.span("train.step", cat="train", step=step,
+                                   stages=state.stages)
+                       if tracer is not None else None)
             loss, stats, gnorm = engine.step(state, batch, lr)
             # one scalar sync for the loss curve; the full per-slot stats
             # tree stays on device until controller cadence (§3.3.1)
             losses.append(float(loss))
-            step_times.append(time.perf_counter() - t_step)
+            if sp_step is not None:
+                sp_step.end(compiled=engine.last_step_compiled)
+            dt = time.perf_counter() - t_step
+            step_times.append(dt)
             stages_hist.append(state.stages)
+            if engine.last_step_compiled:
+                warmup_steps += 1
+                warmup_s += dt
+            else:
+                steady_times.append(dt)
+                mreg.observe("dynmo_step_seconds", dt,
+                             help="steady-state train step wall seconds")
+            mreg.inc("dynmo_train_steps_total",
+                     help="train steps executed")
+            mreg.set("dynmo_stages", state.stages,
+                     help="current pipeline stage count")
 
             # ---- dynamism events (black-box to the controller)
             if dynamism == "pruning" and step and step % 10 == 0:
@@ -533,13 +634,36 @@ class Session:
             # ---- publish stats to the control plane on cadence (the only
             # device→host stats sync; in async mode this is a pointer swap)
             if ctrl.cadence(step + 1):
+                t_decide = time.perf_counter()
+                sp_dec = (tracer.span("controller.decide", cat="controller",
+                                      step=step)
+                          if tracer is not None else None)
                 measured = None
-                if measure_stage_times:
+                src = None
+                if obs.in_step_timing:
+                    # live per-stage seconds folded from the in-step
+                    # stage-boundary stamps (DESIGN.md §15) — costs no
+                    # extra execution; the probe below stays available
+                    # behind controller.measure_stage_times as the
+                    # parity oracle
+                    measured = engine.in_step_stage_times(state)
+                    if measured is not None:
+                        src = "in_step"
+                if measured is None and measure_stage_times:
                     # real per-stage wall times from the engine's stage
                     # probe — cadence-gated here so the hot path stays
                     # sync-free (the probe is a per-stage host sync)
                     measured = engine.measure_stage_times(state, batch)
+                    if measured is not None:
+                        src = "probe"
+                if measured is not None:
                     last_measured = measured
+                    stage_time_source = src
+                    for s in range(len(measured)):
+                        mreg.set("dynmo_stage_time_seconds",
+                                 float(measured[s]),
+                                 help="per-stage busy seconds per step",
+                                 stage=s, source=src)
                 if straggler:
                     # simulation knob: a straggling WORKER multiplies its
                     # stage's wall time; feed the detector the same shape a
@@ -572,6 +696,9 @@ class Session:
                     stage_times=measured))
                 if spec.controller.async_drain:
                     cp.drain()
+                decide_s += time.perf_counter() - t_decide
+                if sp_dec is not None:
+                    sp_dec.end(source=src)
 
             # ---- cluster-scheduler directives (multi-tenant): a steal by
             # a higher-priority tenant arrives as a preemption directive
@@ -592,9 +719,23 @@ class Session:
                     if target < state.stages:
                         cp.inject_resize(engine.epoch, target)
                         last_cluster_resize = step
-                        self._emit("preempt", step,
+                        # the scheduler forwards the thief's span context
+                        # ("cause"): parent this preemption on it so the
+                        # cross-process steal→preempt→shrink chain
+                        # correlates in the merged trace (DESIGN.md §15)
+                        cause = (directives.get("cause")
+                                 if isinstance(directives, dict) else None)
+                        self._emit("preempt", step, cause_ctx=cause,
                                    due=directives["preempt"],
                                    target_stages=target)
+                        if tracer is not None:
+                            preempt_ctx = tracer.instant(
+                                "cluster.preempt", cat="cluster",
+                                parent_id=(cause or {}).get("span_id"),
+                                cause_trace_id=(cause or {}).get(
+                                    "trace_id"),
+                                due=directives["preempt"],
+                                target_stages=target)
                 elif (directives and directives["offer"] > 0
                         and state.stages < stages
                         and step - last_cluster_resize >= absorb_cooldown):
@@ -635,10 +776,27 @@ class Session:
                                moved_layers=plan.event.moved_layers)
                 if (plan.resize is not None
                         and plan.resize.target_stages < state.stages):
+                    sp_rz = None
+                    if tracer is not None:
+                        parent = ((preempt_ctx or {}).get("span_id")
+                                  if plan.resize.policy == "preempt"
+                                  else None)
+                        sp_rz = tracer.span(
+                            "resize.shrink", cat="resize",
+                            parent_id=parent, step=step,
+                            policy=plan.resize.policy,
+                            target=plan.resize.target_stages)
                     state = engine.shrink(state, plan.resize.target_stages,
                                           plan.resize.layers_per_stage,
                                           step=step)
                     after_resize(step, f"shrink[{plan.resize.policy}]")
+                    mreg.inc("dynmo_resizes_total", kind="shrink",
+                             policy=plan.resize.policy,
+                             help="engine resizes by kind")
+                    if sp_rz is not None:
+                        sp_rz.end(stages=state.stages)
+                        if plan.resize.policy == "preempt":
+                            preempt_ctx = None
                 elif plan.new_lps is not None:
                     p, o, d, new_assignment, _ = cp.apply(
                         plan, state.params, state.opt_state, state.dyn)
@@ -718,11 +876,16 @@ class Session:
                 ckpt.maybe_save(step, state.params, state.opt_state,
                                 state.dyn, state.lps)
             if safept is not None and safept.due(step):
+                sp_ck = (tracer.span("safepoint", cat="checkpoint",
+                                     step=step)
+                         if tracer is not None else None)
                 path = safept.save(
                     step, state, spec=spec, engine=engine, scaler=scaler,
                     repack_enabled=cp.with_ctrl(
                         lambda c: bool(c.ccfg.repack)),
                     jm_dir=self._jm_dir)
+                if sp_ck is not None:
+                    sp_ck.end(path=path)
                 self._emit("safepoint", step, path=path,
                            stages=state.stages)
             if injector is not None:
@@ -738,6 +901,26 @@ class Session:
                       f"gnorm {float(gnorm):.3f} S={state.stages} "
                       f"lps={state.lps}")
         wall = time.perf_counter() - t0
+        if root_span is not None:
+            root_span.end(steps_run=len(losses))
+        steady_s = float(sum(steady_times))
+        steady_tok_s = (tokens_per_step * len(steady_times) / steady_s
+                        if steady_s > 0 else None)
+        if steady_tok_s is not None:
+            mreg.set("dynmo_tokens_per_s", steady_tok_s,
+                     help="steady-state training throughput")
+        timing = {
+            "warmup_steps": warmup_steps, "warmup_s": warmup_s,
+            "decide_s": decide_s,
+            "steady_steps": len(steady_times), "steady_s": steady_s,
+            "steady_step_mean_s": (steady_s / len(steady_times)
+                                   if steady_times else None),
+            "steady_step_p50_s": (float(np.percentile(steady_times, 50))
+                                  if steady_times else None),
+            "steady_step_p95_s": (float(np.percentile(steady_times, 95))
+                                  if steady_times else None),
+            "steady_tokens_per_s": steady_tok_s,
+        }
         report = {
             "losses": losses, "events": events, "wall_s": wall,
             "final_lps": list(state.lps), "params": state.params,
@@ -749,6 +932,8 @@ class Session:
             "final_stages": state.stages,
             "measured_stage_times": (list(map(float, last_measured))
                                      if last_measured is not None else None),
+            "stage_time_source": stage_time_source,
+            "timing": timing,
             "controller": {
                 "mode": ("async" if spec.controller.async_decide
                          else "inline"),
@@ -814,6 +999,7 @@ class Session:
 
         spec = self.spec
         s = spec.serve
+        tracer = self._obs_begin("serve")
         cfg = self._model_config()
         dcfg = self._dist_config()
         dyncfg = spec.dynamics.to_config()
@@ -875,11 +1061,23 @@ class Session:
                             seed=spec.seed, defrag_every=s.defrag_every,
                             measure_stage_times=spec.controller
                             .measure_stage_times,
-                            initial_workers=granted)
+                            initial_workers=granted,
+                            in_step_timing=spec.obs.in_step_timing,
+                            tracer=tracer, metrics=self.metrics)
         self._server = srv
+        root_span = (tracer.span("serve", cat="session",
+                                 requests=len(trace))
+                     if tracer is not None else None)
         report = srv.serve(trace, autoscale=spec.cluster.autoscale,
                            resize_at=resize_at, max_ticks=s.max_ticks,
                            injector=injector)
+        if root_span is not None:
+            root_span.end(ticks=report["ticks"],
+                          completions=len(report["completions"]))
+        self.metrics.set("dynmo_tokens_per_s", report["tokens_per_s"],
+                         help="serving throughput")
+        self.metrics.set("dynmo_latency_p95_s", report["latency_p95_s"],
+                         help="serving p95 request latency")
         report["spec"] = spec.to_dict()
         report["faults"] = injector.report() if injector is not None else []
         report["fault_plan"] = plan.to_dict() if plan is not None else None

@@ -30,7 +30,7 @@ from typing import Any, Dict, List, Optional
 from repro.configs.base import DTYPE_BYTES
 from repro.dynamics.config import DynamicsConfig
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 DYNAMISM_KINDS = ("none", "moe", "pruning", "freezing", "sparse_attention",
                   "early_exit", "mod")
@@ -370,6 +370,37 @@ class ServeSpec:
                f"must be >= 0, got {self.latency_slo_s!r}")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Observability (new in schema v4; DESIGN.md §15).
+
+    Everything here is inert by default: no tracer, no metrics endpoint,
+    stage timings still come from the probe.  ``in_step_timing`` switches
+    ``StatsSnapshot.stage_times`` to the live in-step stamps (the probe
+    stays available behind ``controller.measure_stage_times`` as a parity
+    oracle)."""
+    trace: bool = False               # record spans (Tracer) for this run
+    trace_out: Optional[str] = None   # export Chrome trace-event JSON here
+    metrics_port: Optional[int] = None   # serve GET /metrics on this port
+    metrics_out: Optional[str] = None    # write a JSON metrics snapshot
+    in_step_timing: bool = False      # stage times from the live step
+
+    def __post_init__(self):
+        if self.metrics_port is not None:
+            _check(isinstance(self.metrics_port, int)
+                   and 0 < self.metrics_port < 65536,
+                   "obs.metrics_port",
+                   f"must be a port in (0, 65536), got {self.metrics_port!r}")
+        if self.trace_out is not None:
+            _check(isinstance(self.trace_out, str) and self.trace_out,
+                   "obs.trace_out",
+                   f"must be a non-empty path, got {self.trace_out!r}")
+        if self.metrics_out is not None:
+            _check(isinstance(self.metrics_out, str) and self.metrics_out,
+                   "obs.metrics_out",
+                   f"must be a non-empty path, got {self.metrics_out!r}")
+
+
 # ---------------------------------------------------------------------------
 # The composed spec
 # ---------------------------------------------------------------------------
@@ -385,6 +416,7 @@ class RunSpec:
     cluster: ClusterSpec = dataclasses.field(default_factory=ClusterSpec)
     serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     steps: int = 50
     seed: int = 0
     log_every: int = 10
@@ -560,7 +592,16 @@ def _upgrade_v2(d: Dict[str, Any]) -> Dict[str, Any]:
     return d
 
 
-_UPGRADERS = {1: _upgrade_v1, 2: _upgrade_v2}
+def _upgrade_v3(d: Dict[str, Any]) -> Dict[str, Any]:
+    """v3 -> v4: the observability layer (DESIGN.md §15) — adds the
+    ``obs`` block (tracing, metrics endpoint, in-step stage timing).  All
+    off by default, so the upgrade is purely additive."""
+    d["schema_version"] = 4
+    d.setdefault("obs", {})
+    return d
+
+
+_UPGRADERS = {1: _upgrade_v1, 2: _upgrade_v2, 3: _upgrade_v3}
 
 
 # ---------------------------------------------------------------------------

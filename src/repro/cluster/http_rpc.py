@@ -91,6 +91,14 @@ class HttpJobManager(TenantVerbsMixin):
         seq = self._seq
         self.rpc_stats["calls"] += 1
         obj = {"op": op, "seq": seq, "client": self.client_id, **payload}
+        # ship the caller's span context (client_id + seq ride along) so
+        # the scheduler can attribute the op and forward a steal's context
+        # to its preemption victim (DESIGN.md §15)
+        from repro.obs.trace import current_tracer
+        tr = current_tracer()
+        if tr is not None:
+            obj["trace"] = tr.rpc_ctx(op, transport="http",
+                                      client=self.client_id, seq=seq)
         per_attempt = self.timeout_s / self.retries
         last_err: Optional[Exception] = None
         for attempt in range(self.retries):
@@ -199,6 +207,19 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                 self._reply(200, {"ok": True,
                                   "active": self.server.sched.pool
                                   .num_active})
+        elif self.path == "/metrics":
+            # Prometheus text exposition derived from the SAME events list
+            # the `metrics` RPC verb returns — scraped counters can never
+            # disagree with the events stream (DESIGN.md §15)
+            from repro.obs.metrics import scheduler_to_prometheus
+            with self.server.lock:
+                body = scheduler_to_prometheus(self.server.sched).encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
         else:
             self._reply(404, {"error": "not found"})
 

@@ -172,10 +172,14 @@ class TenantVerbsMixin:
     def poll_cluster(self) -> Dict[str, int]:
         """Directive mailbox: ``{"preempt": k, "offer": m}`` — this tenant
         must release ``k`` workers at its next safe point / could absorb
-        ``m`` free ones.  Level-triggered: re-delivered until acted on."""
+        ``m`` free ones.  Level-triggered: re-delivered until acted on.
+        ``cause`` (when present) is the thief's span context — the victim
+        parents its preemption events on it so the cross-process
+        steal→preempt→shrink chain correlates (DESIGN.md §15)."""
         out = self._call("poll", **self._tenant_kw())
         return {"preempt": int(out.get("preempt", 0)),
-                "offer": int(out.get("offer", 0))}
+                "offer": int(out.get("offer", 0)),
+                "cause": out.get("cause")}
 
     def cluster_metrics(self) -> dict:
         """Scheduler event timeline + per-tenant grants (bench telemetry)."""
@@ -291,6 +295,12 @@ class FileJobManager(TenantVerbsMixin):
         req = os.path.join(self.root, f"req-{seq:06d}.json")
         resp = os.path.join(self.root, f"resp-{seq:06d}.json")
         obj = {"op": op, "seq": seq, **payload}
+        # ship the caller's span context so the scheduler can attribute
+        # this op (and forward a steal's context to its preemption victim)
+        from repro.obs.trace import current_tracer
+        tr = current_tracer()
+        if tr is not None:
+            obj["trace"] = tr.rpc_ctx(op, transport="file", seq=seq)
         per_attempt = self.timeout_s / self.retries
         for attempt in range(self.retries):
             # retries re-publish the SAME sequence number: the server

@@ -59,6 +59,10 @@ class Tenant:
     reserved: List[int] = dataclasses.field(default_factory=list)
     # freed-by-preemption workers parked for THIS tenant's next request
     steal_owed: int = 0            # outstanding steal demand not yet granted
+    # the thief's span context ({"trace_id","span_id"}, DESIGN.md §15):
+    # forwarded to the victim on poll so the cross-process
+    # steal→preempt→shrink chain correlates in a merged trace
+    preempt_cause: Optional[dict] = None
 
     def state_dict(self) -> dict:
         return {"tenant_id": self.tenant_id, "priority": self.priority,
@@ -67,7 +71,8 @@ class Tenant:
                 "granted": sorted(self.granted),
                 "preempt_due": self.preempt_due,
                 "reserved": sorted(self.reserved),
-                "steal_owed": self.steal_owed}
+                "steal_owed": self.steal_owed,
+                "preempt_cause": self.preempt_cause}
 
     @classmethod
     def from_state(cls, sd: dict) -> "Tenant":
@@ -78,7 +83,8 @@ class Tenant:
                    granted=[int(w) for w in sd["granted"]],
                    preempt_due=int(sd.get("preempt_due", 0)),
                    reserved=[int(w) for w in sd.get("reserved", [])],
-                   steal_owed=int(sd.get("steal_owed", 0)))
+                   steal_owed=int(sd.get("steal_owed", 0)),
+                   preempt_cause=sd.get("preempt_cause"))
 
 
 class SchedulerInvariantError(RuntimeError):
@@ -99,14 +105,22 @@ class ClusterScheduler:
         # grant-count timeline for utilization accounting (bench_cluster):
         # one record per worker transition, wall-stamped by the server
         self.events: List[dict] = []
+        self._req_ctx: Optional[dict] = None   # requester's span context
         self._check()
 
     # -- telemetry ---------------------------------------------------------
     def _record(self, tenant: str, ev: str, worker: int) -> None:
-        self.events.append({"t": time.time(), "tenant": tenant, "ev": ev,
-                            "worker": int(worker),
-                            "granted": {t.tenant_id: len(t.granted)
-                                        for t in self.tenants.values()}})
+        from repro.obs.events import stamp_record
+        rec = {"t": time.time(), "tenant": tenant, "ev": ev,
+               "worker": int(worker),
+               "granted": {t.tenant_id: len(t.granted)
+                           for t in self.tenants.values()}}
+        # legacy "t"/"ev" keys stay (aliases, one release); the unified
+        # fields ride along — with the requester's span context as the
+        # trace identity when the op carried one (DESIGN.md §15)
+        stamp_record(rec, source="scheduler", kind=ev, tracer=None,
+                     ctx=self._req_ctx, wall=False)
+        self.events.append(rec)
 
     # -- the double-grant guard (DESIGN.md §14) ----------------------------
     def _check(self) -> None:
@@ -198,7 +212,8 @@ class ClusterScheduler:
         return None
 
     # -- preemption --------------------------------------------------------
-    def _assign_preemption(self, thief: Tenant, shortfall: int) -> int:
+    def _assign_preemption(self, thief: Tenant, shortfall: int,
+                           cause: Optional[dict] = None) -> int:
         """Post preemption directives worth ``shortfall`` workers against
         strictly-lower-priority tenants.  Victims: lowest priority first;
         within a priority, the tenant with the most workers above its floor
@@ -218,6 +233,8 @@ class ClusterScheduler:
                 continue
             v.preempt_due += take
             assigned += take
+            if cause is not None:
+                v.preempt_cause = dict(cause)
             self._record(v.tenant_id, "preempt_due", take)
             if assigned >= shortfall:
                 break
@@ -277,7 +294,8 @@ class ClusterScheduler:
         shortfall = int(n) - len(granted)
         pending = 0
         if shortfall > 0:
-            pending = self._assign_preemption(t, shortfall)
+            pending = self._assign_preemption(t, shortfall,
+                                              cause=self._req_ctx)
             t.steal_owed += pending
         if granted or pending:
             self._record(t.tenant_id, "steal",
@@ -296,6 +314,8 @@ class ClusterScheduler:
         self.pool.release(taken)
         settled = min(t.preempt_due, len(taken))
         t.preempt_due -= settled
+        if t.preempt_due == 0:
+            t.preempt_cause = None
         self._settle_freed(t, taken[:settled])
         for w in taken:
             self._record(t.tenant_id, "yield", w)
@@ -329,7 +349,12 @@ class ClusterScheduler:
             # tenant under pressure doesn't wait for an offer — it steals
             offer = min(len(self._free()) + len(t.reserved),
                         t.max_workers - len(t.granted))
-        return {"preempt": t.preempt_due, "offer": offer}
+        out = {"preempt": t.preempt_due, "offer": offer}
+        if t.preempt_due > 0 and t.preempt_cause is not None:
+            # forward the thief's span context so the victim can parent
+            # its preemption events on it (DESIGN.md §15)
+            out["cause"] = dict(t.preempt_cause)
+        return out
 
     # -- transport dispatch -------------------------------------------------
     def handle(self, req: dict) -> dict:
@@ -338,6 +363,10 @@ class ClusterScheduler:
         legacy single-Session pool semantics bit-for-bit."""
         op = req.get("op")
         tenant = req.get("tenant")
+        # the requester's span context (shipped by the RPC transports)
+        # scopes every record this op produces
+        self._req_ctx = req.get("trace") if isinstance(
+            req.get("trace"), dict) else None
         out: dict = {"op": op, "seq": req.get("seq")}
         try:
             if op == "release" and tenant:
@@ -379,6 +408,8 @@ class ClusterScheduler:
                 out["error"] = f"unknown op {op!r}"
         except KeyError as e:
             out["error"] = f"unknown tenant {e.args[0]!r} (register first)"
+        finally:
+            self._req_ctx = None
         out["active"] = self.pool.num_active
         return out
 

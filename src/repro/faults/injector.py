@@ -33,9 +33,14 @@ from repro.faults.plan import FaultEvent, FaultPlan
 
 @dataclasses.dataclass
 class FaultRecord:
+    """One injected fault.  Since schema v4 the dict form (``report()``)
+    additionally carries the unified event fields — schema/source/wall and
+    tracing identity when a tracer is current (DESIGN.md §15); the legacy
+    ``step``/``kind``/``detail`` triple is unchanged."""
     step: int
     kind: str
     detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    obs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 class ChaosInjector:
@@ -67,7 +72,9 @@ class ChaosInjector:
         self._cbs.update(callbacks)
 
     def record(self, step: int, kind: str, **detail: Any) -> None:
-        self.records.append(FaultRecord(step, kind, detail))
+        from repro.obs.events import stamp_record
+        obs = stamp_record({}, source="fault", kind=kind)
+        self.records.append(FaultRecord(step, kind, detail, obs))
 
     # -- heartbeat filtering (train-side worker crash) ---------------------
     def heartbeat_workers(self, workers: Sequence[int]) -> List[int]:
@@ -122,7 +129,13 @@ class ChaosInjector:
         return fired
 
     def report(self) -> List[Dict[str, Any]]:
-        return [dataclasses.asdict(r) for r in self.records]
+        # flatten: legacy keys at the top level, unified fields merged in
+        out = []
+        for r in self.records:
+            d = {"step": r.step, "kind": r.kind, "detail": dict(r.detail)}
+            d.update(r.obs)
+            out.append(d)
+        return out
 
 
 class ChaosFileJobManager(FileJobManager):

@@ -44,12 +44,15 @@ from repro.runtime.fault_tolerance import WorkerPool
 
 def make_train_step(cfg: ModelConfig, dcfg: DistConfig,
                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
-                    opt_cfg: Optional[OptConfig] = None):
+                    opt_cfg: Optional[OptConfig] = None, stage_timer=None):
     """Returns (init_opt_fn, train_step) with
     train_step(params, opt_state, assignment, dyn, batch, lr)
-      -> (params, opt_state, loss, stats, gnorm)."""
+      -> (params, opt_state, loss, stats, gnorm).
+    ``stage_timer`` threads an ``obs.timing.StageTimer`` into the pipelined
+    loss (in-step stage timing, DESIGN.md §15)."""
     opt_cfg = opt_cfg or OptConfig(name=dcfg.optimizer)
-    loss_fn = build_loss_fn(cfg, dcfg, dyncfg, mesh, shapes)
+    loss_fn = build_loss_fn(cfg, dcfg, dyncfg, mesh, shapes,
+                            stage_timer=stage_timer)
     init_fn, update_fn = make_optimizer(opt_cfg)
 
     def train_step(params, opt_state, assignment, dyn, batch, lr):
@@ -94,6 +97,8 @@ class EngineWorld:
     prefill: Any = None        # lazily-jitted serving prefill
     decode: Any = None         # lazily-jitted serving decode (donates cache)
     stage_probe: Any = None    # lazily-jitted single-stage forward (timers)
+    timer: Any = None          # obs.timing.StageTimer (in-step timing on)
+    stepped: bool = False      # first step() on this world pays compile
 
 
 @dataclasses.dataclass
@@ -136,11 +141,14 @@ class ElasticEngine:
                  opt_cfg: Optional[OptConfig] = None, data: int = 1,
                  devices: Optional[Sequence[Any]] = None,
                  pool: Optional[WorkerPool] = None,
-                 job_manager: Optional[JobManagerClient] = None):
+                 job_manager: Optional[JobManagerClient] = None,
+                 in_step_timing: bool = False):
         self.cfg, self.base_dcfg, self.dyncfg = cfg, dcfg, dyncfg
         self.shapes = shapes
         self.opt_cfg = opt_cfg
         self.data = data
+        self.in_step_timing = in_step_timing
+        self.last_step_compiled = False
         self.last_moe_drop = None   # serve telemetry (see _note_moe_drop)
         self.devices = (list(devices) if devices is not None
                         else list(jax.devices()))
@@ -254,11 +262,17 @@ class ElasticEngine:
         if w is None:
             dcfg = self.dcfg_for(stages)
             mesh = make_submesh(self.data, stages, devices=devs)
+            timer = None
+            if self.in_step_timing:
+                from repro.obs.timing import StageTimer
+                timer = StageTimer(stages)
             init_opt, step_fn = make_train_step(
-                self.cfg, dcfg, self.dyncfg, mesh, self.shapes, self.opt_cfg)
+                self.cfg, dcfg, self.dyncfg, mesh, self.shapes, self.opt_cfg,
+                stage_timer=timer)
             w = EngineWorld(stages=stages, dcfg=dcfg, mesh=mesh,
                             init_opt=init_opt,
-                            step=jax.jit(step_fn, donate_argnums=(0, 1)))
+                            step=jax.jit(step_fn, donate_argnums=(0, 1)),
+                            timer=timer)
             self._worlds[key] = w
         return w
 
@@ -362,6 +376,8 @@ class ElasticEngine:
         (loss, stats, gnorm) — stats stay on device (the caller decides when
         to pay the host sync)."""
         w = self.world(state.stages)
+        self.last_step_compiled = not w.stepped
+        w.stepped = True
         with w.mesh:
             params, opt_state, loss, stats, gnorm = w.step(
                 state.params, state.opt_state, state.assignment, state.dyn,
@@ -395,9 +411,11 @@ class ElasticEngine:
         w = self.world(stages)
         if w.prefill is None:
             w.prefill = jax.jit(build_prefill_fn(
-                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes))
+                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes,
+                stage_timer=w.timer))
             w.decode = jax.jit(build_decode_fn(
-                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes),
+                self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes,
+                stage_timer=w.timer),
                 donate_argnums=(3,))
         return w.prefill, w.decode
 
@@ -437,6 +455,17 @@ class ElasticEngine:
         self.last_moe_drop = drop / float(n_moe * self.shapes.num_micro)
 
     # -- measured per-stage timers ----------------------------------------
+    def in_step_stage_times(self, state: EngineState):
+        """Per-stage busy seconds per step from the live pipelined step
+        (DESIGN.md §15) — no extra execution: reads and resets the current
+        world's ``StageTimer`` accumulation since the last call.  Returns
+        None when in-step timing is off or no full window has accumulated
+        yet (e.g. right after a resize onto a fresh world)."""
+        w = self.world(state.stages)
+        if w.timer is None:
+            return None
+        return w.timer.snapshot(ticks_per_step=self.ticks(state.stages))
+
     def measure_stage_times(self, state: EngineState, batch):
         """Measured per-stage forward wall times (seconds, [S]).
 

@@ -1,0 +1,115 @@
+"""In-step stage timing (DESIGN.md §15; ROADMAP open item 5).
+
+The old stage profiler (``ElasticEngine.measure_stage_times``) runs a
+*separate* bounded-loop execution per stage — an isolated probe that costs
+a full extra forward and measures something other than the live step.
+This module instead stamps host timestamps at the stage boundaries of the
+real pipelined jitted step:
+
+  * ``make_stamp(timer)`` returns a jax-traceable ``stamp(tok, stage,
+    phase)`` that issues a ``jax.pure_callback`` into the host-side
+    ``StageTimer``.  The callback's operands/result are threaded through
+    the tick's activation carry, so XLA cannot reorder it across the
+    stage compute (phase 0 consumes the carry *before* ``stage_forward``,
+    phase 1 consumes its output), and a ``custom_vjp`` makes it transparent
+    to ``jax.grad`` (identity forward, identity cotangent).
+  * ``StageTimer`` pairs the per-shard (stage, phase) stamps into busy
+    seconds per stage.  Every stage stamps once per tick — exactly the
+    cadence of the ``[S, L_max]`` stats fold — so per-step stage seconds
+    are ``mean_busy_per_tick * T`` with ``T = num_micro + S - 1``.
+
+Ordered io_callback is NOT used: on the experimental shard_map fallback
+(jax without ``jax.shard_map``) its effect tokens break partial-eval under
+``jax.grad``.  The pure_callback + data-dependency construction composes
+with jit + grad + scan + shard_map on every jax the repo supports
+(validated by the parity test against the probe oracle).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class StageTimer:
+    """Host-side collector for in-step stage-boundary stamps.
+
+    Thread-safe: XLA-CPU runs each pipeline shard on its own thread and
+    the callbacks arrive concurrently; stamps are keyed by stage index so
+    shards never pair against each other."""
+
+    def __init__(self, num_stages: int):
+        self.num_stages = int(num_stages)
+        self._lock = threading.Lock()
+        self._open = {}
+        self._acc = np.zeros(self.num_stages, np.float64)
+        self._n = np.zeros(self.num_stages, np.int64)
+
+    def stamp(self, stage: int, phase: int) -> None:
+        t = time.perf_counter()
+        s = int(stage)
+        if not (0 <= s < self.num_stages):
+            return
+        with self._lock:
+            if int(phase) == 0:
+                self._open[s] = t
+            else:
+                t0 = self._open.pop(s, None)
+                if t0 is not None:
+                    self._acc[s] += t - t0
+                    self._n[s] += 1
+
+    def snapshot(self, ticks_per_step: Optional[int] = None,
+                 reset: bool = True) -> Optional[np.ndarray]:
+        """Per-stage busy seconds: mean-per-tick (scaled to per-step when
+        ``ticks_per_step`` is given).  None until every stage has stamped
+        at least once since the last snapshot."""
+        with self._lock:
+            acc, n = self._acc.copy(), self._n.copy()
+            if reset:
+                self._acc[:] = 0.0
+                self._n[:] = 0
+                self._open.clear()
+        if not n.all():
+            return None
+        per_tick = acc / n
+        return per_tick * ticks_per_step if ticks_per_step else per_tick
+
+    @property
+    def samples(self) -> np.ndarray:
+        with self._lock:
+            return self._n.copy()
+
+
+def make_stamp(timer: StageTimer):
+    """Build the jax-traceable stage-boundary stamp for one ``timer``.
+
+    ``stamp(tok, stage, phase)`` returns ``tok`` unchanged (plus a
+    callback-produced zero, which is what pins the execution order); it is
+    safe under ``jax.grad`` — the backward pass re-runs no callbacks and
+    passes the cotangent straight through."""
+
+    def _host(stage, phase, _tok):
+        timer.stamp(int(stage), int(phase))
+        return np.zeros((), np.float32)
+
+    @jax.custom_vjp
+    def stamp(tok, stage, phase):
+        del stage, phase
+        return tok
+
+    def _fwd(tok, stage, phase):
+        z = jax.pure_callback(
+            _host, jax.ShapeDtypeStruct((), jnp.float32),
+            stage, phase, tok.ravel()[0].astype(jnp.float32))
+        return tok + z.astype(tok.dtype), None
+
+    def _bwd(_res, g):
+        return (g, None, None)
+
+    stamp.defvjp(_fwd, _bwd)
+    return stamp

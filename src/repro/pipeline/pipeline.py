@@ -90,6 +90,15 @@ def _ring(n):
     return [(i, (i + 1) % n) for i in range(n)]
 
 
+def _make_stamp_or_none(stage_timer):
+    """Stage-boundary host stamp for in-step timing; None when disabled
+    (the common case — zero ops are added to the step)."""
+    if stage_timer is None:
+        return None
+    from repro.obs.timing import make_stamp
+    return make_stamp(stage_timer)
+
+
 def _make_pin(mesh, dcfg):
     """Sharding pin for pipeline-carry leaves: batch dim over the DP axes.
 
@@ -141,18 +150,23 @@ def _init_carry(cfg, dyncfg, shapes: PipelineShapes, dtype, decode=False):
 # Training / evaluation loss
 # ---------------------------------------------------------------------------
 def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
-                  mesh, shapes: PipelineShapes, mode: str = "train"):
+                  mesh, shapes: PipelineShapes, mode: str = "train",
+                  stage_timer=None):
     """Returns loss_fn(params, assignment, dyn, batch) -> (loss, stats).
 
     batch = {"tokens": [m, B, seq] i32, "labels": [m, B, seq] i32,
              "label_mask": [m, B, seq] f32, optional "prefix_emb"
              [m, B, P, d] f32, optional "frames" [m, B, enc_seq, d] f32}.
     stats: per-stage per-slot profiler aggregates {field: [S, L_max, ...]}.
+    stage_timer: optional ``obs.timing.StageTimer`` — when set, every tick
+    stamps host timestamps at the stage boundaries (in-step stage timing,
+    DESIGN.md §15); numerically a no-op.
     """
     S = dcfg.num_stages
     dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
 
     pin = _make_pin(mesh, dcfg)
+    stamp = _make_stamp_or_none(stage_timer)
 
     def pipe(params, assignment, dyn, batch):
         stages = _stage_slice(params["stages"])
@@ -209,7 +223,11 @@ def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
                 lambda _t: jax.tree.map(jnp.zeros_like, buf), t)
             carry = jax.tree.map(
                 lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
+            if stamp is not None:
+                carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(0))}
             carry, _, stats, aux = stage_fn(carry)
+            if stamp is not None:
+                carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(1))}
             # ---- last stage emits this tick's finished microbatch hidden;
             # the loss (head matmul) runs ONCE after the schedule, so its
             # logits are never live across ticks (memory) and probes count
@@ -305,7 +323,8 @@ def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
 # Decode (serve_step): one token for every request, pipelined microbatches
 # ---------------------------------------------------------------------------
 def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
-                    dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes):
+                    dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
+                    stage_timer=None):
     """Returns decode_fn(params, assignment, dyn, cache, tokens, pos)
     -> (next_ids [m, B] i32, logprobs [m, B] f32, new_cache,
     moe_drop_sum f32 — MoE capacity-drop fractions summed over
@@ -321,6 +340,7 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
     dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
 
     pin = _make_pin(mesh, dcfg)
+    stamp = _make_stamp_or_none(stage_timer)
 
     def pipe(params, assignment, dyn, cache, tokens, pos):
         stages = _stage_slice(params["stages"])
@@ -368,9 +388,13 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
             cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
             pos_mb = (jax.lax.dynamic_index_in_dim(pos, mi, 0, False)
                       if per_lane else pos)
+            if stamp is not None:
+                carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(0))}
             carry, new_cache_mb, st, _ = M.stage_forward(
                 cfg, dcfg, dyncfg, "decode", stages, shared, tags, dyn_s,
                 carry, cache_mb, pos_mb, idx * tags.shape[0])
+            if stamp is not None:
+                carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(1))}
             drop_out = drop_out + (jnp.sum(st["moe_dropped"])
                                    * mvalid.astype(jnp.float32))
             cache_s = jax.tree.map(
@@ -436,13 +460,15 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
 # Prefill: forward pass that fills the decode cache
 # ---------------------------------------------------------------------------
 def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
-                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes):
+                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
+                     stage_timer=None):
     """Returns prefill_fn(params, assignment, dyn, cache, batch)
     -> (last_ids [m, B] i32, new_cache, moe_drop_sum f32)."""
     S = dcfg.num_stages
     dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
 
     pin = _make_pin(mesh, dcfg)
+    stamp = _make_stamp_or_none(stage_timer)
 
     def pipe(params, assignment, dyn, cache, batch):
         stages = _stage_slice(params["stages"])
@@ -489,9 +515,13 @@ def build_prefill_fn(cfg: ModelConfig, dcfg: DistConfig,
             carry = jax.tree.map(
                 lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
             cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
+            if stamp is not None:
+                carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(0))}
             carry, new_cache_mb, st, _ = M.stage_forward(
                 cfg, dcfg, dyncfg, "prefill", stages, shared, tags, dyn_s,
                 carry, cache_mb, pos, idx * tags.shape[0])
+            if stamp is not None:
+                carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(1))}
             drop_out = drop_out + (jnp.sum(st["moe_dropped"])
                                    * mvalid.astype(jnp.float32))
             cache_s = jax.tree.map(

@@ -69,10 +69,12 @@ class ElasticServer:
                  scaler: Optional[Autoscaler] = None, min_stages: int = 1,
                  eos_id: Optional[int] = None, defrag_every: int = 0,
                  seed: int = 0, measure_stage_times: bool = False,
-                 initial_workers: Optional[Sequence[int]] = None):
+                 initial_workers: Optional[Sequence[int]] = None,
+                 in_step_timing: bool = False, tracer=None, metrics=None):
         assert shapes.cache_len >= shapes.seq, "cache must hold the prompt"
         self.engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=data,
-                                    job_manager=job_manager)
+                                    job_manager=job_manager,
+                                    in_step_timing=in_step_timing)
         if initial_workers is not None:
             # multi-tenant start: serve on exactly the workers the cluster
             # scheduler granted (arbitrary global ids, possibly fewer than
@@ -92,6 +94,9 @@ class ElasticServer:
         self.eos_id = eos_id
         self.defrag_every = defrag_every
         self.measure_stage_times = measure_stage_times
+        self.in_step_timing = in_step_timing
+        self.tracer = tracer     # obs.trace.Tracer (None = tracing off)
+        self.metrics = metrics   # obs.metrics.MetricsRegistry (optional)
         self._sched: Optional[Scheduler] = None
 
     def close(self) -> None:
@@ -129,12 +134,26 @@ class ElasticServer:
         scheduler (no-op on single-tenant managers)."""
         st = self.state
         prev = st.stages
+        sp = (self.tracer.span("serve.resize", cat="resize", tick=tick,
+                               target=target_stages, reason=reason,
+                               steal=steal)
+              if self.tracer is not None else None)
         if target_stages < prev:
             self.state = self.engine.shrink(st, target_stages, step=tick)
         elif target_stages > prev:
+            # an urgent steal goes through jm.steal inside grow(); the RPC
+            # transport ships this span's context so the victim's preempt
+            # chains onto it cross-process (DESIGN.md §15)
             self.state = self.engine.grow(st, target_stages - prev,
                                           step=tick, steal=steal)
         changed = self.state.stages != prev
+        if sp is not None:
+            sp.end(stages=self.state.stages, changed=changed)
+        if self.metrics is not None and changed:
+            rz = self.engine.resizes[-1]
+            self.metrics.inc("dynmo_resizes_total", kind=rz.kind,
+                             policy="steal" if steal else reason,
+                             help="engine resizes by kind")
         if changed:
             rz = self.engine.resizes[-1]
             print(f"tick {tick:4d} {rz.kind.upper()} {rz.from_stages}->"
@@ -174,7 +193,14 @@ class ElasticServer:
         while tick < max_ticks and not sched.done:
             t0 = time.perf_counter()
             emitted = 0
+            sp_tick = (self.tracer.span("serve.tick", cat="serve",
+                                        tick=tick,
+                                        stages=self.state.stages)
+                       if self.tracer is not None else None)
             adm = sched.plan_admissions(tick)
+            if adm is not None and self.tracer is not None:
+                self.tracer.instant("serve.admit", cat="serve", tick=tick,
+                                    lanes=len(adm.full_len_lanes))
             if adm is not None:
                 ids, new_cache = self.engine.prefill(
                     self.state, {"tokens": jnp.asarray(adm.prefill_tokens)})
@@ -198,12 +224,25 @@ class ElasticServer:
                 self.state.cache = _permute_lanes(self.state.cache, perm,
                                                   m, B)
             wall = time.perf_counter() - t0
+            if sp_tick is not None:
+                sp_tick.end(tokens=emitted, queue=sched.queue_depth)
             tick_wall.append(wall)
             tick_tokens.append(emitted)
             token_lat.extend([wall] * emitted)
             stages_hist.append(self.state.stages)
             depth_hist.append(sched.queue_depth)
             occ_hist.append(sched.occupancy)
+            if self.metrics is not None:
+                self.metrics.inc("dynmo_serve_ticks_total",
+                                 help="decode ticks executed")
+                self.metrics.inc("dynmo_serve_tokens_total", emitted,
+                                 help="tokens emitted")
+                self.metrics.set("dynmo_queue_depth", sched.queue_depth,
+                                 help="waiting requests")
+                self.metrics.set("dynmo_occupancy", sched.occupancy,
+                                 help="lane occupancy fraction")
+                self.metrics.observe("dynmo_tick_seconds", wall,
+                                     help="serve tick wall seconds")
             # ---- safe point: the tick's flight is fully retired
             if resize_at and tick in resize_at:
                 self.resize(resize_at[tick], tick, "scripted")
@@ -234,7 +273,15 @@ class ElasticServer:
         wall_s = time.perf_counter() - t_run
         total_tokens = sum(len(r.tokens) for r in sched.completions)
         measured = None
-        if self.measure_stage_times:
+        src = None
+        if self.in_step_timing:
+            # live per-stage seconds from the in-step stamps accumulated
+            # over the trace's prefill/decode calls — no probe execution
+            ist = self.engine.in_step_stage_times(self.state)
+            if ist is not None:
+                measured = list(map(float, ist))
+                src = "in_step"
+        if measured is None and self.measure_stage_times:
             # per-stage prefill-shaped wall times via the engine's stage
             # probe (off the serving hot loop: one probe after the trace
             # drains, on whatever world the server ended up holding)
@@ -242,6 +289,7 @@ class ElasticServer:
                 (m, B, self.shapes.seq), np.int32)}
             measured = list(map(float, self.engine.measure_stage_times(
                 self.state, probe_batch)))
+            src = "probe"
         report = {
             "completions": [
                 {"rid": r.rid, "kind": r.kind, "arrival": r.arrival,
@@ -269,6 +317,7 @@ class ElasticServer:
             "latency_p50_s": _pct(token_lat, 50),
             "latency_p95_s": _pct(token_lat, 95),
             "measured_stage_times": measured,
+            "stage_time_source": src,
             # MoE capacity-overflow telemetry: mean drop fraction over every
             # prefill/decode call of the trace (None for non-MoE archs)
             "moe_dropped_mean": (float(np.mean([float(d)

@@ -27,9 +27,10 @@ from repro.api.cli import (SERVE_ALIASES, TRAIN_ALIASES, TRAIN_CLI_DEFAULTS,
 from repro.api.specs import SCHEMA_VERSION
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
-GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v3.json")
+GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v4.json")
 GOLDEN_V1 = os.path.join(GOLDEN_DIR, "runspec_default_v1.json")
 GOLDEN_V2 = os.path.join(GOLDEN_DIR, "runspec_default_v2.json")
+GOLDEN_V3 = os.path.join(GOLDEN_DIR, "runspec_default_v3.json")
 
 
 # ---------------------------------------------------------------------------
@@ -201,7 +202,7 @@ def test_golden_default_spec():
     fails you changed the spec schema: bump SCHEMA_VERSION if the change
     is breaking, add an upgrader for the old version, then regenerate the
     fixture with ``PYTHONPATH=src python -c "from repro.api import RunSpec;
-    RunSpec().save('tests/golden/runspec_default_v3.json')"`` (keep the
+    RunSpec().save('tests/golden/runspec_default_v4.json')"`` (keep the
     old-version goldens — they pin the upgraders' inputs forever)."""
     with open(GOLDEN) as f:
         golden = json.load(f)
@@ -243,6 +244,33 @@ def test_v2_config_loads_via_upgrader():
     up = RunSpec.from_dict(v2b)
     assert up.seed == 5 and up.cluster.job_manager == "file"
     assert up.to_dict()["schema_version"] == SCHEMA_VERSION
+
+
+def test_v3_config_loads_via_upgrader():
+    """A v3 config (the frozen v3 golden) still loads: the v3->v4 upgrader
+    stamps the observability defaults (obs.trace/trace_out/metrics_port/
+    metrics_out/in_step_timing) and the result equals the default v4
+    spec."""
+    with open(GOLDEN_V3) as f:
+        v3 = json.load(f)
+    assert v3["schema_version"] == 3
+    assert "obs" not in v3
+    spec = RunSpec.from_dict(v3)
+    assert spec == RunSpec()
+    assert spec.obs.trace is False and spec.obs.in_step_timing is False
+    assert spec.obs.metrics_port is None
+    # a populated v3 config keeps its values through the upgrade
+    v3b = dict(v3, steps=11,
+               controller=dict(v3["controller"], rebalance_every=2))
+    up = RunSpec.from_dict(v3b)
+    assert up.steps == 11 and up.controller.rebalance_every == 2
+    assert up.to_dict()["schema_version"] == SCHEMA_VERSION
+    # the new flags resolve through the dotted-override grammar
+    on = RunSpec.from_dict(v3b).override({"obs.trace": "true",
+                                         "obs.in_step_timing": "true",
+                                         "obs.metrics_port": "9109"})
+    assert on.obs.trace and on.obs.in_step_timing
+    assert on.obs.metrics_port == 9109
 
 
 def test_chaos_flags_resolve_faults_spec():
