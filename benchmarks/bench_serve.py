@@ -157,5 +157,125 @@ def main(quick: bool = False):
     return rows, spec
 
 
+# ---------------------------------------------------------------------------
+# Paged-KV headline: dense vs paged at the SAME KV byte budget
+# ---------------------------------------------------------------------------
+_CHILD_PAGED = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import copy
+import json
+import numpy as np
+from repro.api import Session
+from repro.launch.serve import serve_spec
+from repro.serve.requests import Request
+
+# one KV byte budget, two memory models.  Dense binds a full
+# prompt_len+gen cache line to every lane: 4 lanes x 16 tokens = 64 token
+# slots.  Paged gets a 16-page x 4-token pool — the SAME 64 token slots —
+# but serves an 8-lane batch shape, admitting as many concurrent requests
+# as actually-touched pages (short gens + shared prompt prefixes) fit.
+page, cache = 4, 16
+dense = serve_spec("smollm-360m", stages=4, micro=2, mb_global=2,
+                   prompt_len=8, gen=8, layers=%(layers)d,
+                   d_model=%(d_model)d, seed=0)
+paged = serve_spec("smollm-360m", stages=4, micro=2, mb_global=4,
+                   prompt_len=8, gen=8, layers=%(layers)d,
+                   d_model=%(d_model)d, seed=0, kv_page_size=page,
+                   kv_pool_pages=16, prefix_cache=True)
+rng = np.random.RandomState(0)
+shared = rng.randint(0, 512, 8).astype(np.int32)   # two full prompt pages
+trace = []
+for i in range(%(requests)d):
+    trace.append(Request(rid=i, arrival=i // 8, prompt=shared.copy(),
+                         gen=3 + i %% 2))
+
+def run(sp):
+    with Session(sp) as s:
+        return s.serve(trace=copy.deepcopy(trace))
+
+keep = ("completions", "total_tokens", "tokens_per_s", "peak_live_lanes",
+        "peak_live_pages", "kv_pages_total", "kv_page_size", "prefix_hits",
+        "cow_forks", "page_tile_live", "page_tile_total", "ticks")
+dn = run(dense)
+pg = run(paged)
+out = {"dense": {k: dn[k] for k in keep},
+       "paged": {k: pg[k] for k in keep},
+       "prompt_pages_requested": sum(len(r.prompt) // page for r in trace),
+       "spec": paged.to_dict()}
+print("BENCH_JSON " + json.dumps(out))
+"""
+
+
+def _run_paged_child(requests: int, layers: int, d_model: int) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD_PAGED % {
+            "requests": requests, "layers": layers, "d_model": d_model}],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ, "PYTHONPATH": SRC, "REPRO_TRAIN_DEVICES": "4"})
+    if proc.returncode != 0:
+        raise RuntimeError(f"paged bench child failed:\n"
+                           f"{proc.stdout}\n{proc.stderr[-3000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            return json.loads(line[len("BENCH_JSON "):])
+    raise RuntimeError(f"no BENCH_JSON in child output:\n{proc.stdout}")
+
+
+def run_paged(quick: bool = False):
+    out = _run_paged_child(requests=12 if quick else 16,
+                           layers=4 if quick else 8,
+                           d_model=64 if quick else 128)
+    dn, pg = out["dense"], out["paged"]
+    # tokens are identical request-for-request: the memory model (and the
+    # wider paged batch shape) must be invisible to every request
+    td = {c["rid"]: c["tokens"] for c in dn["completions"]}
+    tp = {c["rid"]: c["tokens"] for c in pg["completions"]}
+    if td != tp:
+        bad = [r for r in td if td[r] != tp.get(r)]
+        raise RuntimeError(f"paged/dense token mismatch on rids {bad}")
+    # THE headline: at the same KV byte budget, paging + prefix sharing
+    # must hold strictly more requests in flight than dense lanes can
+    if pg["peak_live_lanes"] <= dn["peak_live_lanes"]:
+        raise RuntimeError(
+            f"paged peak lanes {pg['peak_live_lanes']} not above dense "
+            f"{dn['peak_live_lanes']} at equal KV bytes")
+    hit_rate = out["prefix_hits_rate"] = (
+        pg["prefix_hits"] / max(1, out["prompt_pages_requested"]))
+    tile_frac = pg["page_tile_live"] / max(1, pg["page_tile_total"])
+    rows = [
+        ("paged_token_identity", 0.0, 1.0),
+        ("paged_kv_token_slots", 0.0,
+         float(pg["kv_pages_total"] * pg["kv_page_size"])),
+        ("paged_peak_lanes", 0.0, float(pg["peak_live_lanes"])),
+        ("dense_peak_lanes", 0.0, float(dn["peak_live_lanes"])),
+        ("paged_lane_gain", 0.0,
+         pg["peak_live_lanes"] / max(1, dn["peak_live_lanes"])),
+        ("paged_peak_live_pages", 0.0, float(pg["peak_live_pages"])),
+        ("paged_prefix_hits", 0.0, float(pg["prefix_hits"])),
+        ("paged_prefix_hit_rate", 0.0, hit_rate),
+        ("paged_cow_forks", 0.0, float(pg["cow_forks"])),
+        # count-gating: fraction of page-table tiles that cost MXU work
+        ("paged_tile_live_frac", 0.0, tile_frac),
+        ("paged_ticks", 0.0, float(pg["ticks"])),
+        ("dense_ticks", 0.0, float(dn["ticks"])),
+        ("paged_tok_s", 0.0, pg["tokens_per_s"]),
+        ("dense_tok_s", 0.0, dn["tokens_per_s"]),
+    ]
+    return rows, out["spec"]
+
+
+def main_paged(quick: bool = False):
+    rows, spec = run_paged(quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.3f}")
+    return rows, spec
+
+
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv)
+    if "--paged" in sys.argv:
+        main_paged(quick="--quick" in sys.argv)
+    else:
+        main(quick="--quick" in sys.argv)

@@ -35,6 +35,7 @@ def main() -> None:
         "roofline": bench_roofline.main,        # EXPERIMENTS.md §Roofline
         "elastic": bench_elastic.main,          # §3.4 live shrink (engine)
         "serve": bench_serve.main,              # elastic continuous batching
+        "paged": bench_serve.main_paged,        # §16 paged KV vs dense lanes
         "cluster": bench_cluster.main,          # multi-tenant pool (§14)
     }
     names = (args.only.split(",") if args.only else list(benches))

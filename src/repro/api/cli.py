@@ -254,6 +254,17 @@ SERVE_ALIASES: List[Alias] = _COMMON + [
     Alias("--cooldown", "serve.cooldown"),
     Alias("--latency-slo-s", "serve.latency_slo_s"),
     Alias("--max-ticks", "serve.max_ticks"),
+    Alias("--kv-page-size", "serve.kv_page_size",
+          help="tokens per KV block; >0 switches serving to the paged KV "
+               "subsystem (0 = dense contiguous lanes)"),
+    Alias("--kv-pool-pages", "serve.kv_pool_pages",
+          help="physical KV blocks in the pool (0 = dense-equivalent "
+               "auto-size)"),
+    Alias("--prefix-cache", "serve.prefix_cache", flag=True,
+          help="share full prompt pages across requests with a common "
+               "prefix (copy-on-write; requires --kv-page-size)"),
+    Alias("--temperature", "serve.temperature",
+          help="per-lane decode sampling temperature (0 = argmax)"),
 ]
 
 # the serve CLI's historical defaults where they differ from the spec's

@@ -1006,6 +1006,17 @@ class Session:
         shapes = PipelineShapes(spec.parallel.num_micro,
                                 spec.parallel.mb_global, s.prompt_len,
                                 cache_len=s.prompt_len + s.gen)
+        paged = None
+        if s.kv_page_size > 0:
+            from repro.serve.kv import PagedKVConfig
+            # kv_pool_pages=0 auto-sizes to the dense-equivalent footprint
+            # (every lane could hold a full cache line) — same bytes as
+            # dense, so paged-by-default changes layout, not capacity
+            lanes = spec.parallel.num_micro * spec.parallel.mb_global
+            pool = s.kv_pool_pages or lanes * (shapes.cache_len
+                                               // s.kv_page_size)
+            paged = PagedKVConfig(page_size=s.kv_page_size, pool_pages=pool,
+                                  prefix_cache=s.prefix_cache)
         if trace is None:
             trace = self.make_trace()
 
@@ -1063,7 +1074,8 @@ class Session:
                             .measure_stage_times,
                             initial_workers=granted,
                             in_step_timing=spec.obs.in_step_timing,
-                            tracer=tracer, metrics=self.metrics)
+                            tracer=tracer, metrics=self.metrics,
+                            paged=paged, temperature=s.temperature)
         self._server = srv
         root_span = (tracer.span("serve", cat="session",
                                  requests=len(trace))

@@ -30,7 +30,7 @@ from typing import Any, Dict, List, Optional
 from repro.configs.base import DTYPE_BYTES
 from repro.dynamics.config import DynamicsConfig
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 DYNAMISM_KINDS = ("none", "moe", "pruning", "freezing", "sparse_attention",
                   "early_exit", "mod")
@@ -349,6 +349,15 @@ class ServeSpec:
     cooldown: int = 4
     latency_slo_s: float = 0.0
     max_ticks: int = 100000
+    # ---- paged KV memory (schema v5; DESIGN.md §16) ----
+    kv_page_size: int = 0     # tokens per KV block; 0 = dense contiguous
+    #   lanes (the paged subsystem entirely off)
+    kv_pool_pages: int = 0    # physical blocks in the pool; 0 = auto-size
+    #   to the dense-equivalent footprint (lanes x pages-per-lane)
+    prefix_cache: bool = False   # refcounted copy-on-write sharing of full
+    #   prompt pages across requests with a common prefix
+    temperature: float = 0.0     # per-lane decode sampling; 0 = argmax
+    #   (bit-exact with every pre-v5 run)
 
     def __post_init__(self):
         for name in ("requests", "prompt_len", "gen", "min_stages",
@@ -360,7 +369,8 @@ class ServeSpec:
                    f"must be <= prompt_len ({self.prompt_len}), "
                    f"got {self.min_prompt}")
         for name in ("burst_period", "burst_len", "burst_rate", "lull_rate",
-                     "defrag_every", "queue_high", "patience", "cooldown"):
+                     "defrag_every", "queue_high", "patience", "cooldown",
+                     "kv_page_size", "kv_pool_pages"):
             v = getattr(self, name)
             _check(isinstance(v, int) and v >= 0, f"serve.{name}",
                    f"must be a non-negative int, got {v!r}")
@@ -368,6 +378,22 @@ class ServeSpec:
         _check_frac(self.occupancy_low, "serve.occupancy_low")
         _check(self.latency_slo_s >= 0, "serve.latency_slo_s",
                f"must be >= 0, got {self.latency_slo_s!r}")
+        _check(self.temperature >= 0, "serve.temperature",
+               f"must be >= 0, got {self.temperature!r}")
+        if self.kv_page_size > 0:
+            # the cache line (prompt_len + gen positions, what the session
+            # sizes cache_len to) must tile exactly into pages: a paged
+            # lane row then has the same logical length as the dense line,
+            # which is what keeps the attention reduction bit-exact
+            _check((self.prompt_len + self.gen) % self.kv_page_size == 0,
+                   "serve.kv_page_size",
+                   f"must divide prompt_len + gen "
+                   f"({self.prompt_len + self.gen}), got {self.kv_page_size}")
+        else:
+            _check(not self.prefix_cache, "serve.prefix_cache",
+                   "requires the paged KV subsystem (serve.kv_page_size > 0)")
+            _check(self.kv_pool_pages == 0, "serve.kv_pool_pages",
+                   "requires serve.kv_page_size > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -601,7 +627,23 @@ def _upgrade_v3(d: Dict[str, Any]) -> Dict[str, Any]:
     return d
 
 
-_UPGRADERS = {1: _upgrade_v1, 2: _upgrade_v2, 3: _upgrade_v3}
+def _upgrade_v4(d: Dict[str, Any]) -> Dict[str, Any]:
+    """v4 -> v5: the paged KV memory subsystem (DESIGN.md §16) — adds
+    ``serve.kv_page_size`` / ``serve.kv_pool_pages`` / ``serve.prefix_cache``
+    and per-lane ``serve.temperature``.  Defaults keep serving dense and
+    argmax, so a v4 run means exactly the same (bit-exact) v5 run."""
+    d["schema_version"] = 5
+    s = d.setdefault("serve", {})
+    if isinstance(s, dict):
+        s.setdefault("kv_page_size", 0)
+        s.setdefault("kv_pool_pages", 0)
+        s.setdefault("prefix_cache", False)
+        s.setdefault("temperature", 0.0)
+    return d
+
+
+_UPGRADERS = {1: _upgrade_v1, 2: _upgrade_v2, 3: _upgrade_v3,
+              4: _upgrade_v4}
 
 
 # ---------------------------------------------------------------------------

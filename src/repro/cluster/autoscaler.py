@@ -52,6 +52,10 @@ class AutoscalerConfig:
     #   not a raw tick wall).  0 disables: the latency signal is
     #   wall-clock and therefore breaks run-to-run determinism — leave
     #   off when comparing traces
+    page_high: float = 0.92      # paged-KV pool occupancy → grow pressure:
+    #   a nearly-full block pool is the memory analogue of a deep queue
+    #   (admission gates on free *pages*, so pool pressure backs requests
+    #   up even while lanes sit free).  Only fed in paged serving mode
 
 
 @dataclasses.dataclass
@@ -255,7 +259,8 @@ class Autoscaler:
 
     # -- serving load signals (one observation per scheduler tick) ---------
     def observe_load(self, step: int, stages: int, *, queue_depth: int,
-                     occupancy: float, latency_s: float = 0.0
+                     occupancy: float, latency_s: float = 0.0,
+                     page_occupancy: Optional[float] = None
                      ) -> ScaleDecision:
         """Queue-depth / latency / occupancy watermarks for the serving
         tier, sharing the training watermarks' hysteresis (``patience``
@@ -269,14 +274,22 @@ class Autoscaler:
         vacated most lanes, so fewer workers serve the same tokens with a
         shorter pipeline fill.  Signals are logical (queue/occupancy), so
         scaling is deterministic per trace unless the latency SLO is on.
+
+        ``page_occupancy`` (paged serving only, else None) adds page
+        *pressure*: a block pool past ``page_high`` gates admissions just
+        like exhausted lanes do, and also vetoes the drain shrink — lanes
+        may look idle while the pool is pinned by long prompts.
         """
         decision = ScaleDecision(step, _NONE, 0, "")
         if self._in_cooldown(step):
             return decision
-        pressured = queue_depth >= self.cfg.queue_high or (
+        paged_hot = (page_occupancy is not None
+                     and page_occupancy >= self.cfg.page_high)
+        pressured = queue_depth >= self.cfg.queue_high or paged_hot or (
             self.cfg.latency_slo_s > 0
             and latency_s > self.cfg.latency_slo_s)
-        draining = queue_depth == 0 and occupancy <= self.cfg.occupancy_low
+        draining = (queue_depth == 0 and occupancy <= self.cfg.occupancy_low
+                    and not paged_hot)
         self._pressure_streak = self._pressure_streak + 1 if pressured else 0
         self._drain_streak = self._drain_streak + 1 if draining else 0
         if (self._pressure_streak >= self.cfg.patience
@@ -288,10 +301,12 @@ class Autoscaler:
             urgent = (self.cfg.latency_slo_s > 0
                       and latency_s > self.cfg.latency_slo_s) or (
                           queue_depth >= 2 * self.cfg.queue_high)
+            pages = (f" pages={page_occupancy:.0%}"
+                     if page_occupancy is not None else "")
             decision = ScaleDecision(
                 step, "grow", 1,
                 f"load: queue={queue_depth} latency={latency_s * 1e3:.0f}ms "
-                f"at occupancy {occupancy:.0%}", urgent=urgent)
+                f"at occupancy {occupancy:.0%}{pages}", urgent=urgent)
         elif (self._drain_streak >= self.cfg.patience
                 and stages > self.cfg.min_stages):
             self._drain_streak = 0

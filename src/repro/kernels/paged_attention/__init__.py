@@ -1,0 +1,15 @@
+"""Paged decode attention: single-token attention over a block-paged KV
+pool, gathering K/V through a per-lane page table.
+
+``paged_attention`` (kernel_impl="pallas") is the count-gated Pallas kernel;
+``paged_attention_ref`` gathers pages and defers to the dense
+``decode_attention`` oracle — bit-identical to a contiguous cache by
+construction. ``paged_tile_work`` accounts kernel tiles actually computed.
+"""
+from repro.kernels.paged_attention.ops import (paged_attention,
+                                               paged_tile_work)
+from repro.kernels.paged_attention.ref import (gather_pages,
+                                               paged_attention_ref)
+
+__all__ = ["paged_attention", "paged_attention_ref", "gather_pages",
+           "paged_tile_work"]

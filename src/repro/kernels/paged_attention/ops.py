@@ -1,0 +1,40 @@
+"""Public entry points for paged decode attention.
+
+``paged_attention`` keeps the ``decode_attention`` calling convention
+(``q [b, 1, h, d]`` in, ``[b, 1, h, d]`` out) so `blocks._attn_fwd` can
+swap it in behind ``DistConfig.kernel_impl``; ``paged_tile_work`` is the
+host-side accounting of kernel tiles the count-gating actually runs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_fwd
+
+
+def paged_attention(q, kp, vp, page_table, cache_len, *,
+                    interpret: bool = False):
+    """Pallas paged decode attention with the dense-oracle contract.
+
+    q: ``[b, 1, h, d]``; kp/vp: ``[pool+1, page, n_kv, d]``; page_table:
+    ``[b, J]`` (-1 unmapped); cache_len: scalar or ``[b]``.
+    """
+    b = q.shape[0]
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    out = paged_attention_fwd(q[:, 0], kp, vp, page_table, cl,
+                              interpret=interpret)
+    return out[:, None]
+
+
+def paged_tile_work(page_table, cache_len, page_size: int):
+    """(live, total) kernel tiles for one decode call: a tile is live iff
+    its page starts before the lane's ``cache_len`` AND is mapped."""
+    pt = np.asarray(page_table)
+    jtot = pt.shape[-1]
+    pt2 = pt.reshape(-1, jtot)
+    cl = np.broadcast_to(np.asarray(cache_len).reshape(-1),
+                         (pt2.shape[0],))[:, None]
+    j = np.arange(jtot)[None, :]
+    live = (j * page_size < cl) & (pt2 >= 0)
+    return int(live.sum()), int(pt2.shape[0] * jtot)

@@ -1,0 +1,114 @@
+"""Pallas paged decode attention forward kernel.
+
+Grid ``(b, J)``: one program per (lane, logical page).  The page table and
+per-lane lengths ride as scalar prefetch so the K/V BlockSpec index maps can
+steer each program's DMA at the physical block the table names — unmapped
+pages are redirected to the trash block and, like pages wholly past
+``cache_len``, are count-gated with ``pl.when`` so they cost no MXU work
+(mirroring the grouped/pruned kernels' dead-tile gating).
+
+Softmax is accumulated online (flash-style running max / normaliser in VMEM
+scratch), finalised on the last page program of each lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, page: int, n_q: int, n_kv: int,
+            head_dim: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    clen = cl_ref[i]
+    live = (j * page < clen) & (pt_ref[i, j] >= 0)
+
+    @pl.when(live)
+    def _page():
+        q = q_ref[0].astype(jnp.float32)            # [n_q, hd]
+        k = k_ref[0].astype(jnp.float32)            # [page, n_kv, hd]
+        v = v_ref[0].astype(jnp.float32)
+        gsz = n_q // n_kv
+        # grouped q·kᵀ with the kv head as the batch dim (GQA without
+        # materialising repeated K)
+        q3 = q.reshape(n_kv, gsz, head_dim)
+        k3 = jnp.transpose(k, (1, 2, 0))            # [n_kv, hd, page]
+        s = jax.lax.dot_general(
+            q3, k3, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(n_q, page)
+        s = s / jnp.sqrt(jnp.float32(head_dim))
+        tpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (n_q, page), 1)
+        s = jnp.where(tpos < clen, s, NEG_INF)      # tail-page mask
+        m_prev = m_ref[...]                         # [n_q, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                      # [n_q, page]
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        p3 = p.reshape(n_kv, gsz, page)
+        v3 = jnp.transpose(v, (1, 0, 2))            # [n_kv, page, hd]
+        pv = jax.lax.dot_general(
+            p3, v3, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(n_q, head_dim)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...]
+                    / jnp.where(l > 0.0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_fwd(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                        page_table: jax.Array, cache_len: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    """q: [b, n_q, hd]; kp/vp: [pool+1, page, n_kv, hd] (last block trash);
+    page_table: [b, J] int32 (-1 unmapped); cache_len: [b] int32."""
+    b, n_q, head_dim = q.shape
+    _, page, n_kv, _ = kp.shape
+    jtot = page_table.shape[1]
+    trash = kp.shape[0] - 1
+    if n_q % n_kv:
+        raise ValueError(f"n_q={n_q} not a multiple of n_kv={n_kv}")
+
+    def kv_map(i, j, pt_ref, cl_ref):
+        blk = pt_ref[i, j]
+        return (jnp.where(blk >= 0, blk, trash), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, jtot),
+        in_specs=[
+            pl.BlockSpec((1, n_q, head_dim), lambda i, j, *_: (i, 0, 0)),
+            pl.BlockSpec((1, page, n_kv, head_dim), kv_map),
+            pl.BlockSpec((1, page, n_kv, head_dim), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, n_q, head_dim), lambda i, j, *_: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_q, head_dim), jnp.float32),
+            pltpu.VMEM((n_q, 1), jnp.float32),
+            pltpu.VMEM((n_q, 1), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, page=page, n_q=n_q, n_kv=n_kv,
+                             head_dim=head_dim)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_q, head_dim), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), cache_len.astype(jnp.int32), q, kp, vp)

@@ -1,0 +1,44 @@
+"""Reference paged decode attention: gather K/V blocks through the page
+table, then run the unmodified dense ``decode_attention`` oracle.
+
+Because the gathered row holds exactly the bytes a contiguous cache would
+hold at every position ``< cache_len`` (unmapped pages resolve to the trash
+block, which only ever backs positions ``>= cache_len``), this path is
+bit-identical to the dense cache — it IS the token-parity oracle for the
+paged subsystem, and the scan-free default (`kernel_impl != "pallas"`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(kp: jax.Array, vp: jax.Array,
+                 page_table: jax.Array) -> tuple:
+    """Materialise contiguous per-lane K/V rows from the block pool.
+
+    kp/vp: ``[pool+1, page, n_kv, head_dim]`` (last block is trash);
+    page_table: ``[b, J]`` int32, ``-1`` = unmapped (resolved to trash).
+    Returns two ``[b, J*page, n_kv, head_dim]`` arrays.
+    """
+    trash = kp.shape[0] - 1
+    blk = jnp.where(page_table >= 0, page_table, trash)
+    k = kp[blk]                                   # [b, J, page, kv, hd]
+    v = vp[blk]
+    b, j, page, kv, hd = k.shape
+    return (k.reshape(b, j * page, kv, hd), v.reshape(b, j * page, kv, hd))
+
+
+def paged_attention_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                        page_table: jax.Array,
+                        cache_len: jax.Array) -> jax.Array:
+    """q: ``[b, 1, h, d]``; returns ``[b, 1, h, d]`` — same contract as
+    ``decode_attention(q, k_cache, v_cache, cache_len)``.
+
+    Every page covering a position ``< cache_len`` must be mapped; unmapped
+    pages may only back positions at or past ``cache_len`` (they gather the
+    trash block, which the length mask then excludes).
+    """
+    from repro.models.layers import decode_attention  # lazy: no import cycle
+    k, v = gather_pages(kp, vp, page_table)
+    return decode_attention(q, k, v, cache_len)

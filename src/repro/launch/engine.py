@@ -42,6 +42,34 @@ from repro.pipeline.pipeline import (PipelineShapes, build_decode_fn,
 from repro.runtime.fault_tolerance import WorkerPool
 
 
+@jax.jit
+def _pack_pages(pool, scratch_k, scratch_v, table, mask):
+    """Scatter prompt pages from a dense prefill scratch into the pool.
+
+    pool: {kp, vp: [S, L, pool+1, page, kv, hd]}; scratch_k/v:
+    [S, L, m, B, cap, kv, hd] with cap == J * page; table/mask: [m, B, J].
+    Unmasked or unmapped (-1) entries are steered at the trash block.
+    """
+    kp, vp = pool["kp"], pool["vp"]
+    page = kp.shape[3]
+    trash = kp.shape[2] - 1
+    m, b, j = table.shape
+    blk = jnp.where(mask & (table >= 0), table, trash).reshape(m * b * j)
+
+    def pages(sc):
+        s_, l_, m_, b_, cap, kv, hd = sc.shape
+        return sc.reshape(s_, l_, m_ * b_ * (cap // page), page, kv, hd)
+
+    return {"kp": kp.at[:, :, blk].set(pages(scratch_k).astype(kp.dtype)),
+            "vp": vp.at[:, :, blk].set(pages(scratch_v).astype(vp.dtype))}
+
+
+@jax.jit
+def _copy_block(pool, src, dst):
+    """Duplicate one physical block (CoW fork) in every stage-slot pool."""
+    return {k: v.at[:, :, dst].set(v[:, :, src]) for k, v in pool.items()}
+
+
 def make_train_step(cfg: ModelConfig, dcfg: DistConfig,
                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
                     opt_cfg: Optional[OptConfig] = None, stage_timer=None):
@@ -95,7 +123,7 @@ class EngineWorld:
     step: Any                  # jitted, donating (params, opt_state)
     eval_loss: Any = None      # lazily-jitted loss-only fn (no update)
     prefill: Any = None        # lazily-jitted serving prefill
-    decode: Any = None         # lazily-jitted serving decode (donates cache)
+    decode: Any = None         # {live_micros: jitted decode} (donates cache)
     stage_probe: Any = None    # lazily-jitted single-stage forward (timers)
     timer: Any = None          # obs.timing.StageTimer (in-step timing on)
     stepped: bool = False      # first step() on this world pays compile
@@ -142,12 +170,18 @@ class ElasticEngine:
                  devices: Optional[Sequence[Any]] = None,
                  pool: Optional[WorkerPool] = None,
                  job_manager: Optional[JobManagerClient] = None,
-                 in_step_timing: bool = False):
+                 in_step_timing: bool = False,
+                 paged=None, temperature: float = 0.0):
         self.cfg, self.base_dcfg, self.dyncfg = cfg, dcfg, dyncfg
         self.shapes = shapes
         self.opt_cfg = opt_cfg
         self.data = data
         self.in_step_timing = in_step_timing
+        # serving options: ``paged`` is a PagedKVConfig (block-paged KV pool
+        # instead of per-lane contiguous lines); ``temperature`` > 0 builds
+        # sampling decode variants (0 keeps the argmax graph bit-exact)
+        self.paged = paged
+        self.temperature = float(temperature)
         self.last_step_compiled = False
         self.last_moe_drop = None   # serve telemetry (see _note_moe_drop)
         self.devices = (list(devices) if devices is not None
@@ -363,8 +397,15 @@ class ElasticEngine:
         cache = None
         if with_cache:
             assert self.shapes.cache_len > 0, "shapes.cache_len required"
-            cache = M.init_cache(self.cfg, world.dcfg, self.shapes.num_micro,
-                                 self.shapes.mb_global, self.shapes.cache_len)
+            if self.paged is not None:
+                cache = M.init_paged_cache(self.cfg, world.dcfg,
+                                           self.paged.pool_pages,
+                                           self.paged.page_size)
+            else:
+                cache = M.init_cache(self.cfg, world.dcfg,
+                                     self.shapes.num_micro,
+                                     self.shapes.mb_global,
+                                     self.shapes.cache_len)
         params, opt_state, dyn, assignment, cache = self._place(
             world, params, opt_state, dyn, assignment, cache)
         return EngineState(params, opt_state, dyn, assignment, lps, stages,
@@ -403,45 +444,101 @@ class ElasticEngine:
         return loss
 
     # -- serving -----------------------------------------------------------
-    def serve_fns(self, stages: int):
+    def serve_fns(self, stages: int, live_micros: Optional[int] = None):
         """(prefill, decode) for the given stage count, built lazily on the
         world next to its train step — the elastic server's resize path gets
         compiled serving fns per world exactly like the trainer does.
-        ``decode`` donates the cache argument (arg 3)."""
+        ``decode`` donates the cache argument (arg 3).
+
+        Decode variants are cached per live microbatch count: a variant
+        compiled for ``live_micros < num_micro`` runs ``live + S - 1`` ticks
+        instead of ``num_micro + S - 1``, so all-empty trailing microbatch
+        rows cost nothing (inputs keep their full shapes)."""
         w = self.world(stages)
+        mv = self.shapes.num_micro if live_micros is None else live_micros
         if w.prefill is None:
             w.prefill = jax.jit(build_prefill_fn(
                 self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes,
                 stage_timer=w.timer))
-            w.decode = jax.jit(build_decode_fn(
+            w.decode = {}
+        if mv not in w.decode:
+            w.decode[mv] = jax.jit(build_decode_fn(
                 self.cfg, w.dcfg, self.dyncfg, w.mesh, self.shapes,
-                stage_timer=w.timer),
+                stage_timer=w.timer, paged=self.paged is not None,
+                temperature=self.temperature, num_micro=mv),
                 donate_argnums=(3,))
-        return w.prefill, w.decode
+        return w.prefill, w.decode[mv]
 
-    def prefill(self, state: EngineState, batch):
+    def prefill(self, state: EngineState, batch, cache=None):
         """Run prefill in the state's world; returns (last_ids, new_cache).
         The caller owns cache merging (continuous batching overwrites only
-        admitted lanes).  ``self.last_moe_drop`` holds the call's mean MoE
-        capacity-drop fraction (device scalar; None for non-MoE archs)."""
+        admitted lanes).  ``cache`` overrides ``state.cache`` as the target
+        — the paged server prefills into a disposable dense scratch, then
+        packs the admitted lanes' pages into the pool.
+        ``self.last_moe_drop`` holds the call's mean MoE capacity-drop
+        fraction (device scalar; None for non-MoE archs)."""
         pf, _ = self.serve_fns(state.stages)
+        target = state.cache if cache is None else cache
         with self.world(state.stages).mesh:
-            ids, cache, drop = pf(state.params, state.assignment, state.dyn,
-                                  state.cache, batch)
+            ids, new_cache, drop = pf(state.params, state.assignment,
+                                      state.dyn, target, batch)
         self._note_moe_drop(drop)
-        return ids, cache
+        return ids, new_cache
 
-    def decode(self, state: EngineState, tokens, pos):
+    def decode(self, state: EngineState, tokens, pos, *, page_table=None,
+               seeds=None, live_micros: Optional[int] = None):
         """One decode step in the state's world; replaces ``state.cache``
         (the jitted fn donates the old buffer) and returns (ids, logprobs).
+        ``page_table`` [m, B, J] int32 is required iff the engine is paged;
+        ``seeds`` [m, B] int32 iff temperature > 0; ``live_micros`` selects
+        the per-micro-count decode variant.
         ``self.last_moe_drop`` as in :meth:`prefill`."""
-        _, dec = self.serve_fns(state.stages)
+        _, dec = self.serve_fns(state.stages, live_micros)
+        args = [state.params, state.assignment, state.dyn, state.cache,
+                tokens, pos]
+        if self.paged is not None:
+            assert page_table is not None, "paged decode needs a page table"
+            args.append(jnp.asarray(page_table, jnp.int32))
+        if self.temperature > 0.0:
+            assert seeds is not None, "sampling decode needs per-lane seeds"
+            args.append(jnp.asarray(seeds, jnp.int32))
         with self.world(state.stages).mesh:
-            ids, lp, cache, drop = dec(state.params, state.assignment,
-                                       state.dyn, state.cache, tokens, pos)
+            ids, lp, cache, drop = dec(*args)
         state.cache = cache
         self._note_moe_drop(drop)
         return ids, lp
+
+    # -- paged-KV device helpers ------------------------------------------
+    def make_dense_scratch(self, stages: int):
+        """A dense, stage-sharded decode cache for the paged prefill path.
+        Its contents are disposable: prefill writes whole lanes, pack_pages
+        copies the admitted lanes' pages out, nothing else reads it."""
+        world = self.world(stages)
+        cache = M.init_cache(self.cfg, world.dcfg, self.shapes.num_micro,
+                             self.shapes.mb_global, self.shapes.cache_len)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = NamedSharding(world.mesh, P("model"))
+        return jax.tree.map(lambda a: jax.device_put(a, sh), cache)
+
+    def pack_pages(self, state: EngineState, scratch, table, mask):
+        """Scatter prompt pages from the dense prefill scratch into the
+        block pool.  ``table``/``mask``: [m, B, J] — a page is copied iff
+        masked and mapped; everything else is steered at the trash block.
+        Duplicate targets (prefix-shared pages admitted together) carry
+        bit-identical bytes, so scatter order cannot matter."""
+        with self.world(state.stages).mesh:
+            state.cache = _pack_pages(
+                state.cache, scratch["k"], scratch["v"],
+                jnp.asarray(table, jnp.int32), jnp.asarray(mask, bool))
+        return state.cache
+
+    def copy_block(self, state: EngineState, src: int, dst: int):
+        """Copy-on-write fork: duplicate one physical block across every
+        stage-slot pool."""
+        with self.world(state.stages).mesh:
+            state.cache = _copy_block(state.cache, jnp.int32(src),
+                                      jnp.int32(dst))
+        return state.cache
 
     def _note_moe_drop(self, drop):
         """Normalize a serve call's summed MoE drop signal to a mean

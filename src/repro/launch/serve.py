@@ -136,7 +136,10 @@ def serve_spec(arch: str, *, stages: int = 4, micro: int = 2,
                latency_slo_s: float = 0.0,
                kernel_impl: str = "scan",
                measure_stage_times: bool = False,
-               max_ticks: int = 100000) -> RunSpec:
+               max_ticks: int = 100000,
+               kv_page_size: int = 0, kv_pool_pages: int = 0,
+               prefix_cache: bool = False,
+               temperature: float = 0.0) -> RunSpec:
     """The ``RunSpec`` equivalent of the legacy ``run_elastic_serving``
     kwargs — the single place the old vocabulary maps onto the schema."""
     return RunSpec(
@@ -160,7 +163,9 @@ def serve_spec(arch: str, *, stages: int = 4, micro: int = 2,
                         queue_high=queue_high,
                         occupancy_low=occupancy_low, patience=patience,
                         cooldown=cooldown, latency_slo_s=latency_slo_s,
-                        max_ticks=max_ticks),
+                        max_ticks=max_ticks, kv_page_size=kv_page_size,
+                        kv_pool_pages=kv_pool_pages,
+                        prefix_cache=prefix_cache, temperature=temperature),
         seed=seed)
 
 

@@ -202,6 +202,29 @@ def slot_cache_spec(cfg: ModelConfig, mb: int, cache_len: int,
     return spec
 
 
+def paged_slot_cache_spec(cfg: ModelConfig, pool_pages: int, page_size: int,
+                          dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Per-slot block-paged decode cache: one physical K/V block pool shared
+    by every lane of the slot, indexed through per-lane page tables.
+
+    Layout ``[pool_pages + 1, page_size, n_kv, head_dim]`` — the final block
+    is the trash block absorbing count-gated writes (invalid micro ticks,
+    unmapped lanes).  Only attention-pure decoder archs page their cache:
+    recurrent state (mamba/xlstm) is O(1) per lane and sliding-window caches
+    are already rings.
+    """
+    m = _dims(cfg)
+    types = set(block_type_set(cfg))
+    if not types <= {BLOCK_DENSE, BLOCK_MOE}:
+        raise ValueError(
+            f"paged KV requires an attention-only arch, got types {types}")
+    if cfg.sliding_window:
+        raise ValueError("paged KV does not support sliding-window caches")
+    nkv, hd = m["nkv"], m["hd"]
+    return dict(kp=_sds([pool_pages + 1, page_size, nkv, hd], dtype),
+                vp=_sds([pool_pages + 1, page_size, nkv, hd], dtype))
+
+
 def stats_spec(cfg: ModelConfig) -> Dict[str, Any]:
     E = max(1, cfg.num_experts)
     return dict(expert_load=_sds([E], jnp.float32),
@@ -330,7 +353,40 @@ def _attn_fwd(x, wq, wk, wv, wo, *, cfg, mode, cache, pos,
     v = v.reshape(b, xkv.shape[1], nkv, hd)
 
     new_cache = cache
-    if mode == "decode":
+    if mode == "decode" and cache is not None and "kp" in cache:
+        # block-paged cache: one physical pool per slot, per-lane page
+        # tables.  Write the new K/V through the table (gated writes land in
+        # the trash block), then attend by gathering blocks.
+        kp, vp = cache["kp"], cache["vp"]
+        pt = cache["pt"]                      # [b, J] int32, -1 = unmapped
+        wok = cache["wok"]                    # scalar: tick carries live data
+        page = kp.shape[1]
+        trash = kp.shape[0] - 1
+        cap = pt.shape[1] * page
+        pvec = jnp.broadcast_to(jnp.reshape(pos, (-1,)), (b,))
+        if rope:
+            q = apply_rope(q, pvec[:, None], cfg.rope_theta)
+            k = apply_rope(k, pvec[:, None], cfg.rope_theta)
+        pw = jnp.minimum(pvec, cap - 1)
+        lanes = jnp.arange(b)
+        blk = pt[lanes, pw // page]
+        ok = (wok > 0) & (blk >= 0)
+        blk_eff = jnp.where(ok, blk, trash)
+        off = pw % page
+        kp = kp.at[blk_eff, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[blk_eff, off].set(v[:, 0].astype(vp.dtype))
+        clen = jnp.minimum(pvec + 1, cap)
+        if kernel_impl == "pallas":
+            from repro.kernels.paged_attention import paged_attention
+            interpret = jax.default_backend() != "tpu"
+            out = paged_attention(q, kp, vp, pt, clen, interpret=interpret)
+        else:
+            from repro.kernels.paged_attention import paged_attention_ref
+            out = paged_attention_ref(q, kp, vp, pt, clen)
+        new_cache = dict(cache)
+        new_cache["kp"] = kp
+        new_cache["vp"] = vp
+    elif mode == "decode":
         kc, vc = cache[cache_keys[0]], cache[cache_keys[1]]
         cap = kc.shape[1]
         if jnp.ndim(pos) == 0:

@@ -178,6 +178,28 @@ def init_cache(cfg: ModelConfig, dcfg: DistConfig, num_micro: int, mb: int,
                         cache_spec(cfg, dcfg, num_micro, mb, cache_len))
 
 
+def paged_cache_spec(cfg: ModelConfig, dcfg: DistConfig, pool_pages: int,
+                     page_size: int) -> Dict[str, Any]:
+    """Stacked block-paged decode cache: [S, L_max, pool+1, page, kv, hd].
+
+    Unlike the dense cache there is NO per-microbatch axis — all m*B lanes
+    of a stage-slot share one physical pool, indexed through page tables
+    that live host-side and ride into decode as an input.  Leading
+    [S, L_max] means the pool re-splits across elastic resizes through the
+    same stage-tree machinery as the dense cache.
+    """
+    S, L_max = dcfg.num_stages, dcfg.slots_for(cfg)
+    slot = B.paged_slot_cache_spec(cfg, pool_pages, page_size)
+    return {k: jax.ShapeDtypeStruct((S, L_max) + v.shape, v.dtype)
+            for k, v in slot.items()}
+
+
+def init_paged_cache(cfg: ModelConfig, dcfg: DistConfig, pool_pages: int,
+                     page_size: int) -> Dict[str, jax.Array]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_spec(cfg, dcfg, pool_pages, page_size))
+
+
 # ---------------------------------------------------------------------------
 # Embedding / head
 # ---------------------------------------------------------------------------

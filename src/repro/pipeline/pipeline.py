@@ -324,8 +324,11 @@ def build_loss_fn(cfg: ModelConfig, dcfg: DistConfig, dyncfg: DynamicsConfig,
 # ---------------------------------------------------------------------------
 def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
                     dyncfg: DynamicsConfig, mesh, shapes: PipelineShapes,
-                    stage_timer=None):
-    """Returns decode_fn(params, assignment, dyn, cache, tokens, pos)
+                    stage_timer=None, *, paged: bool = False,
+                    temperature: float = 0.0,
+                    num_micro: Optional[int] = None):
+    """Returns decode_fn(params, assignment, dyn, cache, tokens, pos[,
+    page_table][, seeds])
     -> (next_ids [m, B] i32, logprobs [m, B] f32, new_cache,
     moe_drop_sum f32 — MoE capacity-drop fractions summed over
     (moe slot, microbatch) passes; 0 for non-MoE archs).
@@ -335,14 +338,40 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
     absolute positions (continuous batching: each request decodes at its
     own position; cache writes and attention masks are per-lane).
     cache: stacked {field: [S, L_max, m, B, ...]}.
+
+    ``paged``: the cache is the block-paged pool {kp, vp: [S, L_max,
+    pool+1, page, kv, hd]} (no micro axis — all lanes share it) and the fn
+    takes ``page_table`` [m, B, J] int32 (-1 = unmapped) as an extra arg;
+    pool writes on invalid ticks are steered into the trash block instead
+    of being masked out after the fact.
+
+    ``temperature``: > 0 adds a ``seeds`` [m, B] int32 arg and samples the
+    emitted token from softmax(logits / temperature) with a per-lane key;
+    0 keeps the exact argmax graph (bit-identical to before).
+
+    ``num_micro``: compile-time live microbatch count (defaults to
+    shapes.num_micro).  Inputs/outputs keep their full [num_micro_full, B]
+    shapes, but the tick loop runs only ``num_micro + S - 1`` ticks so
+    all-empty trailing microbatch rows cost nothing.
     """
     S = dcfg.num_stages
     dt = jnp.bfloat16 if dcfg.param_dtype == "bfloat16" else jnp.float32
+    m_live = shapes.num_micro if num_micro is None else num_micro
+    if not (1 <= m_live <= shapes.num_micro):
+        raise ValueError(f"num_micro={m_live} outside [1, "
+                         f"{shapes.num_micro}]")
 
     pin = _make_pin(mesh, dcfg)
     stamp = _make_stamp_or_none(stage_timer)
 
-    def pipe(params, assignment, dyn, cache, tokens, pos):
+    def pipe(params, assignment, dyn, cache, tokens, pos, *extra):
+        ei = 0
+        if paged:
+            page_table = extra[ei]
+            ei += 1
+        if temperature > 0.0:
+            seeds = extra[ei]
+            ei += 1
         stages = _stage_slice(params["stages"])
         tags = assignment["tags"][0]
         dyn_s = _stage_slice(dyn)
@@ -350,17 +379,21 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
         shared = params["shared"]
         idx = jax.lax.axis_index("model")
         n = mesh.shape["model"]      # static axis extent (version-portable)
-        m = shapes.num_micro
+        m = m_live
         T = m + S - 1
         per_lane = jnp.ndim(pos) == 2           # [m, B] positions
         if per_lane and cfg.is_encdec:
             raise NotImplementedError(
                 "per-lane decode positions need a per-lane dec_pos gather; "
                 "encoder-decoder serving uses the scalar-pos path")
+        if paged and not per_lane:
+            raise NotImplementedError(
+                "paged decode requires per-lane positions")
 
         buf = _init_carry(cfg, dyncfg, shapes, dt, decode=True)
-        ids_out = jnp.zeros((m, shapes.mb_global), jnp.int32)
-        lp_out = jnp.zeros((m, shapes.mb_global), jnp.float32)
+        ids_out = jnp.zeros((shapes.num_micro, shapes.mb_global), jnp.int32)
+        lp_out = jnp.zeros((shapes.num_micro, shapes.mb_global),
+                           jnp.float32)
         drop_out = jnp.float32(0.0)   # MoE capacity-drop fraction, summed
         #   over (moe slot, microbatch) passes — host side divides by the
         #   pass count; zero for non-MoE archs
@@ -385,7 +418,20 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
                 lambda _t: jax.tree.map(jnp.zeros_like, buf), t)
             carry = jax.tree.map(
                 lambda a, b: jnp.where(idx == 0, a, b), fresh, buf)
-            cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
+            if paged:
+                # pool leaves have no micro axis; thread the tick's page
+                # table + write-ok flag in as cache entries so they ride
+                # the per-slot gather / masked scan like any other leaf
+                pt_mb = jax.lax.dynamic_index_in_dim(
+                    page_table, mi, 0, False)          # [B, J]
+                L_m = tags.shape[0]
+                cache_mb = dict(cache_s)
+                cache_mb["pt"] = jnp.broadcast_to(
+                    pt_mb[None], (L_m,) + pt_mb.shape)
+                cache_mb["wok"] = jnp.broadcast_to(
+                    mvalid.astype(jnp.int32), (L_m,))
+            else:
+                cache_mb = jax.tree.map(lambda a: a[:, mi], cache_s)
             pos_mb = (jax.lax.dynamic_index_in_dim(pos, mi, 0, False)
                       if per_lane else pos)
             if stamp is not None:
@@ -397,10 +443,16 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
                 carry = {**carry, "x": stamp(carry["x"], idx, jnp.int32(1))}
             drop_out = drop_out + (jnp.sum(st["moe_dropped"])
                                    * mvalid.astype(jnp.float32))
-            cache_s = jax.tree.map(
-                lambda full, nc, old: jax.lax.dynamic_update_index_in_dim(
-                    full, jnp.where(mvalid, nc, old), mi, 1),
-                cache_s, new_cache_mb, cache_mb)
+            if paged:
+                # invalid-tick writes already landed in the trash block
+                # (wok gating), so the new pool is taken as-is
+                cache_s = {f: new_cache_mb[f] for f in cache_s}
+            else:
+                cache_s = jax.tree.map(
+                    lambda full, nc, old:
+                    jax.lax.dynamic_update_index_in_dim(
+                        full, jnp.where(mvalid, nc, old), mi, 1),
+                    cache_s, new_cache_mb, cache_mb)
             # emit at last stage only (real branch; head matmul skipped
             # elsewhere)
             li = jnp.clip(t - (n - 1), 0, m - 1)
@@ -408,7 +460,18 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
 
             def do_head(h):
                 logits = M.lm_logits(params, cfg, h)
-                nid_ = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if temperature > 0.0:
+                    # per-lane sampling: each lane folds its own seed into
+                    # a key, so lanes are independent and replayable
+                    sd = jax.lax.dynamic_index_in_dim(seeds, li, 0, False)
+
+                    def samp(s_, lg):
+                        return jax.random.categorical(
+                            jax.random.PRNGKey(s_),
+                            lg / jnp.float32(temperature))
+                    nid_ = jax.vmap(samp)(sd, logits).astype(jnp.int32)
+                else:
+                    nid_ = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 lp_ = jax.nn.log_softmax(logits, axis=-1)
                 return nid_, jnp.take_along_axis(lp_, nid_[:, None],
                                                  -1)[:, 0]
@@ -446,11 +509,12 @@ def build_decode_fn(cfg: ModelConfig, dcfg: DistConfig,
         new_cache = jax.tree.map(lambda a: a[None], cache_s)
         return ids_out, lp_out, new_cache, drop_out
 
+    n_extra = int(paged) + int(temperature > 0.0)
     in_specs = (
         {"embed": P(), "final_norm": P(), "shared": P(),
          "stages": P("model"),
          **({"head": P()} if not cfg.tie_embeddings else {})},
-        P("model"), P("model"), P("model"), P(), P())
+        P("model"), P("model"), P("model"), P(), P()) + (P(),) * n_extra
     return _shard_map(
         pipe, mesh=mesh, in_specs=in_specs,
         out_specs=(P(), P(), P("model"), P()), axis_names={"model"})

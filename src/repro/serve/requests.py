@@ -65,6 +65,12 @@ class RequestQueue:
     def pop(self) -> Optional[Request]:
         return self.pending.popleft() if self.pending else None
 
+    def peek(self) -> Optional[Request]:
+        """Head of the pending queue without popping — page-gated admission
+        checks the head's footprint and blocks head-of-line (FIFO stays
+        deterministic) rather than admitting around it."""
+        return self.pending[0] if self.pending else None
+
     def push_front(self, r: Request) -> None:
         """Requeue an evicted in-flight request ahead of ordinary arrivals —
         it already waited its turn once."""

@@ -46,11 +46,15 @@ from repro.serve.slots import SlotManager
 class AdmissionPlan:
     """Lanes admitted this tick; ``prefill_tokens`` is the full-shape token
     batch (admitted lanes hold their right-padded prompts, the rest zeros)
-    and ``admit_mask`` selects the lanes whose KV lines the merge takes."""
+    and ``admit_mask`` selects the lanes whose KV lines the merge takes.
+    Paged mode adds ``page_table``/``pack_mask`` [m, B, J]: where to scatter
+    the admitted lanes' prompt pages out of the prefill scratch."""
     lanes: List[Tuple[int, Request]]
     prefill_tokens: np.ndarray          # [m, B, prompt_len] int32
     admit_mask: np.ndarray              # [m, B] bool
     full_len_lanes: List[int]           # lanes taking token 1 from prefill
+    page_table: Optional[np.ndarray] = None   # [m, B, J] int32, -1 unmapped
+    pack_mask: Optional[np.ndarray] = None    # [m, B, J] bool
 
 
 @dataclasses.dataclass
@@ -59,19 +63,36 @@ class DecodePlan:
     pos: np.ndarray                     # [m, B] int32 per-lane positions
     active: np.ndarray                  # [m, B] bool
     lanes: List[int]                    # flat indices of live lanes
+    page_table: Optional[np.ndarray] = None   # [m, B, J] int32, -1 unmapped
+    copies: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    seeds: Optional[np.ndarray] = None  # [m, B] int32 per-lane sample seeds
 
 
 class Scheduler:
     def __init__(self, num_micro: int, mb: int, prompt_len: int,
                  cache_len: int, queue: RequestQueue, *,
-                 eos_id: Optional[int] = None, defrag_every: int = 0):
+                 eos_id: Optional[int] = None, defrag_every: int = 0,
+                 allocator=None, sample_seed: Optional[int] = None):
         assert cache_len >= prompt_len
         self.prompt_len = prompt_len
         self.cache_len = cache_len
         self.queue = queue
         self.eos_id = eos_id
         self.defrag_every = defrag_every
-        self.slots = SlotManager(num_micro, mb)
+        # paged KV: admission gates on free *pages* (the real memory), and
+        # lanes only carry page-table rows — freeing a lane releases its
+        # pages through the SlotManager shim
+        self.allocator = allocator
+        if allocator is not None:
+            if cache_len % allocator.page_size:
+                raise ValueError("cache_len must be a multiple of the KV "
+                                 "page size (paged rows == dense rows)")
+            self.n_table_pages = cache_len // allocator.page_size
+        # per-lane sampling (temperature > 0): seed is a deterministic
+        # function of (base seed, rid, position) so requeued lanes replay
+        # and resume identically
+        self.sample_seed = sample_seed
+        self.slots = SlotManager(num_micro, mb, allocator=allocator)
         n = self.slots.n_lanes
         self.cur_tok = np.zeros(n, np.int32)
         self.pos = np.zeros(n, np.int32)
@@ -96,6 +117,13 @@ class Scheduler:
         return self.slots.num_active / self.slots.n_lanes
 
     @property
+    def page_occupancy(self) -> Optional[float]:
+        """Fraction of pool pages live, or None in dense mode — THE memory
+        signal: lane occupancy says how many requests run, page occupancy
+        says whether another one fits."""
+        return None if self.allocator is None else self.allocator.occupancy
+
+    @property
     def done(self) -> bool:
         return self.queue.exhausted and self.slots.num_active == 0
 
@@ -110,6 +138,16 @@ class Scheduler:
         lanes: List[Tuple[int, Request]] = []
         full: List[int] = []
         while self.queue.pending and self.slots.num_free > 0:
+            if self.allocator is not None:
+                # gate on free PAGES, not free lanes: the head request's
+                # whole lifetime footprint (after prefix-cache hits) must
+                # fit now — no mid-flight allocation, no deadlock.  A head
+                # that doesn't fit blocks the queue (FIFO determinism).
+                h = self.queue.peek()
+                hp = min(h.plen, self.prompt_len)
+                hg = min(h.gen, self.cache_len - h.plen + 1)
+                if not self.allocator.can_admit(h.prompt[:hp], hg):
+                    break
             r = self.queue.pop()
             lane = self.slots.alloc(r.rid)
             # admission owns the runtime fields: serving the same Request
@@ -132,6 +170,15 @@ class Scheduler:
             self.gen_budget[lane] = min(r.gen,
                                         self.cache_len - r.plen + 1)
             self.gen_done[lane] = len(r.carried)
+            if self.allocator is not None:
+                self.allocator.admit(r.rid, r.prompt[:pl],
+                                     int(self.gen_budget[lane]))
+                # if the bootstrap write position plen-1 landed in a shared
+                # full prompt page, fork it now — the gate reserved the
+                # block, and pack fills it from this lane's own scratch
+                # (so no device copy is needed for an admission-time fork)
+                self.allocator.ensure_private(
+                    r.rid, (pl - 1) // self.allocator.page_size)
             if r.carried:
                 # requeued lane: rebuild the KV line with the SAME ops
                 # that originally produced it — the prefill covers the
@@ -168,7 +215,28 @@ class Scheduler:
                 else:
                     self.cur_tok[lane] = int(r.prompt[r.plen - 1])
             lanes.append((lane, r))
-        return AdmissionPlan(lanes, toks, mask, full)
+        if not lanes:
+            return None                 # page gate blocked the whole batch
+        ptab = pmask = None
+        if self.allocator is not None:
+            ptab, pmask = self._page_table_for(lanes)
+        return AdmissionPlan(lanes, toks, mask, full, ptab, pmask)
+
+    def _page_table_for(self, lanes) -> Tuple[np.ndarray, np.ndarray]:
+        """[m, B, J] device page table + prompt-page pack mask for the given
+        (lane, request) pairs; other rows stay unmapped (-1)."""
+        m, B = self.slots.num_micro, self.slots.mb
+        J = self.n_table_pages
+        ptab = np.full((m, B, J), -1, np.int32)
+        pmask = np.zeros((m, B, J), bool)
+        ps = self.allocator.page_size
+        for lane, r in lanes:
+            mi, bi = self.slots.unravel(lane)
+            pgs = self.allocator.pages_of(r.rid)
+            ptab[mi, bi, :len(pgs)] = pgs
+            pl = min(r.plen, self.prompt_len)
+            pmask[mi, bi, :-(-pl // ps)] = True
+        return ptab, pmask
 
     def note_prefill(self, plan: AdmissionPlan, prefill_ids: np.ndarray,
                      tick: int) -> List[Request]:
@@ -187,8 +255,31 @@ class Scheduler:
             return None
         m, B = self.slots.num_micro, self.slots.mb
         active = (self.slots.owner >= 0).reshape(m, B)
+        ptab, copies = None, []
+        if self.allocator is not None:
+            # copy-on-write: if any lane's write page this tick is still
+            # shared, fork it (device block copies the server must apply
+            # BEFORE this decode) — then snapshot the remapped table
+            ps = self.allocator.page_size
+            for lane in lanes:
+                wpos = min(int(self.pos[lane]), self.cache_len - 1)
+                cp = self.allocator.ensure_private(self.live[lane].rid,
+                                                   wpos // ps)
+                if cp is not None:
+                    copies.append(cp)
+            ptab, _ = self._page_table_for(
+                [(ln, self.live[ln]) for ln in lanes])
+        seeds = None
+        if self.sample_seed is not None:
+            seeds = np.zeros((m, B), np.int32)
+            for lane in lanes:
+                mi, bi = self.slots.unravel(lane)
+                seeds[mi, bi] = ((self.sample_seed * 1000003
+                                  + self.live[lane].rid * 8191
+                                  + int(self.pos[lane])) & 0x7FFFFFFF)
         return DecodePlan(self.cur_tok.reshape(m, B).copy(),
-                          self.pos.reshape(m, B).copy(), active, lanes)
+                          self.pos.reshape(m, B).copy(), active, lanes,
+                          ptab, copies, seeds)
 
     def note_decode(self, plan: DecodePlan, ids: np.ndarray,
                     tick: int) -> List[Request]:

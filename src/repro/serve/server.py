@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.rpc import JobManagerClient
+from repro.kernels.paged_attention import paged_tile_work
 from repro.configs.base import DistConfig, ModelConfig
 from repro.dynamics.config import DynamicsConfig
 from repro.launch.engine import ElasticEngine
@@ -70,11 +71,23 @@ class ElasticServer:
                  eos_id: Optional[int] = None, defrag_every: int = 0,
                  seed: int = 0, measure_stage_times: bool = False,
                  initial_workers: Optional[Sequence[int]] = None,
-                 in_step_timing: bool = False, tracer=None, metrics=None):
+                 in_step_timing: bool = False, tracer=None, metrics=None,
+                 paged=None, temperature: float = 0.0,
+                 micro_variants: bool = True):
         assert shapes.cache_len >= shapes.seq, "cache must hold the prompt"
+        # paged: a serve.kv.PagedKVConfig — KV lives in a block pool indexed
+        # by per-lane page tables instead of per-lane contiguous lines.
+        # temperature > 0 samples per lane (0 = argmax, bit-exact).
+        # micro_variants: decode with the per-live-micro-count variant so
+        # drained trailing microbatch rows skip their pipeline ticks.
+        self.paged = paged
+        self.temperature = float(temperature)
+        self.micro_variants = micro_variants
+        self.seed = seed
         self.engine = ElasticEngine(cfg, dcfg, dyncfg, shapes, data=data,
                                     job_manager=job_manager,
-                                    in_step_timing=in_step_timing)
+                                    in_step_timing=in_step_timing,
+                                    paged=paged, temperature=temperature)
         if initial_workers is not None:
             # multi-tenant start: serve on exactly the workers the cluster
             # scheduler granted (arbitrary global ids, possibly fewer than
@@ -98,6 +111,11 @@ class ElasticServer:
         self.tracer = tracer     # obs.trace.Tracer (None = tracing off)
         self.metrics = metrics   # obs.metrics.MetricsRegistry (optional)
         self._sched: Optional[Scheduler] = None
+        # paged prefill scratch: a dense stage-sharded cache prefill writes
+        # whole lanes into before pack_pages scatters the admitted lanes'
+        # prompt pages into the pool; rebuilt per stage count, disposable
+        self._scratch = None
+        self._scratch_stages = -1
 
     def close(self) -> None:
         self.engine.close()
@@ -172,10 +190,20 @@ class ElasticServer:
         ``autoscale`` lets the attached scaler drive them from load;
         ``injector`` (faults.ChaosInjector) fires scheduled faults at the
         tick safe points — a crashed worker goes through ``crash_worker``."""
+        alloc = None
+        if self.paged is not None:
+            from repro.serve.kv import PageAllocator
+            alloc = PageAllocator(
+                self.paged.pool_pages, self.paged.page_size,
+                max_pages_per_req=(self.shapes.cache_len
+                                   // self.paged.page_size),
+                prefix_cache=self.paged.prefix_cache)
         sched = Scheduler(self.shapes.num_micro, self.shapes.mb_global,
                           self.shapes.seq, self.shapes.cache_len,
                           RequestQueue(requests), eos_id=self.eos_id,
-                          defrag_every=self.defrag_every)
+                          defrag_every=self.defrag_every, allocator=alloc,
+                          sample_seed=(self.seed if self.temperature > 0
+                                       else None))
         self._sched = sched
         if injector is not None:
             injector.bind(crash_worker=self.crash_worker)
@@ -188,6 +216,10 @@ class ElasticServer:
         stages_hist: List[int] = []
         depth_hist: List[int] = []
         occ_hist: List[float] = []
+        page_occ_hist: List[float] = []
+        peak_lanes = 0
+        peak_pages = 0
+        tiles_live = tiles_total = 0
         moe_drops = []   # device scalars; synced once after the trace drains
         t_run = time.perf_counter()
         while tick < max_ticks and not sched.done:
@@ -202,25 +234,55 @@ class ElasticServer:
                 self.tracer.instant("serve.admit", cat="serve", tick=tick,
                                     lanes=len(adm.full_len_lanes))
             if adm is not None:
-                ids, new_cache = self.engine.prefill(
-                    self.state, {"tokens": jnp.asarray(adm.prefill_tokens)})
-                self.state.cache = _merge_lanes(self.state.cache, new_cache,
-                                                adm.admit_mask)
+                batch = {"tokens": jnp.asarray(adm.prefill_tokens)}
+                if alloc is not None:
+                    # prefill into the disposable dense scratch, then
+                    # scatter the admitted lanes' prompt pages into the
+                    # pool through the admission page table
+                    if self._scratch_stages != self.state.stages:
+                        self._scratch = self.engine.make_dense_scratch(
+                            self.state.stages)
+                        self._scratch_stages = self.state.stages
+                    ids, self._scratch = self.engine.prefill(
+                        self.state, batch, cache=self._scratch)
+                    self.engine.pack_pages(self.state, self._scratch,
+                                           adm.page_table, adm.pack_mask)
+                else:
+                    ids, new_cache = self.engine.prefill(self.state, batch)
+                    self.state.cache = _merge_lanes(self.state.cache,
+                                                    new_cache,
+                                                    adm.admit_mask)
                 sched.note_prefill(adm, np.asarray(ids), tick)
                 emitted += len(adm.full_len_lanes)
                 if self.engine.last_moe_drop is not None:
                     moe_drops.append(self.engine.last_moe_drop)
             dec = sched.plan_decode()
             if dec is not None:
+                for src, dst in dec.copies:      # CoW forks land on device
+                    self.engine.copy_block(self.state, src, dst)
+                mlive = ((max(dec.lanes) // B) + 1
+                         if self.micro_variants else None)
                 ids, _lp = self.engine.decode(self.state,
                                               jnp.asarray(dec.tokens),
-                                              jnp.asarray(dec.pos))
+                                              jnp.asarray(dec.pos),
+                                              page_table=dec.page_table,
+                                              seeds=dec.seeds,
+                                              live_micros=mlive)
                 sched.note_decode(dec, np.asarray(ids), tick)
                 emitted += len(dec.lanes)
+                peak_lanes = max(peak_lanes, len(dec.lanes))
+                if alloc is not None:
+                    lv, tt = paged_tile_work(
+                        dec.page_table,
+                        dec.pos.reshape(-1) + 1, alloc.page_size)
+                    tiles_live += lv
+                    tiles_total += tt
                 if self.engine.last_moe_drop is not None:
                     moe_drops.append(self.engine.last_moe_drop)
             perm = sched.maybe_defrag(tick)
-            if perm is not None:
+            if perm is not None and alloc is None:
+                # dense lines move with their lanes; the paged pool never
+                # moves — lanes only carry table rows, rebuilt every tick
                 self.state.cache = _permute_lanes(self.state.cache, perm,
                                                   m, B)
             wall = time.perf_counter() - t0
@@ -232,6 +294,18 @@ class ElasticServer:
             stages_hist.append(self.state.stages)
             depth_hist.append(sched.queue_depth)
             occ_hist.append(sched.occupancy)
+            if alloc is not None:
+                page_occ_hist.append(alloc.occupancy)
+                peak_pages = max(peak_pages, alloc.live_pages)
+                if self.metrics is not None:
+                    self.metrics.set("dynmo_kv_page_occupancy",
+                                     alloc.occupancy,
+                                     help="KV pool occupancy fraction")
+                    self.metrics.set("dynmo_kv_pages_live",
+                                     alloc.live_pages,
+                                     help="KV pool pages in use")
+                    self.metrics.set("dynmo_kv_pages_free", alloc.num_free,
+                                     help="KV pool pages free")
             if self.metrics is not None:
                 self.metrics.inc("dynmo_serve_ticks_total",
                                  help="decode ticks executed")
@@ -255,7 +329,8 @@ class ElasticServer:
                 d = self.scaler.observe_load(
                     tick, self.state.stages, queue_depth=sched.queue_depth,
                     occupancy=sched.occupancy,
-                    latency_s=_pct(recent, 95) if recent else 0.0)
+                    latency_s=_pct(recent, 95) if recent else 0.0,
+                    page_occupancy=sched.page_occupancy)
                 if d.action == "shrink":
                     self.resize(max(self.min_stages,
                                     self.state.stages - d.workers),
@@ -323,5 +398,22 @@ class ElasticServer:
             "moe_dropped_mean": (float(np.mean([float(d)
                                                 for d in moe_drops]))
                                  if moe_drops else None),
+            # paged-KV telemetry (zeros/empty in dense mode);
+            # peak_live_lanes is tracked either way — it is the
+            # concurrency headline the paged-vs-dense bench compares
+            "peak_live_lanes": peak_lanes,
+            "page_occupancy_history": page_occ_hist,
+            "kv_page_size": alloc.page_size if alloc is not None else 0,
+            "kv_pages_total": alloc.pool_pages if alloc is not None else 0,
+            "peak_live_pages": peak_pages,
+            "prefix_hits": alloc.prefix_hits if alloc is not None else 0,
+            "cow_forks": alloc.cow_forks if alloc is not None else 0,
+            "page_tile_live": tiles_live,
+            "page_tile_total": tiles_total,
         }
+        if alloc is not None and self.metrics is not None:
+            self.metrics.inc("dynmo_prefix_hits_total", alloc.prefix_hits,
+                             help="prompt pages shared via prefix cache")
+            self.metrics.inc("dynmo_cow_forks_total", alloc.cow_forks,
+                             help="copy-on-write page forks")
         return report

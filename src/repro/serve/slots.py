@@ -1,10 +1,16 @@
-"""KV-cache slot (lane) manager.
+"""KV-cache slot (lane) manager — a thin shim over lane bookkeeping and,
+when the paged KV subsystem is on, the block ``PageAllocator``.
 
-The pipeline's serving shapes are fixed — ``[num_micro, mb_global]`` lanes,
-each owning one KV-cache line — so continuous batching is lane bookkeeping:
-``alloc`` binds a request to the lowest free lane (determinism), ``free``
-vacates it the tick the request finishes or early-exits, and ``defrag``
-compacts the active lanes into the lane-index prefix.
+The pipeline's serving shapes are fixed — ``[num_micro, mb_global]`` lanes —
+but what a lane *owns* depends on the memory model: dense mode binds a lane
+to one contiguous KV line; paged mode binds it to a request whose KV lives
+in pool blocks managed by ``repro.serve.kv.PageAllocator`` (this manager
+then only tracks lane identity, and ``free`` forwards the request's pages
+back to the allocator — per-block free at EOS).  Either way continuous
+batching is lane bookkeeping: ``alloc`` binds a request to the lowest free
+lane (determinism), ``free`` vacates it the tick the request finishes or
+early-exits, and ``defrag`` compacts the active lanes into the lane-index
+prefix.
 
 Defrag keeps per-microbatch occupancy front-loaded: as early exits punch
 holes across microbatches, compaction moves the stragglers together so
@@ -24,12 +30,15 @@ import numpy as np
 class SlotManager:
     """Tracks lane ownership over the flat lane space [0, m*B)."""
 
-    def __init__(self, num_micro: int, mb: int):
+    def __init__(self, num_micro: int, mb: int, allocator=None):
         self.num_micro = num_micro
         self.mb = mb
         self.n_lanes = num_micro * mb
         self.owner = np.full(self.n_lanes, -1, np.int64)   # rid or -1
         self._lane_of: Dict[int, int] = {}                 # rid -> lane
+        # paged mode: the PageAllocator owning this lane space's KV blocks;
+        # freeing a lane releases its request's pages
+        self.allocator = allocator
 
     # -- queries -----------------------------------------------------------
     @property
@@ -65,7 +74,8 @@ class SlotManager:
         return lane
 
     def free(self, lane: int) -> int:
-        """Vacate a lane; returns the rid that held it."""
+        """Vacate a lane; returns the rid that held it.  In paged mode the
+        request's pages go back to the allocator in the same transition."""
         if not 0 <= lane < self.n_lanes:
             raise ValueError(f"lane {lane} out of range [0, {self.n_lanes})")
         rid = int(self.owner[lane])
@@ -73,6 +83,8 @@ class SlotManager:
             raise ValueError(f"lane {lane} is already free")
         self.owner[lane] = -1
         del self._lane_of[rid]
+        if self.allocator is not None:
+            self.allocator.free(rid)
         return rid
 
     def defrag(self) -> Optional[np.ndarray]:

@@ -27,10 +27,11 @@ from repro.api.cli import (SERVE_ALIASES, TRAIN_ALIASES, TRAIN_CLI_DEFAULTS,
 from repro.api.specs import SCHEMA_VERSION
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
-GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v4.json")
+GOLDEN = os.path.join(GOLDEN_DIR, "runspec_default_v5.json")
 GOLDEN_V1 = os.path.join(GOLDEN_DIR, "runspec_default_v1.json")
 GOLDEN_V2 = os.path.join(GOLDEN_DIR, "runspec_default_v2.json")
 GOLDEN_V3 = os.path.join(GOLDEN_DIR, "runspec_default_v3.json")
+GOLDEN_V4 = os.path.join(GOLDEN_DIR, "runspec_default_v4.json")
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +203,7 @@ def test_golden_default_spec():
     fails you changed the spec schema: bump SCHEMA_VERSION if the change
     is breaking, add an upgrader for the old version, then regenerate the
     fixture with ``PYTHONPATH=src python -c "from repro.api import RunSpec;
-    RunSpec().save('tests/golden/runspec_default_v4.json')"`` (keep the
+    RunSpec().save('tests/golden/runspec_default_v5.json')"`` (keep the
     old-version goldens — they pin the upgraders' inputs forever)."""
     with open(GOLDEN) as f:
         golden = json.load(f)
@@ -271,6 +272,50 @@ def test_v3_config_loads_via_upgrader():
                                          "obs.metrics_port": "9109"})
     assert on.obs.trace and on.obs.in_step_timing
     assert on.obs.metrics_port == 9109
+
+
+def test_v4_config_loads_via_upgrader():
+    """A v4 config (the frozen v4 golden) still loads: the v4->v5 upgrader
+    stamps the paged-KV serving defaults (serve.kv_page_size/kv_pool_pages/
+    prefix_cache/temperature) and the result equals the default v5 spec —
+    a v4 run stays dense + argmax, i.e. bit-exact."""
+    with open(GOLDEN_V4) as f:
+        v4 = json.load(f)
+    assert v4["schema_version"] == 4
+    assert "kv_page_size" not in v4["serve"]
+    spec = RunSpec.from_dict(v4)
+    assert spec == RunSpec()
+    assert spec.serve.kv_page_size == 0 and not spec.serve.prefix_cache
+    assert spec.serve.temperature == 0.0
+    # a populated v4 config keeps its values through the upgrade
+    v4b = dict(v4, steps=9, serve=dict(v4["serve"], gen=16))
+    up = RunSpec.from_dict(v4b)
+    assert up.steps == 9 and up.serve.gen == 16
+    assert up.to_dict()["schema_version"] == SCHEMA_VERSION
+    # the new flags resolve through the dotted-override grammar
+    on = RunSpec.from_dict(v4b).override({"serve.kv_page_size": "8",
+                                          "serve.prefix_cache": "true",
+                                          "serve.temperature": "0.7"})
+    assert on.serve.kv_page_size == 8 and on.serve.prefix_cache
+    assert on.serve.temperature == 0.7
+
+
+def test_paged_serve_spec_validation():
+    """Paged-KV cross-field constraints fail at construction with the
+    dotted path in the message."""
+    base = RunSpec()
+    # page size must tile the cache line (prompt_len + gen = 40 default)
+    with pytest.raises(SpecError, match="serve.kv_page_size"):
+        base.override({"serve.kv_page_size": 7})
+    ok = base.override({"serve.kv_page_size": 8})
+    assert ok.serve.kv_page_size == 8
+    # prefix cache / pool sizing require the paged subsystem
+    with pytest.raises(SpecError, match="serve.prefix_cache"):
+        base.override({"serve.prefix_cache": True})
+    with pytest.raises(SpecError, match="serve.kv_pool_pages"):
+        base.override({"serve.kv_pool_pages": 64})
+    with pytest.raises(SpecError, match="serve.temperature"):
+        base.override({"serve.temperature": -0.5})
 
 
 def test_chaos_flags_resolve_faults_spec():

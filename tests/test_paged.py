@@ -1,0 +1,429 @@
+"""Paged KV memory subsystem tests (DESIGN.md §16).
+
+Fast tests exercise the host-side ``PageAllocator`` (free-list
+conservation, refcounted prefix sharing, copy-on-write forking, the
+admission gate's CoW reservation) and the Pallas paged-decode kernel
+against its gather-based reference.  Slow tests run the real pipeline in
+subprocesses: paged serving must be token-identical to the dense oracle
+on a bursty staggered trace (including prefix-sharing lanes), the paged
+pool must ride a live 4->2->4 resize bit-exactly, per-lane temperature
+sampling must be deterministic, and the per-micro-count decode variants
+must be invisible to tokens.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: property-style random walk
+# ---------------------------------------------------------------------------
+def test_page_allocator_random_walk():
+    """Random admit/free/fork walk: after every transition the allocator's
+    own invariant check passes — no double-mapped block without refcount,
+    free + live == pool (conservation), prefix index alive."""
+    from repro.serve.kv import PageAllocator
+
+    rng = np.random.RandomState(0)
+    al = PageAllocator(24, 4, max_pages_per_req=6, prefix_cache=True)
+    live = {}
+    next_rid = 0
+    # a small prompt universe so random draws actually collide on prefixes
+    prompts = [rng.randint(0, 9, n).astype(np.int32)
+               for n in (4, 4, 8, 8, 11, 13)]
+    for step in range(600):
+        op = rng.rand()
+        if op < 0.5:
+            p = prompts[rng.randint(len(prompts))]
+            gen = int(rng.randint(1, 8))
+            if al.can_admit(p, gen):
+                blocks = al.admit(next_rid, p, gen)
+                assert len(blocks) == al.pages_needed(len(p), gen)
+                live[next_rid] = len(blocks)
+                next_rid += 1
+        elif op < 0.85 and live:
+            rid = list(live)[rng.randint(len(live))]
+            del live[rid]
+            al.free(rid)
+        elif live:
+            rid = list(live)[rng.randint(len(live))]
+            j = rng.randint(live[rid])
+            # arbitrary (non-admission-reserved) forks may legitimately
+            # find the free list empty — that must be a loud refusal, not
+            # a corrupted table
+            if al.num_free == 0 and al._refs[al.pages_of(rid)[j]] > 1:
+                with pytest.raises(RuntimeError):
+                    al.ensure_private(rid, j)
+            else:
+                cp = al.ensure_private(rid, j)
+                if cp is not None:
+                    src, dst = cp
+                    assert al.pages_of(rid)[j] == dst != src
+        al.check()
+        assert al.num_free + al.live_pages == al.pool_pages
+    for rid in list(live):
+        al.free(rid)
+    al.check()
+    assert al.num_free == al.pool_pages        # nothing leaked
+
+
+def test_page_allocator_prefix_sharing_and_cow():
+    """Two requests with one common full prompt page share the block
+    (refcount 2); a CoW fork repoints the writer only; frees return blocks
+    to the free list exactly once."""
+    from repro.serve.kv import PageAllocator
+
+    al = PageAllocator(8, 4, max_pages_per_req=4, prefix_cache=True)
+    prompt = np.arange(8, dtype=np.int32)
+    a = al.admit(1, prompt, 2)        # pages 0,1 prompt (+pos 8) -> 3 blocks
+    assert al.prefix_hits == 0
+    b = al.admit(2, prompt, 3)
+    # both full prompt pages shared
+    assert al.prefix_hits == 2
+    assert a[0] == b[0] and a[1] == b[1] and a[2] != b[2]
+    al.check()
+    before = al.num_free
+    cp = al.ensure_private(2, 1)
+    assert cp is not None and cp[0] == a[1]
+    assert al.pages_of(2)[1] != a[1]           # writer repointed
+    assert al.pages_of(1)[1] == a[1]           # reader untouched
+    assert al.num_free == before - 1 and al.cow_forks == 1
+    al.check()
+    # a third admission re-shares page 0 but sees the forked page 1 as
+    # still registered under rid 1's prefix
+    c = al.admit(3, prompt, 1)
+    assert c[0] == a[0] and c[1] == a[1]
+    al.check()
+    al.free(1)
+    al.free(2)
+    al.free(3)
+    al.check()
+    assert al.num_free == al.pool_pages
+
+
+def test_page_allocator_admission_gate_reserves_cow_fork():
+    """Regression: the admission gate must count the bootstrap-page fork.
+    When ``plen % page_size == 0`` the write position ``plen-1`` lands in
+    a SHARED full prompt page, so ``blocks_required`` is hits-discounted
+    pages PLUS one fork block — otherwise a later admission could drain
+    the free list and the fork would deadlock mid-flight."""
+    from repro.serve.kv import PageAllocator
+
+    al = PageAllocator(5, 4, max_pages_per_req=4, prefix_cache=True)
+    prompt = np.arange(8, dtype=np.int32)
+    al.admit(1, prompt, 2)                     # 3 blocks, 2 free left
+    # second identical request: 3 needed - 2 hits + 1 fork = 2 fresh
+    assert al.blocks_required(prompt, 2) == 2
+    assert al.can_admit(prompt, 2)
+    al.admit(2, prompt, 2)
+    assert al.ensure_private(2, 1) is not None   # the reserved fork block
+    al.check()
+    assert al.num_free == 0
+    # a third cannot be admitted — and must be told so by the gate, not by
+    # a mid-flight empty free list
+    assert not al.can_admit(prompt, 2)
+    with pytest.raises(RuntimeError):
+        al.admit(3, prompt, 2)
+
+
+def test_page_allocator_guards():
+    from repro.serve.kv import PageAllocator, PagedKVConfig
+
+    with pytest.raises(ValueError):
+        PagedKVConfig(page_size=0, pool_pages=4)
+    al = PageAllocator(4, 4, max_pages_per_req=2)
+    with pytest.raises(ValueError):            # footprint > table capacity
+        al.can_admit(np.zeros(8, np.int32), 8)
+    al.admit(1, np.zeros(4, np.int32), 1)
+    with pytest.raises(ValueError):            # double admission
+        al.admit(1, np.zeros(4, np.int32), 1)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernel vs reference (single device, interpret mode)
+# ---------------------------------------------------------------------------
+def test_paged_attention_kernel_matches_ref():
+    """The Pallas paged-decode kernel (online softmax over gathered KV
+    blocks, count-gated on live pages) matches the gather+dense reference
+    to fp32 tolerance, with unmapped pages and per-lane lengths."""
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_attention_ref)
+
+    rng = np.random.RandomState(3)
+    b, page, J, pool, n_q, n_kv, hd = 4, 4, 4, 12, 4, 2, 16
+    kp = jnp.asarray(rng.randn(pool + 1, page, n_kv, hd), jnp.float32)
+    vp = jnp.asarray(rng.randn(pool + 1, page, n_kv, hd), jnp.float32)
+    q = jnp.asarray(rng.randn(b, 1, n_q, hd), jnp.float32)
+    pt = np.full((b, J), -1, np.int32)
+    blocks = rng.permutation(pool)
+    clen = np.array([4, 7, 13, 16], np.int32)
+    k = 0
+    for i in range(b):
+        for j in range(-(-int(clen[i]) // page)):
+            pt[i, j] = blocks[k]
+            k += 1
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(pt), jnp.asarray(clen))
+    out = paged_attention(q, kp, vp, jnp.asarray(pt), jnp.asarray(clen),
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_ref_bit_equal_to_dense_oracle():
+    """Gathering a lane's pages into a contiguous row and running the
+    UNMODIFIED dense decode_attention is bit-equal to the dense cache path
+    — the foundation of the paged==dense token-parity guarantee."""
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import paged_attention_ref
+    from repro.models.layers import decode_attention
+
+    rng = np.random.RandomState(11)
+    b, page, J, n_q, n_kv, hd = 2, 4, 3, 4, 2, 8
+    dense_k = jnp.asarray(rng.randn(b, J * page, n_kv, hd), jnp.float32)
+    dense_v = jnp.asarray(rng.randn(b, J * page, n_kv, hd), jnp.float32)
+    q = jnp.asarray(rng.randn(b, 1, n_q, hd), jnp.float32)
+    clen = jnp.asarray([5, 11], jnp.int32)
+    # scatter the dense rows into a shuffled pool; table maps them back
+    perm = rng.permutation(b * J)
+    pool = np.zeros((b * J + 1, page, n_kv, hd), np.float32)
+    pt = np.zeros((b, J), np.int32)
+    for i in range(b):
+        for j in range(J):
+            blk = int(perm[i * J + j])
+            pool[blk] = np.asarray(dense_k[i, j * page:(j + 1) * page])
+            pt[i, j] = blk
+    kp = jnp.asarray(pool)
+    poolv = np.zeros_like(pool)
+    for i in range(b):
+        for j in range(J):
+            poolv[pt[i, j]] = np.asarray(dense_v[i, j * page:(j + 1) * page])
+    vp = jnp.asarray(poolv)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(pt), clen)
+    dense = decode_attention(q, dense_k, dense_v, clen)
+    assert np.array_equal(np.asarray(ref), np.asarray(dense))
+
+
+def test_paged_tile_work_counts_live_pages():
+    from repro.kernels.paged_attention import paged_tile_work
+
+    pt = np.array([[0, 1, -1, -1], [2, 3, 4, 5]], np.int32)
+    clen = np.array([5, 16], np.int32)
+    live, total = paged_tile_work(pt, clen, 4)
+    # lane 0: pages 0,1 cover positions < 5 (page 1 partially); lane 1: all
+    assert (live, total) == (2 + 4, 8)
+    # lanes past their cache_len cost nothing
+    live0, _ = paged_tile_work(pt, np.zeros(2, np.int32), 4)
+    assert live0 == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: paged serving == dense oracle (token identity)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_paged_serving_token_identical_to_dense():
+    """Acceptance: on a fixed-seed bursty trace with staggered admissions,
+    mixed prompt lengths, AND prefix-sharing lanes (identical prompts),
+    the paged server (block pool + page tables + CoW prefix cache) emits
+    token-for-token what the dense per-lane cache server emits.  The pool
+    is sized to the dense equivalent so the admission schedule matches."""
+    out = run_in_subprocess("""
+import copy
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.kv import PagedKVConfig
+from repro.serve.requests import Request
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=6, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                  param_dtype="float32")
+rng = np.random.RandomState(5)
+shared = rng.randint(0, 256, 8).astype(np.int32)   # two full prompt pages
+plens  = [8, 8, 5, 8, 3, 6, 8, 7]
+gens   = [4, 6, 5, 2, 6, 3, 5, 4]
+arrive = [0, 0, 1, 2, 3, 5, 6, 8]
+base = []
+for i in range(8):
+    p = (shared.copy() if plens[i] == 8
+         else rng.randint(0, 256, plens[i]).astype(np.int32))
+    base.append(Request(rid=i, arrival=arrive[i], prompt=p, gen=gens[i]))
+
+def serve(paged):
+    shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8, cache_len=16)
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, seed=0,
+                        defrag_every=2, paged=paged)
+    rep = srv.serve(copy.deepcopy(base))
+    srv.close()
+    return rep
+
+dense = serve(None)
+paged = serve(PagedKVConfig(page_size=4, pool_pages=16, prefix_cache=True))
+td = {c["rid"]: c["tokens"] for c in dense["completions"]}
+tp = {c["rid"]: c["tokens"] for c in paged["completions"]}
+assert td == tp, (td, tp)
+assert len(td) == 8
+assert paged["prefix_hits"] > 0, "identical prompts must share pages"
+assert paged["kv_pages_total"] == 16
+assert 0 < paged["peak_live_pages"] <= 16
+# count-gating telemetry: only live pages cost tile work
+assert 0 < paged["page_tile_live"] < paged["page_tile_total"]
+print("PASS")
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_paged_pool_rides_elastic_resize_bit_exact():
+    """Acceptance: the paged pool + page tables survive a live 4->2->4
+    resize — tokens identical to the fixed-mesh paged run, and the pool
+    tensor round-trips the shrink/grow cycle bit-exactly."""
+    out = run_in_subprocess("""
+import copy
+import jax
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.kv import PagedKVConfig
+from repro.serve.requests import Request
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=6, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+dcfg = DistConfig(num_stages=4, slot_slack=2, remat="none",
+                  param_dtype="float32")
+rng = np.random.RandomState(9)
+base = [Request(rid=i, arrival=[0, 0, 1, 3, 4, 6][i],
+                prompt=rng.randint(0, 256, [8, 6, 8, 4, 7, 8][i])
+                .astype(np.int32),
+                gen=[6, 4, 5, 6, 3, 5][i]) for i in range(6)]
+paged = PagedKVConfig(page_size=4, pool_pages=16, prefix_cache=False)
+
+def serve(resize_at):
+    shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8, cache_len=16)
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, seed=0,
+                        paged=paged)
+    rep = srv.serve(copy.deepcopy(base), resize_at=resize_at)
+    toks = {c["rid"]: c["tokens"] for c in rep["completions"]}
+    return srv, rep, toks
+
+srv_f, rep_f, fixed = serve(None)
+srv_f.close()
+srv, rep, elastic = serve({4: 2, 9: 4})
+kinds = [r["kind"] for r in rep["resizes"]]
+assert kinds == ["shrink", "grow"], kinds
+assert fixed == elastic, (fixed, elastic)
+
+# pool bit-exactness through one more shrink/grow cycle on the live state
+before = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                      srv.state.cache)
+st = srv.engine.shrink(srv.state, 2, step=100)
+st = srv.engine.grow(st, 2, step=101)
+after = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), st.cache)
+assert set(before) == set(after)
+for key in before:
+    assert before[key].shape == after[key].shape, key
+    assert np.array_equal(before[key], after[key]), key
+srv.close()
+print("PASS")
+""", devices=4, timeout=900)
+    assert "PASS" in out
+
+
+# ---------------------------------------------------------------------------
+# Satellites: temperature sampling + per-micro-count decode variants
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_temperature_sampling_deterministic_and_distinct():
+    """temperature>0 samples per lane from a (seed, rid, pos)-keyed PRNG:
+    two runs are token-identical (deterministic), and a hot temperature
+    diverges from the argmax stream; temperature=0 is the argmax graph
+    (covered by every other serving test, where it is the default)."""
+    out = run_in_subprocess("""
+import copy
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.requests import Request
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=4, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+dcfg = DistConfig(num_stages=2, slot_slack=2, remat="none",
+                  param_dtype="float32")
+rng = np.random.RandomState(2)
+base = [Request(rid=i, arrival=0,
+                prompt=rng.randint(0, 256, [8, 5, 7, 8][i])
+                .astype(np.int32),
+                gen=[6, 5, 6, 4][i]) for i in range(4)]
+
+def serve(temperature):
+    shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8, cache_len=16)
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, seed=0,
+                        temperature=temperature)
+    rep = srv.serve(copy.deepcopy(base))
+    srv.close()
+    return {c["rid"]: c["tokens"] for c in rep["completions"]}
+
+argmax = serve(0.0)
+hot1 = serve(5.0)
+hot2 = serve(5.0)
+assert hot1 == hot2, "sampling must be deterministic per (seed, rid, pos)"
+assert hot1 != argmax, "a hot temperature should diverge from argmax"
+assert sorted(hot1) == sorted(argmax)        # same request set completes
+print("PASS")
+""", devices=2, timeout=900)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_micro_variant_decode_is_token_invisible():
+    """Per-micro-count decode variants (carry-over fix): with defrag
+    compacting live lanes into the lane prefix, trailing all-empty
+    microbatch rows are served by a smaller-micro variant — tokens must be
+    identical to always running the full-micro pipeline, and the smaller
+    variant must actually have been built."""
+    out = run_in_subprocess("""
+import copy
+import numpy as np
+from repro.configs import DistConfig, get_config, reduced_config
+from repro.dynamics.config import DynamicsConfig
+from repro.pipeline.pipeline import PipelineShapes
+from repro.serve import ElasticServer
+from repro.serve.requests import Request
+
+cfg = reduced_config(get_config("smollm-360m"), num_layers=4, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+dcfg = DistConfig(num_stages=2, slot_slack=2, remat="none",
+                  param_dtype="float32")
+rng = np.random.RandomState(4)
+# one long request + short ones: the tail of the trace runs with a single
+# live lane, which defrag keeps in microbatch 0
+base = [Request(rid=i, arrival=0,
+                prompt=rng.randint(0, 256, [8, 6, 5, 7][i])
+                .astype(np.int32),
+                gen=[8, 2, 2, 3][i]) for i in range(4)]
+
+def serve(micro_variants):
+    shapes = PipelineShapes(num_micro=2, mb_global=2, seq=8, cache_len=16)
+    srv = ElasticServer(cfg, dcfg, DynamicsConfig(), shapes, seed=0,
+                        defrag_every=1, micro_variants=micro_variants)
+    rep = srv.serve(copy.deepcopy(base))
+    variants = sorted(srv.engine.world(srv.state.stages).decode)
+    srv.close()
+    return {c["rid"]: c["tokens"] for c in rep["completions"]}, variants
+
+full, fv = serve(False)
+var, vv = serve(True)
+assert full == var, (full, var)
+assert fv == [2], fv                   # micro_variants off: full micro only
+assert 1 in vv, vv                     # the drained-tail variant was built
+print("PASS")
+""", devices=2, timeout=900)
+    assert "PASS" in out
